@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference paths on CPU
+(interpret-mode Pallas timing is not meaningful) plus derived bytes/FLOPs
+per call for the roofline narrative."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.models.mamba2 import ssd_chunked
+
+
+def _timeit(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(0)
+    # fedavg: C=8 clients x 4M params
+    C, N = 8, 4_194_304  # block-aligned 4M
+    x = jnp.asarray(rng.normal(size=(C, N)), jnp.float32)
+    w = jnp.full((C,), 1 / C, jnp.float32)
+    m = jnp.ones((C,), jnp.float32)
+    f = jax.jit(ref.fedavg_masked_mean)
+    us = _timeit(lambda a, b, c: (f(a, b, c),), x, w, m)
+    out.append(("kernel/fedavg_8x4M", us, f"bytes={C*N*4/1e6:.0f}MB"))
+    # quant roundtrip
+    v = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+    g = jax.jit(lambda v: ref.dequantize_blocks(*ref.quantize_blocks(v, 1024), 1024))
+    us = _timeit(lambda a: (g(a),), v)
+    out.append(("kernel/quant_roundtrip_4M", us, f"compression=4x"))
+    # attention: 1x8 heads x 1k x 64
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)), jnp.bfloat16)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v, causal=True))
+    us = _timeit(lambda a, b, c: (fa(a, b, c),), q, k, k)
+    flops = 4 * 1 * 8 * 1024 * 1024 * 64 / 2
+    out.append(("kernel/attention_1k", us, f"gflops_per_call={flops/1e9:.2f}"))
+    # ssd: B1 S1024 H8 P64 N64
+    xdt = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)) * 0.1, jnp.float32)
+    dA = -jnp.abs(jnp.asarray(rng.normal(size=(1, 1024, 8)) * 0.1, jnp.float32))
+    Bm = jnp.asarray(rng.normal(size=(1, 1024, 64)), jnp.float32)
+    ss = jax.jit(lambda a, b, c, d: ssd_chunked(a, b, c, d, 128))
+    us = _timeit(lambda a, b, c, d: ss(a, b, c, d), xdt, dA, Bm, Bm)
+    out.append(("kernel/ssd_1k", us, "chunk=128"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, extra in rows():
+        print(f"{name},{val:.1f},{extra}")

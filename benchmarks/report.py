@@ -1,0 +1,89 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun artifacts."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+ARCH_ORDER = [
+    "granite-3-8b", "qwen3-1.7b", "hubert-xlarge", "grok-1-314b",
+    "granite-moe-1b-a400m", "gemma3-27b", "llava-next-34b", "minitron-8b",
+    "mamba2-1.3b", "zamba2-2.7b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tag: str = ""):
+    recs = {}
+    for f in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(f.read_text())
+        parts = f.stem.split("--")
+        if tag:
+            if len(parts) != 4 or parts[3] != tag:
+                continue
+        elif len(parts) != 3:
+            continue
+        recs[(parts[0], parts[1], parts[2])] = d
+    return recs
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x >= 0.01:
+        return f"{x:.2f}"
+    return f"{x:.1e}"
+
+
+def roofline_table(mesh: str, tag: str = "") -> str:
+    recs = load(tag)
+    lines = [
+        "| arch | shape | kind | compute s | memory s | collective s | dominant | mem/dev GiB | useful ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = recs.get((a, s, mesh))
+            if d is None:
+                continue
+            if "skipped" in d:
+                lines.append(f"| {a} | {s} | — | — | — | — | *skipped* | — | — |")
+                continue
+            r = d["roofline"]
+            mem = d["memory"]["total_per_device"] / 2**30
+            lines.append(
+                f"| {a} | {s} | {d['kind']} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** | {mem:.2f} | {r['useful_ratio']:.2f} |"
+            )
+    return "\n".join(lines)
+
+
+def dryrun_table(mesh: str) -> str:
+    recs = load()
+    lines = [
+        "| arch | shape | compile s | args GiB | temp GiB | HLO GFLOPs/dev | collective bytes/dev (by op) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = recs.get((a, s, mesh))
+            if d is None or "skipped" in d:
+                continue
+            h = d["hlo_costs"]
+            colls = ", ".join(
+                f"{k}:{v/2**20:.0f}MiB" for k, v in sorted(h["collective_bytes"].items(), key=lambda kv: -kv[1])
+            ) or "none"
+            lines.append(
+                f"| {a} | {s} | {d['compile_s']} | {d['memory']['argument_bytes']/2**30:.2f} "
+                f"| {d['memory']['temp_bytes']/2**30:.2f} | {h['flops_per_device']/1e9:.1f} | {colls} |"
+            )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+
+    kind = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "singlepod"
+    tag = sys.argv[3] if len(sys.argv) > 3 else ""
+    print((roofline_table if kind == "roofline" else dryrun_table)(mesh, *((tag,) if kind == "roofline" else ())))

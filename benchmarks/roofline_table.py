@@ -1,0 +1,53 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and emits one CSV row per (arch x shape x
+mesh): the three roofline terms, dominant bottleneck, memory/device, and the
+MODEL_FLOPS/HLO_FLOPs useful ratio.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load(tag: str | None = None):
+    recs = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        d = json.loads(f.read_text())
+        name = d.get("name", f.stem)
+        has_tag = len(name.split("--")) > 3
+        if (tag is None) == has_tag:
+            continue
+        if tag and not name.endswith("--" + tag):
+            continue
+        recs.append(d)
+    return recs
+
+
+def rows(tag: str | None = None):
+    out = []
+    for d in load(tag):
+        stem = d["name"]
+        if "skipped" in d:
+            out.append((f"roofline/{stem}", 0.0, f"SKIP:{d['skipped'][:60]}"))
+            continue
+        if "error" in d:
+            out.append((f"roofline/{stem}", -1.0, "ERROR"))
+            continue
+        r = d["roofline"]
+        mem = d["memory"]["total_per_device"] / 2**30
+        dom_val = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append((
+            f"roofline/{stem}",
+            dom_val,
+            f"dom={r['dominant']};c={r['compute_s']:.3g};m={r['memory_s']:.3g};"
+            f"x={r['collective_s']:.3g};mem_GiB={mem:.2f};useful={r['useful_ratio']:.3f}",
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    for name, val, extra in rows():
+        print(f"{name},{val:.4g},{extra}")

@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure + system tables.
+
+Prints ``name,value,derived`` CSV. Modules:
+  upload_time      — paper Fig. 8 (upload seconds vs model size/bandwidth)
+  bandwidth_model  — paper SPIC cost claim (50 MB/s video vs <1 MB/s updates)
+  convergence      — paper efficiency claim (federated vs centralized)
+  kernel_bench     — kernel reference micro-benchmarks
+  roofline_table   — per (arch x shape x mesh) roofline from the dry-run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bandwidth_model, convergence, kernel_bench, roofline_table, upload_time
+
+    modules = [
+        ("upload_time", upload_time),
+        ("bandwidth_model", bandwidth_model),
+        ("convergence", convergence),
+        ("kernel_bench", kernel_bench),
+        ("roofline_table", roofline_table),
+    ]
+    failed = 0
+    for name, mod in modules:
+        try:
+            for row_name, val, extra in mod.rows():
+                print(f"{row_name},{val},{extra}")
+        except Exception:  # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},ERROR,", file=sys.stderr)
+    if failed:
+        raise SystemExit(f"{failed} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

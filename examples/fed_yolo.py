@@ -1,0 +1,79 @@
+"""FedYOLOv3 — the paper's headline application, end to end.
+
+Multiple data owners hold procedurally generated camera scenes annotated in
+the paper's Darknet ``{label x y w h}`` format. Each round: the scheduler
+selects clients, clients train YOLOv3 locally (Eqs 2-4 loss), upload their
+Eq.6 top-n layers, the server aggregates (Eq. 5) and stores the round model
+in the COS object store.
+
+  PYTHONPATH=src python examples/fed_yolo.py [--rounds 30]
+"""
+import argparse
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ObjectStore
+from repro.configs import get_arch
+from repro.core.rounds import FedConfig
+from repro.core.server import FLServer
+from repro.data import darknet, synthetic
+from repro.data.pipeline import fed_batches
+from repro.models import yolov3
+from repro.optim import sgd
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--img-size", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_arch("fedyolov3")
+    fed = FedConfig(n_clients=args.clients, local_steps=1, aggregation="eq6", topn=4, client_axis="data", data_axis=None)
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    # --- crowdsourced annotation flow: clients write Darknet rows ---------
+    with tempfile.TemporaryDirectory() as tmp:
+        rng = np.random.default_rng(0)
+        imgs, boxes = synthetic.scene_images(rng, 4, args.img_size, cfg.vocab_size)
+        from pathlib import Path
+
+        cam = Path(tmp) / "cam0"
+        cam.mkdir()
+        for i, bs in enumerate(boxes):
+            (cam / f"frame{i}.txt").write_text(darknet.write_annotation(bs))
+        mapped = darknet.map_annotations(cam, Path(tmp) / "train")
+        print(f"annotation module mapped {len(mapped)} files into the training dir")
+
+        store = ObjectStore(Path(tmp) / "cos")
+        with jax.set_mesh(mesh):
+            server = FLServer(cfg, fed, sgd(lr=1e-3), store=store, mesh=mesh, checkpoint_every=5, task_id="fedyolo")
+            batches = (
+                jax.tree.map(jnp.asarray, b)
+                for b in fed_batches(cfg, fed, batch=2, seq=0, img_size=args.img_size)
+            )
+            history = server.fit(batches, args.rounds)
+
+        # detection sanity: confidence at object cells > empty cells
+        params = server.global_params()
+        imgs_t, boxes_t = synthetic.scene_images(np.random.default_rng(7), 4, args.img_size, cfg.vocab_size)
+        outs = yolov3.forward(params, jnp.asarray(imgs_t), cfg)
+        grids = [args.img_size // 8, args.img_size // 16, args.img_size // 32]
+        tgts = darknet.build_targets(boxes_t, grids, cfg.n_heads, cfg.vocab_size, yolov3.ANCHORS)
+        _, conf, _ = yolov3.decode_boxes(outs[0].astype(jnp.float32), yolov3.ANCHORS[0])
+        obj = jnp.asarray(tgts[0]["obj"])
+        conf_obj = float((conf * obj).sum() / jnp.maximum(obj.sum(), 1))
+        conf_bg = float((conf * (1 - obj)).sum() / (1 - obj).sum())
+        print(f"loss {history[0].loss:.3f} -> {history[-1].loss:.3f}; "
+              f"mean conf@objects={conf_obj:.3f} vs background={conf_bg:.3f}")
+        print(f"COS stored rounds: {store.rounds('fedyolo')}, total {store.total_bytes()/1e6:.2f} MB")
+        assert history[-1].loss < history[0].loss
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Full-platform demo: Task Manager coordinating two concurrent federated
+tasks (an LM and the FedYOLOv3 detector), with scheduler-driven
+participation, client drop/reconnect simulation, the Fig.-9-style monitor
+view, and secure (pairwise-masked) aggregation shown on the side.
+
+  PYTHONPATH=src python examples/multi_task_platform.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import monitor, secure_agg
+from repro.core.client import ClientConfig, FLClient
+from repro.core.rounds import FedConfig
+from repro.core.server import FLServer
+from repro.core.task_manager import FederatedTask, TaskManager
+from repro.data.pipeline import fed_batches
+from repro.optim import adamw, sgd
+
+
+def make_server(arch_name, fed, opt, mesh, seed=0):
+    cfg = get_arch(arch_name)
+    if cfg.family != "yolo":  # fedyolov3 is already CPU-sized
+        cfg = cfg.reduced()
+    return FLServer(cfg, fed, opt, mesh=mesh, seed=seed, task_id=arch_name)
+
+
+def main() -> None:
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    fed_lm = FedConfig(n_clients=3, local_steps=1, aggregation="eq6", topn=2, client_axis="data", data_axis=None)
+    fed_yolo = FedConfig(n_clients=2, local_steps=1, aggregation="dense", client_axis="data", data_axis=None)
+
+    with jax.set_mesh(mesh):
+        lm_server = make_server("qwen3-1.7b", fed_lm, adamw(3e-3), mesh)
+        yolo_server = make_server("fedyolov3", fed_yolo, sgd(1e-3), mesh)
+        lm_batches = (
+            jax.tree.map(jnp.asarray, b)
+            for b in fed_batches(lm_server.cfg, fed_lm, batch=2, seq=32)
+        )
+        yolo_batches = (
+            jax.tree.map(jnp.asarray, b)
+            for b in fed_batches(yolo_server.cfg, fed_yolo, batch=2, seq=0, img_size=32)
+        )
+
+        # clients with reconnect budgets (paper Configuration module)
+        clients = [FLClient(ClientConfig(i, max_reconnects=2)) for i in range(3)]
+
+        tm = TaskManager()
+        tm.register(FederatedTask("lm", "qwen3-1.7b", 8, lambda r: vars(lm_server.run_round(next(lm_batches)))))
+        tm.register(FederatedTask("yolo", "fedyolov3", 6, lambda r: vars(yolo_server.run_round(next(yolo_batches)))))
+
+        passes = 0
+        rng = np.random.default_rng(0)
+        while tm.runnable():
+            # simulate a drop/reconnect each pass
+            victim = clients[rng.integers(0, len(clients))]
+            if rng.random() < 0.3 and victim.connected:
+                alive = victim.drop()
+                print(f"client {victim.cfg.client_id} dropped "
+                      f"({'will reconnect' if alive else 'out of reconnect budget'})")
+            tm.step_all()
+            passes += 1
+        print(f"\nTaskManager finished both tasks in {passes} fair-share passes\n")
+        print(monitor.render_task("lm", lm_server.history, fed_lm.n_clients, upload_bytes_per_round=1.7e6))
+        print()
+        print(monitor.render_task("yolo", yolo_server.history, fed_yolo.n_clients, upload_bytes_per_round=48e6))
+
+        # secure aggregation sidebar: server only ever sees masked sums
+        ups = [jax.tree.map(lambda x: x[i], lm_server.state["params"]) for i in range(3)]
+        sec = secure_agg.secure_fedavg(ups, round_idx=0)
+        plain = jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs) / 3, *ups)
+        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(jax.tree.leaves(sec), jax.tree.leaves(plain)))
+        print(f"\nsecure aggregation: pairwise masks cancel to {err:.2e} (server never saw a raw update)")
+
+
+if __name__ == "__main__":
+    main()

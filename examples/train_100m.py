@@ -1,0 +1,83 @@
+"""End-to-end driver: federated training of a ~100M-parameter LM.
+
+The "production-shaped" example: a 12-layer / d_model=640 transformer
+(~100M params with the 49k vocab) trained for a few hundred federated
+rounds across 4 non-IID clients with Eq. 6 upload compression, scheduler
+-driven participation, and COS round checkpoints.
+
+  PYTHONPATH=src python examples/train_100m.py --rounds 200
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ObjectStore
+from repro.configs import get_arch
+from repro.core.rounds import FedConfig
+from repro.core.scheduler import SchedulerConfig, TaskScheduler
+from repro.core.server import FLServer
+from repro.data.pipeline import fed_batches
+from repro.models.params import count_params
+from repro.core.rounds import make_template
+from repro.optim import adamw
+
+
+def arch_100m():
+    base = get_arch("granite-3-8b")
+    return dataclasses.replace(
+        base,
+        name="granite-100m",
+        n_layers=12,
+        d_model=640,
+        n_heads=8,
+        n_kv_heads=4,
+        head_dim=0,
+        d_ff=1792,
+        dtype="float32",
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=200)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--store", default="/tmp/fedvision_cos")
+    args = ap.parse_args()
+
+    cfg = arch_100m()
+    n = count_params(make_template(cfg))
+    print(f"arch={cfg.name} params={n/1e6:.1f}M")
+    fed = FedConfig(n_clients=args.clients, local_steps=1, aggregation="eq6",
+                    topn=4, client_axis="data", data_axis=None)
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    store = ObjectStore(args.store)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        server = FLServer(
+            cfg, fed, adamw(3e-4), store=store, mesh=mesh,
+            scheduler=TaskScheduler(args.clients, SchedulerConfig(max_participants=args.clients)),
+            checkpoint_every=50, task_id="train100m",
+        )
+        batches = (
+            jax.tree.map(jnp.asarray, b)
+            for b in fed_batches(cfg, fed, batch=args.batch, seq=args.seq)
+        )
+        history = server.fit(batches, args.rounds)
+    print(json.dumps({
+        "params_M": round(n / 1e6, 1),
+        "rounds": len(history),
+        "loss_first": round(history[0].loss, 4),
+        "loss_last": round(history[-1].loss, 4),
+        "wall_min": round((time.time() - t0) / 60, 1),
+        "cos_rounds": store.rounds("train100m"),
+    }))
+
+
+if __name__ == "__main__":
+    main()

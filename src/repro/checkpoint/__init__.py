@@ -1,0 +1,3 @@
+from repro.checkpoint.store import ObjectStore
+
+__all__ = ["ObjectStore"]

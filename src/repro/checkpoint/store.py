@@ -1,0 +1,101 @@
+"""Cloud Object Storage (COS) abstraction — round-indexed model storage.
+
+The paper: "The number of such model parameter files, and thus the storage
+size required, increases with the rounds of training operations. FedVision
+adopts Cloud Object Storage (COS)."
+
+Filesystem-backed, content-addressed object store: each PUT writes an
+immutable blob keyed by SHA-256 and records (task, round) -> key in a JSON
+manifest. GC keeps the newest `keep` rounds per task (the paper's unbounded
+growth, bounded).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+import jax
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+class ObjectStore:
+    def __init__(self, root: str | Path):
+        self.root = Path(root)
+        (self.root / "objects").mkdir(parents=True, exist_ok=True)
+        self.manifest_path = self.root / "manifest.json"
+        self.manifest: dict = (
+            json.loads(self.manifest_path.read_text()) if self.manifest_path.exists() else {}
+        )
+
+    def _save_manifest(self) -> None:
+        self.manifest_path.write_text(json.dumps(self.manifest, indent=1, sort_keys=True))
+
+    def put_model(self, task_id: str, round_idx: int, params: PyTree, meta: dict | None = None) -> str:
+        buf = io.BytesIO()
+        np.savez_compressed(buf, **_flatten(params))
+        blob = buf.getvalue()
+        key = hashlib.sha256(blob).hexdigest()
+        obj = self.root / "objects" / key
+        if not obj.exists():
+            obj.write_bytes(blob)
+        self.manifest.setdefault(task_id, {})[str(round_idx)] = {
+            "key": key,
+            "bytes": len(blob),
+            **(meta or {}),
+        }
+        self._save_manifest()
+        return key
+
+    def get_model(self, task_id: str, round_idx: int | None = None) -> dict[str, np.ndarray]:
+        rounds = self.manifest[task_id]
+        r = str(max(int(k) for k in rounds) if round_idx is None else round_idx)
+        key = rounds[r]["key"]
+        with np.load(self.root / "objects" / key) as z:
+            return {k: z[k] for k in z.files}
+
+    def restore_into(self, task_id: str, params: PyTree, round_idx: int | None = None) -> PyTree:
+        """Load a stored model into an existing pytree structure."""
+        flat = self.get_model(task_id, round_idx)
+        paths, treedef = jax.tree_util.tree_flatten_with_path(params)
+        leaves = []
+        for path, leaf in paths:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = flat[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def rounds(self, task_id: str) -> list[int]:
+        return sorted(int(k) for k in self.manifest.get(task_id, {}))
+
+    def total_bytes(self) -> int:
+        return sum(f.stat().st_size for f in (self.root / "objects").iterdir())
+
+    def gc(self, keep: int = 3) -> int:
+        """Keep newest `keep` rounds per task; drop unreferenced blobs."""
+        for task_id, rounds in self.manifest.items():
+            for r in sorted((int(k) for k in rounds), reverse=True)[keep:]:
+                del rounds[str(r)]
+        live = {e["key"] for rs in self.manifest.values() for e in rs.values()}
+        removed = 0
+        for f in (self.root / "objects").iterdir():
+            if f.name not in live:
+                f.unlink()
+                removed += 1
+        self._save_manifest()
+        return removed

@@ -1,0 +1,56 @@
+"""Config registry: ``--arch <id>`` ids -> ArchConfig."""
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, shape_applicable
+from repro.configs import (
+    fedyolov3,
+    gemma3_27b,
+    granite_3_8b,
+    granite_moe_1b_a400m,
+    grok_1_314b,
+    hubert_xlarge,
+    llava_next_34b,
+    mamba2_1_3b,
+    minitron_8b,
+    qwen3_1_7b,
+    zamba2_2_7b,
+)
+
+# The 10 assigned architectures (matrix order) + the paper's own model.
+ASSIGNED = [
+    granite_3_8b.CONFIG,
+    qwen3_1_7b.CONFIG,
+    hubert_xlarge.CONFIG,
+    grok_1_314b.CONFIG,
+    granite_moe_1b_a400m.CONFIG,
+    gemma3_27b.CONFIG,
+    llava_next_34b.CONFIG,
+    minitron_8b.CONFIG,
+    mamba2_1_3b.CONFIG,
+    zamba2_2_7b.CONFIG,
+]
+
+REGISTRY: dict[str, ArchConfig] = {c.name: c for c in ASSIGNED}
+REGISTRY[fedyolov3.CONFIG.name] = fedyolov3.CONFIG
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+__all__ = [
+    "ASSIGNED",
+    "REGISTRY",
+    "SHAPES",
+    "ArchConfig",
+    "ShapeConfig",
+    "get_arch",
+    "get_shape",
+    "shape_applicable",
+]

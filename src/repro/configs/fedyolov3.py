@@ -1,0 +1,21 @@
+"""fedyolov3 — the paper's own model (YOLOv3-lite, Eqs 2-4 loss).
+
+Not part of the assigned 10x4 matrix; used by examples/ and benchmarks/.
+The ArchConfig fields are repurposed: d_model = base conv width, n_layers =
+number of darknet residual stages.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="fedyolov3",
+    family="yolo",
+    n_layers=5,  # darknet-lite residual stages
+    d_model=32,  # base conv channels
+    n_heads=3,  # anchor boxes per scale (B in the paper)
+    n_kv_heads=3,
+    d_ff=0,
+    vocab_size=3,  # C classes (e.g. fire / smoke / disaster)
+    causal=False,
+    modality="image",
+    source="AAAI 2020 FedVision (Redmon & Farhadi 2018)",
+)

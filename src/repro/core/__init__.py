@@ -1,0 +1,25 @@
+"""The paper's primary contribution: the FedVision HFL engine.
+
+fedavg (Eq. 5) + compression (Eq. 6 / int8) + rounds (SPMD fed_round) +
+scheduler/explorer/task_manager/server/client (platform components).
+"""
+from repro.core import compression, explorer, fedavg, monitor, rounds, scheduler, secure_agg, server, task_manager
+from repro.core.rounds import FedConfig, build_fed_round, make_state, uniform_weights
+from repro.core.server import FLServer
+
+__all__ = [
+    "FedConfig",
+    "FLServer",
+    "build_fed_round",
+    "compression",
+    "explorer",
+    "fedavg",
+    "make_state",
+    "monitor",
+    "secure_agg",
+    "rounds",
+    "scheduler",
+    "server",
+    "task_manager",
+    "uniform_weights",
+]

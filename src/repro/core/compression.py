@@ -1,0 +1,112 @@
+"""Upload compression: Eq. 6 layer-contribution scores + int8 quantization.
+
+Eq. 6 of the paper: v(j) = | sum(M_j^{i,k}) - sum(M_j^{i,k-1}) | — the
+*signed* sums of all parameters in layer j across consecutive rounds. Each
+client ranks its own layers by v(j) and uploads only the top-n.
+
+"Layer" granularity: every scan-stacked slice of the model is a layer
+(homogeneous stacks: index l; pattern groups: g*period+j); all unstacked
+tensors (embeddings, final norm, shared blocks) share one extra bucket at
+index n_layers. `layer_sums` / `apply_layer_mask` implement the mapping from
+a parameter pytree to the (n_layers+1,) score vector and back.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamInfo, is_info
+
+PyTree = Any
+
+
+def n_score_buckets(cfg) -> int:
+    return cfg.n_layers + 1
+
+
+def _leaf_layer_ids(path, info: ParamInfo, cfg) -> tuple[str, int]:
+    """-> (kind, offset): kind in {stack1, stack2, misc}."""
+    top = path[0].key if hasattr(path[0], "key") else str(path[0])
+    if info.axes[:2] == ("group", "layer"):
+        return "stack2", 0
+    if info.axes[:1] == ("layer",):
+        if top == "tail":  # gemma3 tail starts after the grouped layers
+            period = cfg.local_global_period
+            return "stack1", (cfg.n_layers // period) * period
+        return "stack1", 0
+    return "misc", cfg.n_layers
+
+
+def layer_sums(cfg, template: PyTree, params: PyTree) -> jax.Array:
+    """Signed per-layer parameter sums -> (n_layers+1,) f32 (Eq. 6 inner sums)."""
+    out = jnp.zeros((n_score_buckets(cfg),), jnp.float32)
+
+    def add(path, info, x):
+        nonlocal out
+        kind, off = _leaf_layer_ids(path, info, cfg)
+        if kind == "stack2":
+            g, p = x.shape[:2]
+            s = jnp.sum(x.astype(jnp.float32), axis=tuple(range(2, x.ndim))).reshape(g * p)
+            out = out.at[off : off + g * p].add(s)
+        elif kind == "stack1":
+            l = x.shape[0]
+            s = jnp.sum(x.astype(jnp.float32), axis=tuple(range(1, x.ndim)))
+            out = out.at[off : off + l].add(s)
+        else:
+            out = out.at[off].add(jnp.sum(x.astype(jnp.float32)))
+
+    jax.tree_util.tree_map_with_path(add, template, params, is_leaf=lambda t: is_info(t))
+    return out
+
+
+def contribution_scores(prev_sums: jax.Array, new_sums: jax.Array) -> jax.Array:
+    """Eq. 6: v(j) = |sum_k - sum_{k-1}|."""
+    return jnp.abs(new_sums - prev_sums)
+
+
+def topn_mask(scores: jax.Array, n: int) -> jax.Array:
+    """Boolean mask of the n largest scores (per client). (NL+1,) -> (NL+1,)."""
+    n = min(n, scores.shape[-1])
+    kth = jax.lax.top_k(scores, n)[0][..., -1:]
+    return scores >= kth
+
+
+def apply_layer_mask(cfg, template: PyTree, params: PyTree, mask: jax.Array) -> PyTree:
+    """Multiply each layer slice of `params` by its mask entry (0/1)."""
+
+    def apply(path, info, x):
+        kind, off = _leaf_layer_ids(path, info, cfg)
+        if kind == "stack2":
+            g, p = x.shape[:2]
+            m = mask[off : off + g * p].reshape((g, p) + (1,) * (x.ndim - 2))
+        elif kind == "stack1":
+            l = x.shape[0]
+            m = mask[off : off + l].reshape((l,) + (1,) * (x.ndim - 1))
+        else:
+            m = mask[off]
+        return x * m.astype(x.dtype)
+
+    return jax.tree_util.tree_map_with_path(apply, template, params, is_leaf=lambda t: is_info(t))
+
+
+# ---------------------------------------------------------------------------
+# int8 symmetric quantization (upload transport for quant8 aggregation)
+# ---------------------------------------------------------------------------
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q int8, scale f32 scalar)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compression_ratio(cfg, n: int) -> float:
+    """Fraction of layer buckets uploaded under top-n selection."""
+    return n / n_score_buckets(cfg)

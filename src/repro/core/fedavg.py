@@ -1,0 +1,155 @@
+"""Federated aggregation (paper Eq. 5) over a client-stacked parameter tree.
+
+All functions take `stacked`: a pytree whose every leaf has a leading client
+dim C (sharded over the client mesh axis), plus participation `weights`
+(C,) — the scheduler's output, normalized. Modes:
+
+- `aggregate_dense`   — Eq. 5 FedAvg (weighted mean, full upload).
+- `aggregate_eq6`     — paper-faithful top-n layer upload per client
+                        (Eq. 6 contribution scores). Value-dependent, so the
+                        collective still moves full tensors; semantics match
+                        the platform (non-uploaded layers keep local values).
+- `aggregate_quant8`  — beyond-paper: int8-quantized *delta* upload via an
+                        explicit all_gather over the client axis (shard_map),
+                        structurally shrinking collective bytes ~4x vs f32.
+- `aggregate_static_topn` — beyond-paper: trace-time round-robin layer
+                        subset; the collective operand itself is sliced, so
+                        the dry-run/roofline sees the paper's bandwidth
+                        saving structurally.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compression as comp
+from repro.models.params import is_info
+
+PyTree = Any
+
+AGGREGATION_MODES = ("dense", "eq6", "quant8", "static_topn")
+
+
+def _wmean(stacked: PyTree, weights: jax.Array) -> PyTree:
+    """Weighted mean over the client dim, broadcast back to (C, ...)."""
+
+    def f(x):
+        g = jnp.einsum("c,c...->...", weights.astype(jnp.float32), x.astype(jnp.float32))
+        return jnp.broadcast_to(g.astype(x.dtype)[None], x.shape)
+
+    return jax.tree.map(f, stacked)
+
+
+def aggregate_dense(stacked: PyTree, weights: jax.Array) -> PyTree:
+    return _wmean(stacked, weights)
+
+
+def aggregate_eq6(cfg, template, stacked: PyTree, weights: jax.Array, prev_sums: jax.Array, topn: int):
+    """Returns (new_stacked, new_sums (C, NL+1)).
+
+    Each client uploads only its top-n layers by Eq. 6 score; a layer's
+    global value is the weighted mean over the clients that uploaded it;
+    layers uploaded by nobody keep each client's local values.
+    """
+    new_sums = jax.vmap(lambda p: comp.layer_sums(cfg, template, p))(stacked)
+    v = comp.contribution_scores(prev_sums, new_sums)  # (C, NL+1)
+    mask = jax.vmap(lambda s: comp.topn_mask(s, topn))(v).astype(jnp.float32)
+    wmask = mask * weights[:, None]  # (C, NL+1)
+    den = jnp.sum(wmask, axis=0)  # (NL+1,)
+    inv = jnp.where(den > 0, 1.0 / jnp.maximum(den, 1e-12), 0.0)
+    masked = jax.vmap(lambda p, m: comp.apply_layer_mask(cfg, template, p, m))(stacked, wmask)
+    num = jax.tree.map(lambda x: jnp.sum(x.astype(jnp.float32), axis=0), masked)
+    global_f32 = comp.apply_layer_mask(cfg, template, num, inv)
+    global_ = jax.tree.map(lambda g, x: g.astype(x.dtype), global_f32, stacked)
+    uploaded = (den > 0).astype(jnp.float32)
+    # per-leaf selection pattern: 1 where the layer was uploaded by anyone
+    sel = comp.apply_layer_mask(cfg, template, jax.tree.map(lambda x: jnp.ones(x.shape[1:], x.dtype), stacked), uploaded)
+    new_stacked = jax.tree.map(
+        lambda s, g, x: jnp.where(s.astype(bool)[None], jnp.broadcast_to(g[None], x.shape), x),
+        sel,
+        global_,
+        stacked,
+    )
+    return new_stacked, new_sums
+
+
+def aggregate_quant8(stacked: PyTree, base: PyTree, weights: jax.Array, mesh, client_axis: str, specs: PyTree) -> PyTree:
+    """global = base + wmean_c(dequant(quant(new_c - base))); int8 transport.
+
+    `specs`: PartitionSpec pytree for `stacked` (leading client axis). The
+    collective is an explicit int8 all_gather inside shard_map, so the HLO
+    moves 1-byte operands over the client axis instead of bf16/f32.
+    """
+    C = weights.shape[0]
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[client_axis]
+
+    def f(new, base_, w):
+        def per_leaf(n_leaf, b_leaf):
+            # local block holds C/n_shards client rows; one scale per shard
+            delta = (n_leaf.astype(jnp.float32) - b_leaf.astype(jnp.float32))
+            q, scale = comp.quantize(delta)
+            qg = jax.lax.all_gather(q, client_axis, axis=0, tiled=True)  # (C, ...)
+            sg = jax.lax.all_gather(scale, client_axis, axis=0)  # (n_shards,)
+            row_scale = jnp.repeat(sg, C // n_shards)  # (C,)
+            d = qg.astype(jnp.float32) * row_scale.reshape((C,) + (1,) * (qg.ndim - 1))
+            gd = jnp.einsum("c,c...->...", w.astype(jnp.float32), d)
+            return (b_leaf.astype(jnp.float32) + gd[None]).astype(n_leaf.dtype)
+
+        return jax.tree.map(per_leaf, new, base_)
+
+    return jax.shard_map(
+        f, mesh=mesh, in_specs=(specs, specs, P()), out_specs=specs, check_vma=False
+    )(stacked, base, weights)
+
+
+def static_layer_schedule(n_buckets: int, topn: int, round_idx: int) -> tuple[int, ...]:
+    """Round-robin layer subset for round `round_idx` (trace-time static)."""
+    off = (round_idx * topn) % n_buckets
+    return tuple((off + i) % n_buckets for i in range(topn))
+
+
+def aggregate_static_topn(cfg, template, stacked: PyTree, weights: jax.Array, sync_layers: tuple[int, ...]) -> PyTree:
+    """Aggregate only a static subset of layer buckets.
+
+    The leading-stack rows of each leaf are sliced at trace time, so the
+    cross-client collective operand is `len(sync_layers)/n_buckets` of the
+    full size — the paper's upload saving made structural.
+    """
+    nl = cfg.n_layers
+    mask_vec = np.zeros(comp.n_score_buckets(cfg), bool)
+    mask_vec[list(sync_layers)] = True
+
+    def agg(path, info, x):
+        kind, off = comp._leaf_layer_ids(path, info, cfg)
+        if kind == "misc":
+            if not mask_vec[nl]:
+                return x
+            return _wmean_leaf(x, weights)
+        if kind == "stack2":
+            g, p = x.shape[1:3]
+            flat = x.reshape((x.shape[0], g * p) + x.shape[3:])
+            ids = np.arange(g * p) + off
+            sel = np.nonzero(mask_vec[ids])[0]
+            if sel.size == 0:
+                return x
+            sub = _wmean_leaf(flat[:, sel], weights)
+            return flat.at[:, sel].set(sub).reshape(x.shape)
+        l = x.shape[1]
+        ids = np.arange(l) + off
+        sel = np.nonzero(mask_vec[ids])[0]
+        if sel.size == 0:
+            return x
+        sub = _wmean_leaf(x[:, sel], weights)
+        return x.at[:, sel].set(sub)
+
+    return jax.tree_util.tree_map_with_path(agg, template, stacked, is_leaf=is_info)
+
+
+def _wmean_leaf(x: jax.Array, weights: jax.Array) -> jax.Array:
+    g = jnp.einsum("c,c...->...", weights.astype(jnp.float32), x.astype(jnp.float32))
+    return jnp.broadcast_to(g.astype(x.dtype)[None], x.shape)

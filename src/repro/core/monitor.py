@@ -1,0 +1,54 @@
+"""Round-monitoring view (paper Fig. 9: "Monitoring multiple rounds of
+federated model training on FedVision").
+
+Renders per-task progress — round, loss curve sparkline, participation,
+upload bytes — as the text analogue of the platform's dashboard, and
+exports the same data as JSON for a real UI.
+"""
+from __future__ import annotations
+
+import json
+from typing import Sequence
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values: Sequence[float], width: int = 32) -> str:
+    if not values:
+        return ""
+    vals = list(values)[-width:]
+    lo, hi = min(vals), max(vals)
+    span = (hi - lo) or 1.0
+    return "".join(_SPARK[int((v - lo) / span * (len(_SPARK) - 1))] for v in vals)
+
+
+def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: float = 0.0) -> str:
+    if not history:
+        return f"[{task_id}] no rounds yet"
+    losses = [r.loss for r in history]
+    last = history[-1]
+    parts = sum(1 for w in last.weights if w > 0)
+    lines = [
+        f"[{task_id}] round {last.round_idx + 1}/{len(history)} complete",
+        f"  loss     {losses[0]:.4f} → {losses[-1]:.4f}   {sparkline(losses)}",
+        f"  clients  {parts}/{n_clients} participating   round wall {last.seconds:.2f}s",
+    ]
+    if upload_bytes_per_round:
+        lines.append(
+            f"  upload   {upload_bytes_per_round / 1e6:.2f} MB/client/round "
+            f"({upload_bytes_per_round * parts / 1e6:.2f} MB total)"
+        )
+    return "\n".join(lines)
+
+
+def export_json(task_id: str, history, n_clients: int) -> str:
+    return json.dumps(
+        {
+            "task": task_id,
+            "rounds": [
+                {"round": r.round_idx, "loss": r.loss, "participants": sum(1 for w in r.weights if w > 0), "seconds": r.seconds}
+                for r in history
+            ],
+            "n_clients": n_clients,
+        }
+    )

@@ -1,0 +1,217 @@
+"""fed_round: one federated round as a single jit-able SPMD program.
+
+Structure (DESIGN.md §4):
+  1. `vmap` of the local trainer over the client-stacked state — each mesh
+     slice along the client axis trains its own divergent model copy for
+     E local steps (lax.scan), with *no* cross-client collectives;
+  2. aggregation over the client axis per the configured mode (Eq. 5 dense,
+     Eq. 6 top-n, int8-quantized delta, or static layer schedule).
+
+The same builder also yields `make_state`, `input_template`, and the
+sharding specs used by the launcher and the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core import compression as comp
+from repro.core import fedavg
+from repro.models import params as mp
+from repro.models import transformer, yolov3
+from repro.optim import Optimizer
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    n_clients: int
+    local_steps: int = 1
+    aggregation: str = "eq6"  # dense | eq6 | quant8 | static_topn | fedsgd
+    topn: int = 8  # Eq. 6 / static_topn upload budget (layer buckets)
+    client_axis: str = "pod"  # mesh axis acting as the federation
+    data_axis: str | None = "data"  # within-client data-parallel axis
+    round_idx_static: int = 0  # static_topn: trace-time round phase
+    microbatches: int = 1  # grad-accumulation splits of each local step
+
+
+def loss_for(cfg: ArchConfig) -> Callable:
+    if cfg.family == "yolo":
+        return lambda params, batch: yolov3.yolo_loss(params, batch, cfg)
+    return lambda params, batch: transformer.loss_fn(cfg, params, batch)
+
+
+def make_template(cfg: ArchConfig) -> PyTree:
+    if cfg.family == "yolo":
+        return yolov3.template(cfg)
+    return transformer.template(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs
+# ---------------------------------------------------------------------------
+
+def stacked_pspecs(template: PyTree, client_axis: str, rules: dict | None = None) -> PyTree:
+    """Param PartitionSpecs with the leading client dim on `client_axis`."""
+    base = mp.pspecs(template, rules)
+    return jax.tree.map(lambda s: P(client_axis, *s), base, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspecs(batch_template: PyTree, fed: FedConfig) -> PyTree:
+    spec = P(fed.client_axis, None, fed.data_axis)  # (C, E, b, ...)
+    return jax.tree.map(lambda _: spec, batch_template)
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+def state_template(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, dtype) -> PyTree:
+    """Abstract FedState (ShapeDtypeStructs) for dry-run lowering."""
+    tpl = make_template(cfg)
+    pabs = mp.abstract(tpl, dtype)
+    if fed.aggregation == "fedsgd":
+        stack = lambda t: t  # FedSGD-equivalent: one shared model copy
+    else:
+        stack = lambda t: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((fed.n_clients,) + s.shape, s.dtype), t
+        )
+    opt_abs = jax.eval_shape(optimizer.init, pabs)
+    st = {
+        "params": stack(pabs),
+        "opt": stack(opt_abs),
+        "round": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if fed.aggregation == "eq6":
+        st["prev_sums"] = jax.ShapeDtypeStruct((fed.n_clients, comp.n_score_buckets(cfg)), jnp.float32)
+    return st
+
+
+def make_state(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, rng, dtype=jnp.float32) -> PyTree:
+    tpl = make_template(cfg)
+    if fed.aggregation == "fedsgd":
+        params = mp.init_params(tpl, rng, dtype)
+        return {"params": params, "opt": optimizer.init(params), "round": jnp.int32(0)}
+    keys = jax.random.split(rng, fed.n_clients)
+    params = jax.vmap(lambda k: mp.init_params(tpl, k, dtype))(keys)
+    # clients start from the same global model (server dispatch)
+    params = jax.tree.map(lambda x: jnp.broadcast_to(x[:1], x.shape), params)
+    opt = jax.vmap(optimizer.init)(params)
+    st = {"params": params, "opt": opt, "round": jnp.int32(0)}
+    if fed.aggregation == "eq6":
+        st["prev_sums"] = jax.vmap(lambda p: comp.layer_sums(cfg, tpl, p))(params)
+    return st
+
+
+def state_pspecs(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, rules: dict | None = None, opt_rules: dict | None = None) -> PyTree:
+    """opt_rules: optional separate sharding rules for optimizer moments —
+    ZeRO-1 style (moments sharded over data while params stay TP-only)."""
+    tpl = make_template(cfg)
+    if fed.aggregation == "fedsgd":
+        pspec = mp.pspecs(tpl, rules)
+        mspec = mp.pspecs(tpl, opt_rules) if opt_rules else pspec
+    else:
+        pspec = stacked_pspecs(tpl, fed.client_axis, rules)
+        mspec = stacked_pspecs(tpl, fed.client_axis, opt_rules) if opt_rules else pspec
+    opt_shape = jax.eval_shape(optimizer.init, mp.abstract(tpl, jnp.float32))
+    ospec = {k: (mspec if k in ("mu", "m", "v") else P()) for k in opt_shape}
+    st = {"params": pspec, "opt": ospec, "round": P()}
+    if fed.aggregation == "eq6":
+        st["prev_sums"] = P(fed.client_axis, None)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# The round
+# ---------------------------------------------------------------------------
+
+def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=None, rules: dict | None = None) -> Callable:
+    """Returns fed_round(state, batch, weights) -> (state, metrics).
+
+    batch leaves: (C, E, per_step_shard...). weights: (C,) normalized
+    participation weights from the scheduler (Eq. 5 uses 1/N).
+    """
+    tpl = make_template(cfg)
+    loss_fn = loss_for(cfg)
+    pspec = stacked_pspecs(tpl, fed.client_axis, rules)
+
+    def grads_of(params, step_batch):
+        """Gradients for one local step, with microbatch accumulation.
+
+        (A measured alternative — putting the micro scan inside the
+        differentiated function so the gradient tree is produced once —
+        left the collective term unchanged and tripled temp memory on the
+        gemma3 single-pod dry-run; see EXPERIMENTS.md §Perf hillclimb #2.)
+        """
+        if fed.microbatches <= 1:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, step_batch)
+            return loss, grads
+        micro = jax.tree.map(
+            lambda x: x.reshape((fed.microbatches, x.shape[0] // fed.microbatches) + x.shape[1:]),
+            step_batch,
+        )
+
+        def acc(carry, mb):
+            tot, g_acc = carry
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            return (tot + loss, jax.tree.map(jnp.add, g_acc, g)), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (tot, g_sum), _ = jax.lax.scan(acc, (jnp.float32(0), zeros), micro)
+        n = jnp.float32(fed.microbatches)
+        return tot / n, jax.tree.map(lambda g: (g / n.astype(g.dtype)), g_sum)
+
+    def local_train(params, opt, client_batch):
+        def step(carry, micro):
+            p, o = carry
+            loss, grads = grads_of(p, micro)
+            p, o = optimizer.update(p, grads, o)
+            return (p, o), loss
+
+        (params, opt), losses = jax.lax.scan(step, (params, opt), client_batch)
+        return params, opt, jnp.mean(losses)
+
+    def fed_round(state, batch, weights):
+        if fed.aggregation == "fedsgd":
+            # FedSGD-equivalent: clients = data-parallel shards, E=1,
+            # param-averaging == gradient-averaging (DESIGN.md §5). One
+            # shared model copy, so FSDP-style rules fit huge archs.
+            p, o, loss = local_train(state["params"], state["opt"], batch)
+            return (
+                {**state, "params": p, "opt": o, "round": state["round"] + 1},
+                {"loss": loss},
+            )
+        new_p, new_o, loss = jax.vmap(local_train, spmd_axis_name=fed.client_axis)(
+            state["params"], state["opt"], batch
+        )
+        metrics = {"loss": jnp.mean(loss)}
+        if fed.aggregation == "dense":
+            agg = fedavg.aggregate_dense(new_p, weights)
+            out = {**state, "params": agg, "opt": new_o}
+        elif fed.aggregation == "eq6":
+            agg, sums = fedavg.aggregate_eq6(cfg, tpl, new_p, weights, state["prev_sums"], fed.topn)
+            out = {**state, "params": agg, "opt": new_o, "prev_sums": sums}
+        elif fed.aggregation == "quant8":
+            agg = fedavg.aggregate_quant8(new_p, state["params"], weights, mesh, fed.client_axis, pspec)
+            out = {**state, "params": agg, "opt": new_o}
+        elif fed.aggregation == "static_topn":
+            sched = fedavg.static_layer_schedule(comp.n_score_buckets(cfg), fed.topn, fed.round_idx_static)
+            agg = fedavg.aggregate_static_topn(cfg, tpl, new_p, weights, sched)
+            out = {**state, "params": agg, "opt": new_o}
+        else:
+            raise ValueError(fed.aggregation)
+        out["round"] = state["round"] + 1
+        return out, metrics
+
+    return fed_round
+
+
+def uniform_weights(n_clients: int) -> jax.Array:
+    """Paper Eq. 5: unweighted average."""
+    return jnp.full((n_clients,), 1.0 / n_clients, jnp.float32)

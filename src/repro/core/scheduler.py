@@ -1,0 +1,64 @@
+"""Task Scheduler — load-balancing client selection (Yu et al. 2017 style).
+
+The paper: "The load-balancing approach ... jointly considers clients' local
+model quality and the current load on their local computational resources in
+an effort to maximize the quality of the resulting federated model."
+
+We implement that as per-round selection maximizing
+    score_i = alpha * quality_i - beta * load_i
+subject to a participation budget, with a fairness floor so starved clients
+eventually re-enter (their data would otherwise never contribute). Quality
+is an EMA of each client's local loss improvement; load comes from Explorer
+reports. The output is the weight vector fed to the Eq. 5 aggregation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    alpha: float = 1.0  # quality weight
+    beta: float = 0.5  # load penalty
+    max_participants: int = 0  # 0 -> all
+    fairness_rounds: int = 4  # force-include clients idle this many rounds
+    quality_ema: float = 0.8
+
+
+class TaskScheduler:
+    def __init__(self, n_clients: int, config: SchedulerConfig | None = None):
+        self.cfg = config or SchedulerConfig()
+        self.n = n_clients
+        self.quality = np.zeros(n_clients)  # EMA of loss improvement
+        self.last_loss = np.full(n_clients, np.nan)
+        self.idle_rounds = np.zeros(n_clients, int)
+
+    def report_quality(self, client: int, loss: float) -> None:
+        prev = self.last_loss[client]
+        improvement = 0.0 if np.isnan(prev) else prev - loss
+        e = self.cfg.quality_ema
+        self.quality[client] = e * self.quality[client] + (1 - e) * improvement
+        self.last_loss[client] = loss
+
+    def select(self, loads: np.ndarray) -> np.ndarray:
+        """loads: (n,) in [0,1] from Explorer. Returns weights (n,), sum 1."""
+        loads = np.asarray(loads, float)
+        score = self.cfg.alpha * self.quality - self.cfg.beta * loads
+        k = self.cfg.max_participants or self.n
+        k = min(k, self.n)
+        chosen = set(np.argsort(-score)[:k].tolist())
+        # fairness floor: anyone idle too long joins this round
+        for i in range(self.n):
+            if self.idle_rounds[i] >= self.cfg.fairness_rounds:
+                chosen.add(i)
+        weights = np.zeros(self.n)
+        for i in range(self.n):
+            if i in chosen:
+                weights[i] = 1.0
+                self.idle_rounds[i] = 0
+            else:
+                self.idle_rounds[i] += 1
+        total = weights.sum()
+        return weights / total if total else np.full(self.n, 1.0 / self.n)

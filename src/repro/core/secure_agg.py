@@ -1,0 +1,76 @@
+"""Secure aggregation — pairwise additive masking (Bonawitz et al. 2017).
+
+The paper: clients send "encrypted model parameters ... to the server in a
+secure encrypted manner" and cite Bonawitz et al.'s system design. The
+standard construction: every client pair (i, j) derives a shared mask
+m_ij from a common seed; client i adds +m_ij for j > i and -m_ji for j < i
+to its update. Masks cancel in the SUM, so the server learns only the
+aggregate — individual updates stay hidden.
+
+This is the real additive-masking algorithm (PRG = JAX threefry keyed by
+the pair's shared seed), minus the dropout-recovery secret-sharing layer
+(documented out of scope). Exact cancellation is tested to float tolerance
+and the masked uploads are statistically indistinguishable from noise at
+mask_scale >> update scale.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def pair_seed(i: int, j: int, round_idx: int, session: int = 0) -> int:
+    """Shared seed for the (unordered) client pair at a given round.
+
+    In deployment this comes from a Diffie-Hellman exchange; here both
+    parties can derive it because they share the session key.
+    """
+    a, b = (i, j) if i < j else (j, i)
+    return hash((session, round_idx, a, b)) & 0x7FFFFFFF
+
+
+def _mask_tree(template: PyTree, seed: int, scale: float) -> PyTree:
+    leaves, treedef = jax.tree.flatten(template)
+    keys = jax.random.split(jax.random.key(seed), len(leaves))
+    masks = [
+        scale * jax.random.normal(k, l.shape, jnp.float32) for k, l in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, masks)
+
+
+def mask_update(update: PyTree, client: int, n_clients: int, round_idx: int, *, scale: float = 1.0, session: int = 0) -> PyTree:
+    """Client-side: add pairwise masks (+ for higher peers, − for lower)."""
+    out = jax.tree.map(lambda x: x.astype(jnp.float32), update)
+    for peer in range(n_clients):
+        if peer == client:
+            continue
+        m = _mask_tree(update, pair_seed(client, peer, round_idx, session), scale)
+        sign = 1.0 if peer > client else -1.0
+        out = jax.tree.map(lambda a, b: a + sign * b, out, m)
+    return out
+
+
+def aggregate_masked(masked_updates: list[PyTree]) -> PyTree:
+    """Server-side: plain sum — the pairwise masks cancel exactly."""
+    total = masked_updates[0]
+    for u in masked_updates[1:]:
+        total = jax.tree.map(jnp.add, total, u)
+    return total
+
+
+def secure_fedavg(updates: list[PyTree], round_idx: int, *, scale: float = 100.0, session: int = 0) -> PyTree:
+    """End-to-end: mask every client's update, sum at the server, divide.
+
+    The server never sees an unmasked individual update.
+    """
+    n = len(updates)
+    masked = [
+        mask_update(u, i, n, round_idx, scale=scale, session=session)
+        for i, u in enumerate(updates)
+    ]
+    total = aggregate_masked(masked)
+    return jax.tree.map(lambda x: x / n, total)

@@ -1,0 +1,87 @@
+"""FL_SERVER — orchestrates federated rounds (paper component #5).
+
+"responsible for model parameter uploading, model aggregation, and model
+dispatch." The server owns the jitted fed_round, the scheduler, the object
+store, and the round loop; FL_CLIENTs are the mesh slices (their control
+surface is repro.core.client).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ObjectStore
+from repro.configs.base import ArchConfig
+from repro.core import explorer, rounds
+from repro.core.scheduler import SchedulerConfig, TaskScheduler
+from repro.optim import Optimizer
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round_idx: int
+    loss: float
+    weights: list[float]
+    seconds: float
+
+
+class FLServer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        fed: rounds.FedConfig,
+        optimizer: Optimizer,
+        *,
+        store: ObjectStore | None = None,
+        scheduler: TaskScheduler | None = None,
+        mesh=None,
+        rules: dict | None = None,
+        seed: int = 0,
+        dtype=jnp.float32,
+        checkpoint_every: int = 0,
+        task_id: str = "task",
+    ):
+        self.cfg = cfg
+        self.fed = fed
+        self.optimizer = optimizer
+        self.store = store
+        self.task_id = task_id
+        self.checkpoint_every = checkpoint_every
+        self.scheduler = scheduler or TaskScheduler(fed.n_clients, SchedulerConfig())
+        self._rng = np.random.default_rng(seed)
+        self.state = rounds.make_state(cfg, fed, optimizer, jax.random.key(seed), dtype)
+        self._fed_round = jax.jit(rounds.build_fed_round(cfg, fed, optimizer, mesh, rules))
+        self.history: list[RoundRecord] = []
+
+    def global_params(self) -> PyTree:
+        """Dispatchable global model = client 0's copy (synced post-round)."""
+        return jax.tree.map(lambda x: x[0], self.state["params"])
+
+    def run_round(self, batch: PyTree) -> RoundRecord:
+        t0 = time.time()
+        loads = explorer.simulated_loads(self.fed.n_clients, self._rng)
+        weights = jnp.asarray(self.scheduler.select(loads), jnp.float32)
+        self.state, metrics = self._fed_round(self.state, batch, weights)
+        loss = float(metrics["loss"])
+        for c in range(self.fed.n_clients):
+            self.scheduler.report_quality(c, loss)
+        rec = RoundRecord(len(self.history), loss, [float(w) for w in weights], time.time() - t0)
+        self.history.append(rec)
+        if self.store and self.checkpoint_every and rec.round_idx % self.checkpoint_every == 0:
+            self.store.put_model(self.task_id, rec.round_idx, self.global_params(), {"loss": loss})
+        return rec
+
+    def fit(self, batches: Iterator[PyTree], n_rounds: int, log: Callable[[str], None] = lambda m: print(m, flush=True)) -> list[RoundRecord]:
+        for r in range(n_rounds):
+            rec = self.run_round(next(batches))
+            if log and (r % max(1, n_rounds // 10) == 0 or r == n_rounds - 1):
+                log(f"round {rec.round_idx:4d}  loss {rec.loss:.4f}  participants {sum(1 for w in rec.weights if w > 0)}/{self.fed.n_clients}")
+        return self.history

@@ -1,0 +1,72 @@
+"""Task Manager — coordinates concurrent federated training tasks.
+
+Paper component #3: "when multiple model algorithms are being trained
+concurrently by the clients, this component coordinates the concurrent
+federated model training processes." Round-robin fair-share over registered
+tasks with per-task state and status tracking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable
+
+
+class TaskStatus(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    PAUSED = "paused"
+    DONE = "done"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass
+class FederatedTask:
+    task_id: str
+    arch: str
+    total_rounds: int
+    run_round: Callable[[int], dict]  # round_idx -> metrics
+    rounds_done: int = 0
+    status: TaskStatus = TaskStatus.PENDING
+    history: list = dataclasses.field(default_factory=list)
+
+
+class TaskManager:
+    def __init__(self):
+        self.tasks: dict[str, FederatedTask] = {}
+
+    def register(self, task: FederatedTask) -> None:
+        if task.task_id in self.tasks:
+            raise ValueError(f"duplicate task id {task.task_id}")
+        self.tasks[task.task_id] = task
+
+    def runnable(self) -> list[FederatedTask]:
+        return [
+            t
+            for t in self.tasks.values()
+            if t.status in (TaskStatus.PENDING, TaskStatus.RUNNING) and t.rounds_done < t.total_rounds
+        ]
+
+    def step_all(self) -> dict[str, dict]:
+        """One fair-share scheduling pass: each runnable task advances one round."""
+        out = {}
+        for t in self.runnable():
+            t.status = TaskStatus.RUNNING
+            try:
+                metrics = t.run_round(t.rounds_done)
+            except Exception as e:  # noqa: BLE001 - platform surface
+                t.status = TaskStatus.FAILED
+                out[t.task_id] = {"error": str(e)}
+                continue
+            t.rounds_done += 1
+            t.history.append(metrics)
+            out[t.task_id] = metrics
+            if t.rounds_done >= t.total_rounds:
+                t.status = TaskStatus.DONE
+        return out
+
+    def run_to_completion(self, max_passes: int = 10_000) -> None:
+        for _ in range(max_passes):
+            if not self.runnable():
+                return
+            self.step_all()

@@ -1,0 +1,3 @@
+from repro.data import darknet, partition, pipeline, synthetic
+
+__all__ = ["darknet", "partition", "pipeline", "synthetic"]

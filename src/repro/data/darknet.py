@@ -1,0 +1,90 @@
+"""Crowdsourced image annotation — the paper's Darknet format module.
+
+"FedVision adopts the Darknet model format for annotation. Each row
+represents information for a bounding box in the following form:
+{label x y w h} where label denotes the category, (x, y) the center and
+(w, h) the width/height of the bounding box" (all normalized to [0,1]).
+
+Parser/writer + directory mapping (annotation file sits next to its image,
+auto-mapped into the training directory layout) + grid-target builder for
+the YOLO loss (Eqs 2-4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BBox:
+    label: int
+    x: float  # center, normalized
+    y: float
+    w: float
+    h: float
+
+    def validate(self) -> "BBox":
+        if not (0 <= self.x <= 1 and 0 <= self.y <= 1 and 0 < self.w <= 1 and 0 < self.h <= 1):
+            raise ValueError(f"bbox out of range: {self}")
+        if self.label < 0:
+            raise ValueError(f"negative label: {self}")
+        return self
+
+
+def parse_annotation(text: str) -> list[BBox]:
+    boxes = []
+    for ln, line in enumerate(text.splitlines()):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = line.split()
+        if len(parts) != 5:
+            raise ValueError(f"line {ln}: expected 'label x y w h', got {line!r}")
+        boxes.append(BBox(int(parts[0]), *(float(p) for p in parts[1:])).validate())
+    return boxes
+
+
+def write_annotation(boxes: list[BBox]) -> str:
+    return "\n".join(f"{b.label} {b.x:.6f} {b.y:.6f} {b.w:.6f} {b.h:.6f}" for b in boxes)
+
+
+def map_annotations(image_dir: str | Path, train_dir: str | Path) -> dict[str, list[BBox]]:
+    """The platform's auto-mapping: collect <stem>.txt next to images into
+    the model-training directory, returning {stem: boxes}."""
+    image_dir, train_dir = Path(image_dir), Path(train_dir)
+    train_dir.mkdir(parents=True, exist_ok=True)
+    out = {}
+    for ann in sorted(image_dir.glob("*.txt")):
+        boxes = parse_annotation(ann.read_text())
+        (train_dir / ann.name).write_text(write_annotation(boxes))
+        out[ann.stem] = boxes
+    return out
+
+
+def build_targets(boxes_per_image: list[list[BBox]], grid_sizes: list[int], n_anchors: int, n_classes: int, anchors) -> list[dict]:
+    """Grid targets per scale for the Eq. 2-4 loss.
+
+    Returns [{"obj" (B,S,S,A), "box" (B,S,S,A,4), "cls" (B,S,S,A,C)}].
+    Each gt box is assigned to the grid cell containing its center at every
+    scale, to the anchor with the closest aspect (paper's B boxes per cell).
+    """
+    B = len(boxes_per_image)
+    out = []
+    for s_idx, S in enumerate(grid_sizes):
+        obj = np.zeros((B, S, S, n_anchors), np.float32)
+        box = np.zeros((B, S, S, n_anchors, 4), np.float32)
+        cls = np.zeros((B, S, S, n_anchors, n_classes), np.float32)
+        anc = np.asarray(anchors[s_idx], np.float32)  # (A, 2)
+        for b, boxes in enumerate(boxes_per_image):
+            for gt in boxes:
+                gx, gy = min(int(gt.x * S), S - 1), min(int(gt.y * S), S - 1)
+                # anchor whose (w,h) is closest in log-space
+                d = np.sum((np.log(anc) - np.log([[gt.w, gt.h]])) ** 2, axis=1)
+                a = int(np.argmin(d))
+                obj[b, gy, gx, a] = 1.0
+                box[b, gy, gx, a] = [gt.x, gt.y, gt.w, gt.h]
+                cls[b, gy, gx, a, gt.label % n_classes] = 1.0
+        out.append({"obj": obj, "box": box, "cls": cls})
+    return out

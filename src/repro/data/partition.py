@@ -1,0 +1,45 @@
+"""Federated data partitioning — horizontal (sample-space) splits (Eq. 1).
+
+HFL requires identical feature/label spaces with disjoint sample ids across
+parties. `dirichlet_partition` produces the standard non-IID label-skew
+split used to evaluate FedAvg-style systems; `iid_partition` is the control.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def iid_partition(n_samples: int, n_clients: int, rng: np.random.Generator) -> list[np.ndarray]:
+    perm = rng.permutation(n_samples)
+    return [np.sort(s) for s in np.array_split(perm, n_clients)]
+
+
+def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float, rng: np.random.Generator, min_per_client: int = 1) -> list[np.ndarray]:
+    """Label-skewed split: per class, proportions ~ Dir(alpha) over clients."""
+    n_classes = int(labels.max()) + 1
+    shards: list[list[int]] = [[] for _ in range(n_clients)]
+    for c in range(n_classes):
+        idx = np.nonzero(labels == c)[0]
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for shard, part in zip(shards, np.split(idx, cuts)):
+            shard.extend(part.tolist())
+    # rebalance empty shards so every client can form a batch
+    out = [np.asarray(sorted(s), int) for s in shards]
+    for i, s in enumerate(out):
+        if len(s) < min_per_client:
+            donor = int(np.argmax([len(x) for x in out]))
+            take = out[donor][-min_per_client:]
+            out[donor] = out[donor][:-min_per_client]
+            out[i] = np.sort(np.concatenate([s, take]))
+    return out
+
+
+def partition_stats(parts: list[np.ndarray], labels: np.ndarray) -> dict:
+    n_classes = int(labels.max()) + 1
+    hist = np.stack([np.bincount(labels[p], minlength=n_classes) for p in parts])
+    frac = hist / np.maximum(hist.sum(1, keepdims=True), 1)
+    uniform = np.full(n_classes, 1.0 / n_classes)
+    tv = 0.5 * np.abs(frac - uniform).sum(1)  # total-variation from uniform
+    return {"sizes": [len(p) for p in parts], "label_hist": hist, "skew_tv": tv}

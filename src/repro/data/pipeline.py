@@ -1,0 +1,49 @@
+"""Host-side batching pipeline: modality dispatch + device placement.
+
+`fed_batches(cfg, fed, ...)` yields client-stacked batches (C, E, b, ...)
+matching what `core.rounds.build_fed_round` consumes, for any assigned
+architecture (text/audio/vlm) or the paper's detector.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.rounds import FedConfig
+from repro.data import darknet, synthetic
+from repro.models.yolov3 import ANCHORS
+
+
+def fed_batches(cfg: ArchConfig, fed: FedConfig, batch: int, seq: int, seed: int = 0, img_size: int = 96):
+    C, E = fed.n_clients, fed.local_steps
+    if cfg.modality == "audio":
+        yield from synthetic.audio_batches(cfg.d_model, cfg.vocab_size, C, E, batch, seq, seed)
+    elif cfg.modality == "vlm":
+        ni = cfg.n_image_tokens
+        rng = np.random.default_rng(seed)
+        for tb in synthetic.token_batches(cfg.vocab_size, C, E, batch, max(seq - ni, 8), seed):
+            imgs = rng.normal(size=(C, E, batch, ni, cfg.d_model)).astype(np.float32) * 0.1
+            yield {"tokens": tb["tokens"], "images": imgs}
+    elif cfg.family == "yolo":
+        rng = np.random.default_rng(seed)
+        grids = [img_size // 8, img_size // 16, img_size // 32]
+        while True:
+            ims = np.empty((C, E, batch, img_size, img_size, 3), np.float32)
+            tgts = None
+            acc = [[None] * E for _ in range(C)]
+            for c in range(C):
+                for e in range(E):
+                    im, boxes = synthetic.scene_images(rng, batch, img_size, cfg.vocab_size)
+                    ims[c, e] = im
+                    acc[c][e] = darknet.build_targets(boxes, grids, cfg.n_heads, cfg.vocab_size, ANCHORS)
+            targets = []
+            for s in range(3):
+                targets.append(
+                    {
+                        k: np.stack([np.stack([acc[c][e][s][k] for e in range(E)]) for c in range(C)])
+                        for k in ("obj", "box", "cls")
+                    }
+                )
+            yield {"images": ims, "targets": targets}
+    else:
+        yield from synthetic.token_batches(cfg.vocab_size, C, E, batch, seq, seed)

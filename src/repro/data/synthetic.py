@@ -1,0 +1,83 @@
+"""Synthetic data generators for every modality (offline container).
+
+Token streams are Markov-chain text-like data (learnable structure, so
+convergence benchmarks are meaningful); audio provides frame embeddings +
+cluster labels (HuBERT objective); vlm provides patch embeddings + captions;
+images are procedurally drawn scenes with bounding-box ground truth in the
+paper's Darknet format.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.darknet import BBox
+
+
+class MarkovTokens:
+    """Order-1 Markov token source with client-dependent drift (non-IID)."""
+
+    def __init__(self, vocab: int, seed: int = 0, drift: float = 0.0):
+        rng = np.random.default_rng(seed)
+        k = min(vocab, 64)  # latent states
+        self.vocab = vocab
+        base = rng.dirichlet([0.3] * k, size=k)
+        if drift:
+            base = (1 - drift) * base + drift * rng.dirichlet([0.3] * k, size=k)
+        self.trans = base
+        self.emit = rng.integers(0, vocab, size=k)
+        self.k = k
+
+    def sample(self, rng: np.random.Generator, batch: int, seq: int) -> np.ndarray:
+        out = np.empty((batch, seq), np.int32)
+        state = rng.integers(0, self.k, size=batch)
+        for t in range(seq):
+            out[:, t] = self.emit[state] % self.vocab
+            u = rng.random((batch, 1))
+            state = (np.cumsum(self.trans[state], axis=1) > u).argmax(axis=1)
+        return out
+
+
+def token_batches(vocab: int, n_clients: int, local_steps: int, batch: int, seq: int, seed: int = 0, non_iid_drift: float = 0.5):
+    """Yields {"tokens": (C, E, b, S)} with per-client distributions."""
+    sources = [MarkovTokens(vocab, seed=seed + c, drift=non_iid_drift * c / max(n_clients - 1, 1)) for c in range(n_clients)]
+    rng = np.random.default_rng(seed + 999)
+    while True:
+        yield {
+            "tokens": np.stack(
+                [np.stack([s.sample(rng, batch, seq) for _ in range(local_steps)]) for s in sources]
+            )
+        }
+
+
+def audio_batches(d_model: int, vocab: int, n_clients: int, local_steps: int, batch: int, seq: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    proto = rng.normal(size=(vocab, d_model)).astype(np.float32)
+    while True:
+        labels = rng.integers(0, vocab, size=(n_clients, local_steps, batch, seq))
+        frames = proto[labels] + 0.5 * rng.normal(size=(n_clients, local_steps, batch, seq, d_model)).astype(np.float32)
+        mask = rng.random((n_clients, local_steps, batch, seq)) < 0.3
+        yield {"frames": frames.astype(np.float32), "labels": labels.astype(np.int32), "mask": mask}
+
+
+def scene_images(rng: np.random.Generator, batch: int, size: int, n_classes: int, max_boxes: int = 3):
+    """Procedural detection scenes: bright rectangles = objects.
+
+    Returns (images (B,size,size,3) f32, boxes list[list[BBox]]).
+    """
+    imgs = rng.normal(0.0, 0.05, size=(batch, size, size, 3)).astype(np.float32)
+    all_boxes: list[list[BBox]] = []
+    for b in range(batch):
+        boxes = []
+        for _ in range(int(rng.integers(1, max_boxes + 1))):
+            w, h = rng.uniform(0.15, 0.5, 2)
+            x = rng.uniform(w / 2, 1 - w / 2)
+            y = rng.uniform(h / 2, 1 - h / 2)
+            label = int(rng.integers(0, n_classes))
+            x0, y0 = int((x - w / 2) * size), int((y - h / 2) * size)
+            x1, y1 = int((x + w / 2) * size), int((y + h / 2) * size)
+            color = np.zeros(3, np.float32)
+            color[label % 3] = 1.0
+            imgs[b, y0:y1, x0:x1] += color  # class-colored rectangle
+            boxes.append(BBox(label, x, y, w, h))
+        all_boxes.append(boxes)
+    return imgs, all_boxes

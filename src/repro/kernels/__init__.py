@@ -1,0 +1,4 @@
+"""Pallas TPU kernels (validated via interpret=True on CPU) + jnp oracles."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg_masked_mean(stacked: jax.Array, weights: jax.Array, mask: jax.Array) -> jax.Array:
+    """Fused Eq.5 + Eq.6 for one layer tensor.
+
+    stacked: (C, N); weights: (C,) scheduler weights; mask: (C,) 0/1 upload
+    mask for this layer. out[n] = sum_c w_c m_c x_cn / max(sum_c w_c m_c, eps).
+    """
+    wm = (weights * mask).astype(jnp.float32)
+    num = jnp.einsum("c,cn->n", wm, stacked.astype(jnp.float32))
+    den = jnp.maximum(jnp.sum(wm), 1e-12)
+    return (num / den).astype(stacked.dtype)
+
+
+def quantize_blocks(x: jax.Array, block: int) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 per block of `block` elements. x: (N,), N % block == 0.
+
+    Returns (q int8 (N,), scales f32 (N/block,)).
+    """
+    xb = x.reshape(-1, block).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def dequantize_blocks(q: jax.Array, scales: jax.Array, block: int, dtype=jnp.float32) -> jax.Array:
+    qb = q.reshape(-1, block).astype(jnp.float32)
+    return (qb * scales[:, None]).reshape(-1).astype(dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, window: int = 0) -> jax.Array:
+    """Reference attention. q: (B, H, S, hd); k/v: (B, Hkv, S, hd).
+
+    GQA mapping: q head h uses kv head h // (H // Hkv). window > 0 limits
+    causal attention to the trailing `window` positions.
+    """
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, S, hd)
+    scores = jnp.einsum("bkgsh,bkth->bkgst", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= qp - kp < window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bkth->bkgsh", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def ssd_chunk(xdt: jax.Array, dA: jax.Array, Bm: jax.Array, Cm: jax.Array):
+    """Intra-chunk SSD for ONE chunk (the Pallas kernel body's math).
+
+    xdt: (Q, H, P) [x*dt]; dA: (Q, H); Bm/Cm: (Q, N).
+    Returns (y_diag (Q,H,P), states (H,P,N), chunk_decay (H,)).
+    """
+    Q = xdt.shape[0]
+    cum = jnp.cumsum(dA.astype(jnp.float32), axis=0)  # (Q,H)
+    diff = cum[:, None, :] - cum[None, :, :]  # (Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[:, :, None]
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("qn,tn->qt", Cm.astype(jnp.float32), Bm.astype(jnp.float32))
+    y_diag = jnp.einsum("qt,qth,thp->qhp", scores, L, xdt.astype(jnp.float32))
+    decay_states = jnp.exp(cum[-1:, :] - cum)  # (Q,H)
+    states = jnp.einsum("tn,th,thp->hpn", Bm.astype(jnp.float32), decay_states, xdt.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[-1])  # (H,)
+    return y_diag.astype(xdt.dtype), states, chunk_decay

@@ -1,0 +1,157 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 host placeholder devices, lowers the plan's step
+function with abstract inputs (no allocation), compiles, and records
+memory_analysis / cost_analysis / trip-count-aware HLO costs / the
+collective table into experiments/dryrun/<name>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--agg eq6] [--tag base]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ASSIGNED, SHAPES, shape_applicable
+from repro.launch import hlo_analysis, roofline, specs
+from repro.launch.mesh import make_production_mesh
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_one(arch_name: str, shape_name: str, multi_pod: bool, aggregation: str = "eq6", local_steps: int = 1, tag: str = "", variant: str = "") -> dict:
+    plan = specs.make_plan(arch_name, shape_name, multi_pod, aggregation, local_steps, variant)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    fn = specs.step_fn(plan, mesh, variant)
+    args, pspecs_ = specs.input_specs(plan)
+    shardings = specs.to_shardings(mesh, pspecs_)
+    donate = (0,) if plan.kind in ("train", "fedsgd") else ()
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=shardings, donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    costs = hlo_analysis.analyze(hlo, pod_boundary=256 if multi_pod else 0)
+    rl = roofline.terms(
+        costs.flops, costs.traffic, dict(costs.coll_bytes), n_dev, plan.arch,
+        plan.shape, local_steps, dict(costs.cross_pod_bytes)
+    )
+    rec = {
+        "name": plan.name + (f"--{tag}" if tag else ""),
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "kind": plan.kind,
+        "aggregation": plan.aggregation,
+        "variant": variant,
+        "local_steps": local_steps,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "total_per_device": ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes - ma.alias_size_in_bytes,
+        },
+        "xla_cost_analysis": {"flops": ca.get("flops"), "bytes_accessed": ca.get("bytes accessed")},
+        "hlo_costs": {
+            "flops_per_device": costs.flops,
+            "traffic_bytes_per_device": costs.traffic,
+            "collective_bytes": dict(costs.coll_bytes),
+            "collective_ops": dict(costs.coll_ops),
+            "cross_pod_bytes": dict(costs.cross_pod_bytes),
+        },
+        "roofline": rl.as_dict(),
+        "hlo_chars": len(hlo),
+    }
+    return rec
+
+
+def matrix(mesh_sel: str):
+    for arch in ASSIGNED:
+        for shape in SHAPES.values():
+            ok, why = shape_applicable(arch, shape)
+            for multi in ([False, True] if mesh_sel == "both" else [mesh_sel == "multi"]):
+                yield arch.name, shape.name, multi, ok, why
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--agg", default="eq6")
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    combos = []
+    if args.all:
+        combos = list(matrix(args.mesh))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        for multi in [False, True] if args.mesh == "both" else [args.mesh == "multi"]:
+            from repro.configs import get_arch, get_shape
+
+            arch_v = specs.variant_arch(get_arch(args.arch), args.variant)
+            ok, why = shape_applicable(arch_v, get_shape(args.shape))
+            combos.append((args.arch, args.shape, multi, ok, why))
+
+    failures = 0
+    for arch, shape, multi, ok, why in combos:
+        mesh_name = "multipod" if multi else "singlepod"
+        stem = f"{arch}--{shape}--{mesh_name}" + (f"--{args.tag}" if args.tag else "")
+        path = out_dir / f"{stem}.json"
+        if path.exists() and not args.force:
+            print(f"SKIP (cached) {stem}")
+            continue
+        if not ok:
+            path.write_text(json.dumps({"name": stem, "arch": arch, "shape": shape, "mesh": mesh_name, "skipped": why}, indent=1))
+            print(f"SKIP (n/a)    {stem}: {why}")
+            continue
+        print(f"RUN           {stem} ...", flush=True)
+        try:
+            rec = run_one(arch, shape, multi, args.agg, args.local_steps, args.tag, args.variant)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            path.write_text(json.dumps({"name": stem, "error": str(e), "traceback": traceback.format_exc()}, indent=1))
+            print(f"FAIL          {stem}: {e}")
+            continue
+        path.write_text(json.dumps(rec, indent=1))
+        r = rec["roofline"]
+        print(
+            f"OK            {stem}  compile={rec['compile_s']}s  "
+            f"mem/dev={rec['memory']['total_per_device']/2**30:.2f}GiB  "
+            f"terms(c/m/x)=({r['compute_s']:.2e},{r['memory_s']:.2e},{r['collective_s']:.2e})s  dom={r['dominant']}",
+            flush=True,
+        )
+    if failures:
+        raise SystemExit(f"{failures} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

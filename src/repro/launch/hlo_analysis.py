@@ -1,0 +1,299 @@
+"""Trip-count-aware HLO cost analyzer for the roofline.
+
+XLA's built-in `compiled.cost_analysis()` counts a `while` body ONCE, which
+undercounts scan-over-layers models by the layer count (measured in
+/tmp/spike_cost.py: 8-layer scan reported 1 layer of FLOPs). This module
+parses `compiled.as_text()` and walks the computation graph with while
+trip-count multipliers (`backend_config={"known_trip_count":{"n":...}}`).
+
+Cost model (documented in EXPERIMENTS.md §Roofline):
+- FLOPs: 2 * prod(result_shape) * prod(lhs contracting dims) per dot;
+  convolutions 2 * prod(result) * (kh*kw*cin); elementwise ignored (<2%).
+- HBM traffic: fusion-boundary model — every top-level op in a computation
+  is one kernel moving (operands + result) bytes; fusions are opaque;
+  dynamic-slice counts result*2, dynamic-update-slice update*2, broadcast
+  result only; bookkeeping ops free.
+- Collectives: result-shape bytes per kind; the roofline applies a ring
+  factor (all-reduce 2x) and divides by per-link ICI bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(.*?)\s+([a-z][a-z0-9-]*)\((.*)$"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%([^\s,)]+)")
+_BODY_RE = re.compile(r"body=%([^\s,)]+)")
+_COND_RE = re.compile(r"condition=%([^\s,)]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([^\s,()]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{(\{[0-9,{}]*\})\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?"
+)
+
+
+def _group_ranges(rest: str):
+    """Parse replica_groups -> list of (min_id, max_id) per group, or None."""
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        import numpy as np
+
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            arr = arr.transpose([int(x) for x in m.group(4).split(",")])
+        arr = arr.reshape(g, s)
+        return list(zip(arr.min(axis=1).tolist(), arr.max(axis=1).tolist()))
+    m = _GROUPS_EXPL_RE.search(rest)
+    if m:
+        groups = re.findall(r"\{([0-9,]+)\}", m.group(0))
+        out = []
+        for grp in groups:
+            ids = [int(x) for x in grp.split(",")]
+            out.append((min(ids), max(ids)))
+        return out
+    return None
+
+
+def crosses_boundary(rest: str, boundary: int) -> bool:
+    """True if any replica group spans the pod boundary (id < b and >= b)."""
+    ranges = _group_ranges(rest)
+    if not ranges:
+        return False
+    return any(lo < boundary <= hi for lo, hi in ranges)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> list[int]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result: str  # result type text
+    opcode: str
+    rest: str  # operand list + attributes
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    traffic: float = 0.0  # HBM bytes
+    coll_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+    coll_ops: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+    cross_pod_bytes: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * mult
+        for k, v in other.coll_ops.items():
+            self.coll_ops[k] += int(v * mult)
+        for k, v in other.cross_pod_bytes.items():
+            self.cross_pod_bytes[k] += v * mult
+
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator",
+    "opt-barrier", "custom-call", "reshape",
+}
+
+
+def parse_computations(hlo_text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    current: list[Instr] | None = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([^\s(]+)\s*\(.*\)\s*->.*\{$", stripped)
+        if header and not stripped.startswith("%new") and "=" not in stripped.split("(")[0]:
+            current = comps.setdefault(header.group(1), [])
+            continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            current.append(Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+def _dot_flops(instr: Instr, symtab: dict[str, str]) -> float:
+    out = 1
+    for d in _shape_dims(instr.result):
+        out *= d
+    m = _LHS_CONTRACT_RE.search(instr.rest)
+    contract = [int(x) for x in m.group(1).split(",") if x] if m else []
+    # first operand = lhs
+    operands = _OPERAND_RE.findall(instr.rest.split(")", 1)[0])
+    k = 1
+    if operands:
+        lhs_dims = _shape_dims(symtab.get(operands[0], ""))
+        for c in contract:
+            if c < len(lhs_dims):
+                k *= lhs_dims[c]
+    return 2.0 * out * max(k, 1)
+
+
+def _conv_flops(instr: Instr, symtab: dict[str, str]) -> float:
+    out = 1
+    for d in _shape_dims(instr.result):
+        out *= d
+    m = _WINDOW_RE.search(instr.rest)
+    k = 1
+    if m:
+        for d in m.group(1).split("x"):
+            k *= int(d)
+    operands = _OPERAND_RE.findall(instr.rest.split(")", 1)[0])
+    cin = 1
+    if len(operands) > 1:
+        rhs_dims = _shape_dims(symtab.get(operands[1], ""))
+        if len(rhs_dims) >= 2:
+            cin = rhs_dims[-2]  # HWIO input-feature dim
+    return 2.0 * out * k * cin
+
+
+def analyze(hlo_text: str, entry: str | None = None, pod_boundary: int = 0) -> Costs:
+    """pod_boundary > 0 additionally classifies collectives whose replica
+    groups span device ids across the boundary (= cross-pod/DCN traffic)."""
+    comps = parse_computations(hlo_text)
+    if not comps:
+        return Costs()
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([^\s(]+)", hlo_text, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+    memo: dict[str, Costs] = {}
+
+    def comp_cost(name: str) -> Costs:
+        if name in memo:
+            return memo[name]
+        memo[name] = Costs()  # break cycles defensively
+        instrs = comps.get(name, [])
+        symtab = {i.name: i.result for i in instrs}
+        total = Costs()
+        for ins in instrs:
+            op = ins.opcode
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                b = _shape_bytes(ins.result)
+                total.coll_bytes[base] += b
+                total.coll_ops[base] += 1
+                total.traffic += b + _operand_bytes(ins, symtab)
+                if pod_boundary and crosses_boundary(ins.rest, pod_boundary):
+                    total.cross_pod_bytes[base] += b
+                continue
+            if op == "while":
+                trips = 1
+                tm = _TRIP_RE.search(ins.rest)
+                if tm:
+                    trips = int(tm.group(1))
+                bm = _BODY_RE.search(ins.rest)
+                cm = _COND_RE.search(ins.rest)
+                if bm:
+                    total.add(comp_cost(bm.group(1)), trips)
+                if cm:
+                    total.add(comp_cost(cm.group(1)), trips)
+                continue
+            if op == "conditional":
+                bm = _BRANCHES_RE.search(ins.rest)
+                if bm:
+                    branches = _OPERAND_RE.findall(bm.group(1))
+                    costs = [comp_cost(b) for b in branches]
+                    if costs:
+                        worst = max(costs, key=lambda c: c.flops + c.traffic)
+                        total.add(worst)
+                continue
+            if op in ("call", "async-start"):
+                cm = _CALLS_RE.search(ins.rest)
+                if cm:
+                    total.add(comp_cost(cm.group(1)))
+                continue
+            if op == "fusion":
+                cm = _CALLS_RE.search(ins.rest)
+                if cm:
+                    inner = comp_cost(cm.group(1))
+                    # fusion is one kernel: flops/collectives from inside,
+                    # traffic from the boundary
+                    total.flops += inner.flops
+                    for k, v in inner.coll_bytes.items():
+                        total.coll_bytes[k] += v
+                    for k, v in inner.coll_ops.items():
+                        total.coll_ops[k] += v
+                total.traffic += _shape_bytes(ins.result) + _operand_bytes(ins, symtab)
+                continue
+            if op == "dot":
+                total.flops += _dot_flops(ins, symtab)
+                total.traffic += _shape_bytes(ins.result) + _operand_bytes(ins, symtab)
+                continue
+            if op == "convolution":
+                total.flops += _conv_flops(ins, symtab)
+                total.traffic += _shape_bytes(ins.result) + _operand_bytes(ins, symtab)
+                continue
+            if op in _FREE_OPS:
+                continue
+            if op == "dynamic-slice":
+                total.traffic += 2 * _shape_bytes(ins.result)
+                continue
+            if op == "dynamic-update-slice":
+                ops_ = _OPERAND_RE.findall(ins.rest.split(")", 1)[0])
+                upd = _shape_bytes(symtab.get(ops_[1], "")) if len(ops_) > 1 else 0
+                total.traffic += 2 * upd
+                continue
+            if op == "broadcast":
+                total.traffic += _shape_bytes(ins.result)
+                continue
+            if op == "copy":
+                total.traffic += 2 * _shape_bytes(ins.result)
+                continue
+            # generic elementwise / reduce / transpose / concatenate ...
+            total.traffic += _shape_bytes(ins.result) + _operand_bytes(ins, symtab)
+        memo[name] = total
+        return total
+
+    def _operand_bytes(ins: Instr, symtab: dict[str, str]) -> int:
+        names = _OPERAND_RE.findall(ins.rest.split(")", 1)[0])
+        return sum(_shape_bytes(symtab.get(n, "")) for n in names)
+
+    return comp_cost(entry)

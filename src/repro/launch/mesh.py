@@ -1,0 +1,31 @@
+"""Production meshes (DESIGN.md §4).
+
+Functions, not module-level constants: importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over real host devices (examples / smoke tests)."""
+    n = data * model
+    assert n <= len(jax.devices()), (n, len(jax.devices()))
+    return jax.make_mesh(
+        (data, model), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+
+
+# TPU v5e hardware model for the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link

@@ -1,0 +1,107 @@
+"""Roofline-term computation from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+All parsed HLO numbers are per-device (the compiled module is the SPMD
+partition); terms are seconds per step on one chip, the max defines the
+bottleneck.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import rounds as R
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DCN_BW = 25e9  # cross-pod (inter-slice) bandwidth per device, B/s
+from repro.models import params as mp
+
+# ring all-reduce moves ~2x the payload per device; others ~1x
+COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "ragged-all-to-all": 1.0,
+    "collective-broadcast": 1.0,
+}
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    cross_pod_s: float = 0.0
+    cross_pod_bytes: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def expert_params(arch: ArchConfig) -> int:
+    if not arch.n_experts:
+        return 0
+    per_layer = 3 * arch.d_model * arch.d_ff * arch.n_experts
+    return per_layer * arch.n_layers
+
+
+def active_params(arch: ArchConfig) -> int:
+    tpl = R.make_template(arch)
+    n = mp.count_params(tpl)
+    if arch.n_experts:
+        ep = expert_params(arch)
+        n = n - ep + int(ep * arch.experts_per_token / arch.n_experts)
+    return n
+
+
+def model_flops(arch: ArchConfig, shape: ShapeConfig, local_steps: int = 1) -> float:
+    """MODEL_FLOPS: 6*N_active*D train, 2*N_active*D inference (+KV reads)."""
+    n = active_params(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len * local_steps
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    # decode: one token; add the attention context reads as flops
+    flops = 2.0 * n * shape.global_batch
+    if arch.n_heads and arch.family != "ssm":
+        hd = arch.resolved_head_dim
+        S = shape.seq_len
+        if arch.family == "hybrid":
+            # only the shared attention block applications read a KV cache
+            n_attn_reads = (arch.n_layers // arch.shared_attn_period) * S
+        elif arch.local_global_period:
+            ng, nt = divmod(arch.n_layers, arch.local_global_period)
+            n_local = ng * (arch.local_global_period - 1) + nt
+            n_global = arch.n_layers - n_local
+            W = min(arch.window, S)
+            n_attn_reads = n_global * S + n_local * W
+        else:
+            n_attn_reads = arch.n_layers * S
+        flops += 4.0 * arch.n_heads * hd * n_attn_reads * shape.global_batch
+    return flops
+
+
+def terms(flops_dev: float, traffic_dev: float, coll_bytes: dict, n_devices: int, arch: ArchConfig, shape: ShapeConfig, local_steps: int = 1, cross_pod_bytes: dict | None = None) -> Roofline:
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = traffic_dev / HBM_BW
+    coll_s = sum(COLLECTIVE_FACTOR.get(k, 1.0) * v for k, v in coll_bytes.items()) / ICI_BW
+    cross_b = sum((cross_pod_bytes or {}).values())
+    cross_s = sum(
+        COLLECTIVE_FACTOR.get(k, 1.0) * v for k, v in (cross_pod_bytes or {}).items()
+    ) / DCN_BW
+    dom = max(
+        [("compute", compute_s), ("memory", memory_s), ("collective", coll_s), ("cross-pod", cross_s)],
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(arch, shape, local_steps)
+    total_hlo = flops_dev * n_devices
+    ratio = mf / total_hlo if total_hlo else math.nan
+    return Roofline(compute_s, memory_s, coll_s, dom, mf, total_hlo, ratio, cross_s, cross_b)

@@ -1,0 +1,79 @@
+"""Serving launcher: batched prefill + decode with the global federated model.
+
+CPU-runnable at reduced size; the production-mesh serve plans (32k decode,
+500k long-context) are exercised via launch.dryrun.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import params as P
+from repro.models import serving as S
+from repro.models import transformer as T
+
+
+def generate(cfg, params, prompts: jax.Array, new_tokens: int, images=None, temperature: float = 0.0, seed: int = 0):
+    B, Sq = prompts.shape
+    ni = cfg.n_image_tokens if cfg.modality == "vlm" else 0
+    batch = {"tokens": prompts}
+    if ni:
+        batch["images"] = images
+    max_len = ni + Sq + new_tokens
+    logits, cache = jax.jit(lambda p, b: S.prefill(cfg, p, b, max_len=max_len))(params, batch)
+    step = jax.jit(lambda p, c, t, pos: S.decode_step(cfg, p, c, t, pos))
+    out = []
+    key = jax.random.key(seed)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for i in range(new_tokens):
+        out.append(tok)
+        logits, cache = step(params, cache, tok, jnp.int32(ni + Sq + i))
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, -1] / temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    if not cfg.has_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode step (DESIGN.md)")
+    params = P.init_params(T.template(cfg), jax.random.key(0), jnp.float32)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+    images = (
+        jnp.asarray(rng.normal(size=(args.batch, cfg.n_image_tokens, cfg.d_model)) * 0.1, jnp.float32)
+        if cfg.modality == "vlm"
+        else None
+    )
+    t0 = time.time()
+    toks = generate(cfg, params, prompts, args.new_tokens, images, args.temperature)
+    dt = time.time() - t0
+    print(json.dumps({
+        "arch": cfg.name,
+        "generated": np.asarray(toks[0]).tolist(),
+        "tokens_per_s": round(args.batch * args.new_tokens / dt, 2),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,312 @@
+"""Per-(arch x shape x mesh) lowering policy: step fn + abstract inputs + shardings.
+
+This is the single source of truth consumed by launch.dryrun, launch.train
+and launch.serve. For every combination it decides:
+- which step function lowers (fed_round / fedsgd step / prefill / decode),
+- the federated client mapping (DESIGN.md §4),
+- parameter/batch/cache PartitionSpecs, including FSDP-style rules for the
+  architectures whose optimizer state exceeds per-device HBM under pure TP
+  (gemma3-27b, grok-1-314b, llava-next-34b — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch, get_shape, shape_applicable
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import rounds as R
+from repro.models import params as mp
+from repro.models import serving, transformer
+from repro.models.params import DEFAULT_RULES
+from repro.optim import adamw
+
+PyTree = Any
+
+# Architectures needing parameter/optimizer sharding over the data axis.
+FSDP_ARCHS = {"gemma3-27b", "grok-1-314b", "llava-next-34b"}
+MODEL_AXIS = 16  # model-parallel width of both production meshes
+
+
+def fsdp_rules() -> dict:
+    rules = dict(DEFAULT_RULES)
+    rules["embed"] = "data"  # ZeRO/FSDP-style: shard the d_model dim
+    return rules
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweringPlan:
+    arch: ArchConfig
+    shape: ShapeConfig
+    multi_pod: bool
+    kind: str  # train | fedsgd | prefill | decode
+    fed: R.FedConfig | None
+    rules: dict
+    dp_axes: tuple[str, ...]  # serve batch axes
+    aggregation: str
+    opt_rules: dict | None = None  # ZeRO-1: separate moment sharding
+
+    @property
+    def name(self) -> str:
+        mesh = "multipod" if self.multi_pod else "singlepod"
+        return f"{self.arch.name}--{self.shape.name}--{mesh}"
+
+
+# §Perf hillclimb variants (EXPERIMENTS.md):
+#   moe_sort   — sort/gather-scatter MoE dispatch (no one-hot einsum FLOPs)
+#   moe_ep     — expert-parallel: experts over "model" instead of d_ff
+#   moe_sort_ep— both
+#   zero1      — params TP-only, optimizer moments sharded over "data"
+#   micro<N>   — override microbatch count
+#   seqpar     — sequence-parallel residual stream (S over "model")
+#   swa        — sliding-window serving variant for dense archs (enables
+#                long_500k with ring-buffer KV caches; beyond-paper)
+VARIANTS = ("", "moe_sort", "moe_ep", "moe_sort_ep", "zero1", "seqpar", "swa")
+SWA_WINDOW = 4096
+
+
+def variant_arch(arch: ArchConfig, variant: str) -> ArchConfig:
+    """Arch-level transforms that must precede shape-applicability checks."""
+    if variant == "swa" and not arch.window:
+        return dataclasses.replace(arch, window=SWA_WINDOW)
+    return arch
+
+
+def apply_variant(arch: ArchConfig, rules: dict, fed, variant: str):
+    opt_rules = None
+    if variant.startswith("micro") and fed is not None:
+        fed = dataclasses.replace(fed, microbatches=int(variant[5:]))
+    if variant in ("moe_sort", "moe_sort_ep"):
+        arch = dataclasses.replace(arch, moe_impl="sort")
+    if variant in ("moe_ep", "moe_sort_ep"):
+        rules = dict(rules)
+        rules["expert"] = "model"
+        rules["ffn"] = None
+    if variant == "zero1":
+        opt_rules = dict(rules)
+        rules = {k: v for k, v in rules.items() if k != "embed" or v != "data"}
+        rules["embed"] = None
+        opt_rules["embed"] = "data"
+    return arch, rules, fed, opt_rules
+
+
+def make_plan(arch_name: str, shape_name: str, multi_pod: bool, aggregation: str = "eq6", local_steps: int = 1, variant: str = "") -> LoweringPlan:
+    arch = variant_arch(get_arch(arch_name), variant)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(arch, shape)
+    if not ok:
+        raise ValueError(f"{arch_name} x {shape_name}: {why}")
+    big = arch.name in FSDP_ARCHS
+    if shape.kind == "train":
+        # microbatch counts target ~2 rows of 4k tokens per device per
+        # microbatch, bounding the remat'd saved-carry stack.
+        if multi_pod:
+            fed = R.FedConfig(n_clients=2, local_steps=local_steps, aggregation=aggregation, client_axis="pod", data_axis="data", topn=default_topn(arch), microbatches=8 if big else 4)
+            rules = fsdp_rules() if big else dict(DEFAULT_RULES)
+            kind = "train"
+        elif big:
+            # single-pod: FedSGD-equivalent (E=1 param-avg == grad-avg) so
+            # one model copy can shard over both axes.
+            fed = R.FedConfig(n_clients=16, local_steps=local_steps, aggregation="fedsgd", client_axis="data", data_axis="data", topn=default_topn(arch), microbatches=8)
+            rules = fsdp_rules()
+            kind = "fedsgd"
+        else:
+            fed = R.FedConfig(n_clients=16, local_steps=local_steps, aggregation=aggregation, client_axis="data", data_axis=None, topn=default_topn(arch), microbatches=8)
+            rules = dict(DEFAULT_RULES)
+            kind = "train"
+        arch, rules, fed, opt_rules = apply_variant(arch, rules, fed, variant)
+        return LoweringPlan(arch, shape, multi_pod, kind, fed, rules, (), fed.aggregation, opt_rules)
+    # serving
+    rules = dict(DEFAULT_RULES)
+    if arch.name == "grok-1-314b":
+        rules["embed"] = "data"  # 314B bf16 exceeds HBM under pure TP
+    dp = ("pod", "data") if multi_pod else ("data",)
+    kind = "prefill" if shape.kind == "prefill" else "decode"
+    arch, rules, _, opt_rules = apply_variant(arch, rules, None, variant)
+    return LoweringPlan(arch, shape, multi_pod, kind, None, rules, dp, "none", opt_rules)
+
+
+def default_topn(arch: ArchConfig) -> int:
+    """Paper: user-set n. Default: a quarter of the layer buckets."""
+    return max(1, (arch.n_layers + 1) // 4)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_template(arch: ArchConfig, lead: tuple[int, ...], seq: int) -> PyTree:
+    """Model inputs with `lead` prefix dims ((C,E,b) for train, (B,) serve)."""
+    if arch.modality == "audio":
+        return {
+            "frames": _sds(lead + (seq, arch.d_model), jnp.bfloat16),
+            "labels": _sds(lead + (seq,), jnp.int32),
+            "mask": _sds(lead + (seq,), jnp.bool_),
+        }
+    if arch.modality == "vlm":
+        ni = arch.n_image_tokens
+        return {
+            "tokens": _sds(lead + (seq - ni,), jnp.int32),
+            "images": _sds(lead + (ni, arch.d_model), jnp.bfloat16),
+        }
+    return {"tokens": _sds(lead + (seq,), jnp.int32)}
+
+
+def batch_pspec_tree(arch: ArchConfig, batch: PyTree, lead_spec: tuple) -> PyTree:
+    def spec_for(leaf):
+        extra = (None,) * (len(leaf.shape) - len(lead_spec))
+        return P(*lead_spec, *extra)
+
+    return jax.tree.map(spec_for, batch)
+
+
+def input_specs(plan: LoweringPlan) -> tuple[PyTree, PyTree]:
+    """Returns (abstract_args, pspecs) for the plan's step function."""
+    arch, shape = plan.arch, plan.shape
+    S, B = shape.seq_len, shape.global_batch
+    optimizer = adamw()
+    if plan.kind in ("train", "fedsgd"):
+        fed = plan.fed
+        state = R.state_template(arch, fed, optimizer, jnp.bfloat16)
+        sspec = R.state_pspecs(arch, fed, optimizer, plan.rules, plan.opt_rules)
+        if plan.kind == "fedsgd":
+            batch = batch_template(arch, (fed.local_steps, B), S)
+            bspec = batch_pspec_tree(arch, batch, (None, ("pod", "data") if plan.multi_pod else ("data",)))
+        else:
+            b = B // fed.n_clients
+            batch = batch_template(arch, (fed.n_clients, fed.local_steps, b), S)
+            bspec = batch_pspec_tree(arch, batch, (fed.client_axis, None, fed.data_axis))
+        w = _sds((fed.n_clients,), jnp.float32)
+        return (state, batch, w), (sspec, bspec, P())
+    # serving: global (aggregated) model
+    tpl = R.make_template(arch)
+    params = mp.abstract(tpl, jnp.bfloat16)
+    pspec = mp.pspecs(tpl, plan.rules)
+    if plan.kind == "prefill":
+        batch = batch_template(arch, (B,), S)
+        bspec = batch_pspec_tree(arch, batch, (plan.dp_axes,))
+        return (params, batch), (pspec, bspec)
+    # decode
+    cache = serving.cache_spec(arch, B, S, abstract=True)
+    cspec = cache_pspecs(arch, B, plan.dp_axes)
+    tokens = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    tspec = P(plan.dp_axes if B > 1 else None, None)
+    return (params, cache, tokens, pos), (pspec, cspec, tspec, P())
+
+
+def cache_pspecs(arch: ArchConfig, B: int, dp_axes: tuple[str, ...]) -> PyTree:
+    """PartitionSpecs mirroring serving.cache_spec structure (DESIGN.md §4)."""
+    dp = dp_axes if B > 1 else None
+    kv_ok = arch.n_kv_heads % MODEL_AXIS == 0 if arch.n_kv_heads else False
+    if arch.family in ("dense", "vlm", "audio", "moe") and not arch.local_global_period:
+        if kv_ok:
+            spec = P(None, dp, None, "model", None)
+        else:  # shard the cache sequence dim instead (flash-decode style)
+            spec = P(None, dp, "model", None, None)
+        return {"k": spec, "v": spec}
+    if arch.local_global_period:
+        head_ax = "model" if kv_ok else None
+        long_seq = None if B > 1 else "data"  # long_500k: shard S over data
+        local = P(None, None, dp, None, head_ax, None)
+        glob_spec = P(None, dp, long_seq, head_ax, None)
+        out = {"g_local": {"k": local, "v": local}, "g_global": {"k": glob_spec, "v": glob_spec}}
+        ng, nt = transformer.gemma_pattern(arch)
+        if nt:
+            tail = P(None, dp, None, head_ax, None)
+            out["tail"] = {"k": tail, "v": tail}
+        return out
+    if arch.family == "ssm":
+        from repro.models import mamba2 as m2
+
+        _, h, _ = m2.dims(arch)
+        head_ax = "model" if h % MODEL_AXIS == 0 else None
+        return {
+            "ssm": P(None, dp, head_ax, None, None),
+            "conv": P(None, dp, None, None),
+        }
+    if arch.family == "hybrid":
+        from repro.models import mamba2 as m2
+
+        _, h, _ = m2.dims(arch)
+        head_ax = "model" if h % MODEL_AXIS == 0 else None
+        kv_ax = "model" if kv_ok else None
+        long_seq = None if B > 1 else "data"
+        return {
+            "ssm": P(None, None, dp, head_ax, None, None),
+            "conv": P(None, None, dp, None, None),
+            "shared": {
+                "k": P(None, dp, long_seq, kv_ax, None),
+                "v": P(None, dp, long_seq, kv_ax, None),
+            },
+        }
+    raise ValueError(arch.family)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def _act_axes(plan: LoweringPlan):
+    """Activation batch-dim sharding for the plan (see models.shard_ctx)."""
+    if plan.kind == "fedsgd":
+        return ("pod", "data") if plan.multi_pod else ("data",)
+    if plan.kind == "train":
+        # () -> constraint exists so vmap(spmd_axis_name) prepends the
+        # client axis; data_axis added when within-client DP is present.
+        return (plan.fed.data_axis,) if plan.fed.data_axis else ()
+    return plan.dp_axes if plan.shape.global_batch > 1 else None
+
+
+def step_fn(plan: LoweringPlan, mesh, variant: str = ""):
+    from repro.models.shard_ctx import activation_sharding
+
+    arch = plan.arch
+    optimizer = adamw()
+    axes = _act_axes(plan)
+    seq_axis = "model" if variant == "seqpar" else None
+    if plan.kind in ("train", "fedsgd"):
+        inner = R.build_fed_round(arch, plan.fed, optimizer, mesh, plan.rules)
+
+        def fed_wrapped(state, batch, weights):
+            with activation_sharding(axes, seq_axis):
+                return inner(state, batch, weights)
+
+        return fed_wrapped
+    if plan.kind == "prefill":
+        if arch.is_encoder_only:
+            # encoder inference: full-sequence logits (no cache)
+            def enc_fwd(params, batch):
+                with activation_sharding(axes):
+                    x = transformer.embed_inputs(arch, params, batch)
+                    hidden, _ = transformer.trunk(arch, params, x)
+                    return transformer.logits_fn(arch, params, hidden)
+
+            return enc_fwd
+
+        def prefill_wrapped(params, batch):
+            with activation_sharding(axes):
+                return serving.prefill(arch, params, batch)
+
+        return prefill_wrapped
+
+    def decode_wrapped(params, cache, tokens, pos):
+        with activation_sharding(axes):
+            return serving.decode_step(arch, params, cache, tokens, pos)
+
+    return decode_wrapped
+
+
+def to_shardings(mesh, pspecs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P)
+    )

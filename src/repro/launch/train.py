@@ -1,0 +1,96 @@
+"""Federated training launcher.
+
+Runs the FedVision HFL loop (FL_SERVER + scheduler + Explorer + COS
+checkpoints) for any assigned architecture at a CPU-runnable reduced size,
+or emits the production-mesh launch configuration with --print-plan.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --rounds 20
+  PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+      --agg quant8 --clients 8 --local-steps 2
+  PYTHONPATH=src python -m repro.launch.train --arch grok-1-314b --print-plan
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ObjectStore
+from repro.configs import get_arch
+from repro.core.rounds import FedConfig
+from repro.core.scheduler import SchedulerConfig, TaskScheduler
+from repro.core.server import FLServer
+from repro.data.pipeline import fed_batches
+from repro.launch import specs
+from repro.optim import adamw, sgd
+
+
+def print_plan(arch_name: str) -> None:
+    for multi in (False, True):
+        plan = specs.make_plan(arch_name, "train_4k", multi)
+        print(f"== {plan.name}")
+        print(f"   kind={plan.kind} aggregation={plan.aggregation}")
+        if plan.fed:
+            print(f"   clients={plan.fed.n_clients} client_axis={plan.fed.client_axis} "
+                  f"data_axis={plan.fed.data_axis} microbatches={plan.fed.microbatches} topn={plan.fed.topn}")
+        print(f"   rules={ {k: v for k, v in plan.rules.items() if v} }")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--agg", default="eq6", choices=["dense", "eq6", "quant8", "static_topn"])
+    ap.add_argument("--topn", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
+    ap.add_argument("--full-size", action="store_true", help="use the full (non-reduced) config")
+    ap.add_argument("--store", default="", help="COS object-store directory")
+    ap.add_argument("--print-plan", action="store_true")
+    args = ap.parse_args()
+
+    if args.print_plan:
+        print_plan(args.arch)
+        return
+
+    cfg = get_arch(args.arch)
+    if not args.full_size:
+        cfg = cfg.reduced()
+    fed = FedConfig(
+        n_clients=args.clients,
+        local_steps=args.local_steps,
+        aggregation=args.agg,
+        topn=args.topn or specs.default_topn(cfg),
+        client_axis="data",
+        data_axis=None,
+    )
+    optimizer = adamw(args.lr) if args.optimizer == "adamw" else sgd(args.lr)
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    store = ObjectStore(args.store) if args.store else None
+    with jax.set_mesh(mesh):
+        server = FLServer(
+            cfg,
+            fed,
+            optimizer,
+            store=store,
+            scheduler=TaskScheduler(fed.n_clients, SchedulerConfig(max_participants=max(2, fed.n_clients // 2))),
+            mesh=mesh,
+            checkpoint_every=5 if store else 0,
+            task_id=args.arch,
+        )
+        batches = (
+            jax.tree.map(jnp.asarray, b)
+            for b in fed_batches(cfg, fed, batch=args.batch, seq=args.seq)
+        )
+        history = server.fit(batches, args.rounds)
+    print(json.dumps({"final_loss": history[-1].loss, "rounds": len(history)}))
+
+
+if __name__ == "__main__":
+    main()

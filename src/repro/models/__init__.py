@@ -1,0 +1,3 @@
+from repro.models import attention, layers, mamba2, moe, params, serving, transformer, yolov3
+
+__all__ = ["attention", "layers", "mamba2", "moe", "params", "serving", "transformer", "yolov3"]

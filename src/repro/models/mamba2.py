@@ -1,0 +1,222 @@
+"""Mamba2 SSD (state-space duality) block — chunked scan, pure JAX reference.
+
+Follows the minimal SSD formulation of arXiv:2405.21060: intra-chunk
+quadratic attention-like term + inter-chunk recurrent state, with the
+inter-chunk recurrence carried by ``lax.scan`` (so 500k-token sequences never
+materialize an (n_chunks x n_chunks) decay matrix). The intra-chunk einsums
+are mirrored by the Pallas kernel in ``repro.kernels.ssd_scan``.
+
+Projections are kept separate (wz/wx/wB/wC/wdt instead of one fused in_proj)
+so each output dimension carries a clean sharding axis (d_inner and heads on
+"model", the small B/C/state tensors replicated).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+from repro.models.params import ParamInfo
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_headdim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def mamba2_template(cfg, prefix_axes=("layer",), n_stack=()):
+    d = cfg.d_model
+    di, h, n = dims(cfg)
+    k = cfg.ssm_conv
+    pa, ns = prefix_axes, n_stack
+    return {
+        "wz": ParamInfo(ns + (d, di), pa + ("embed", "ssm_inner")),
+        "wx": ParamInfo(ns + (d, di), pa + ("embed", "ssm_inner")),
+        "wB": ParamInfo(ns + (d, n), pa + ("embed", "ssm_state")),
+        "wC": ParamInfo(ns + (d, n), pa + ("embed", "ssm_state")),
+        "wdt": ParamInfo(ns + (d, h), pa + ("embed", "heads")),
+        "conv_x": ParamInfo(ns + (k, di), pa + ("conv", "ssm_inner"), init="small_normal"),
+        "conv_B": ParamInfo(ns + (k, n), pa + ("conv", "ssm_state"), init="small_normal"),
+        "conv_C": ParamInfo(ns + (k, n), pa + ("conv", "ssm_state"), init="small_normal"),
+        "A_log": ParamInfo(ns + (h,), pa + ("heads",), init="zeros"),
+        "D": ParamInfo(ns + (h,), pa + ("heads",), init="ones"),
+        "dt_bias": ParamInfo(ns + (h,), pa + ("heads",), init="zeros"),
+        "gate_norm": ParamInfo(ns + (di,), pa + ("ssm_inner",), init="zeros"),
+        "wo": ParamInfo(ns + (di, d), pa + ("ssm_inner", "embed")),
+    }
+
+
+def causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B,S,C), w (k,C) -> (B,S,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : xp.shape[1] - (k - 1 - i), :] * w[i] for i in range(k))
+    return out
+
+
+def ssd_chunked(xdt, dA, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD. xdt (b,s,h,p) [x*dt folded], dA (b,s,h), Bm/Cm (b,s,n).
+
+    Returns y (b,s,h,p) and final state (b,h,p,n). f32 decay math.
+    """
+    b, s, h, p = xdt.shape
+    n = Bm.shape[-1]
+    s_orig = s
+    if s % chunk:  # right-pad to a chunk multiple (dA=0 -> decay 1, xdt=0)
+        pad = chunk - s % chunk
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    xdt_c = xdt.reshape(b, nc, chunk, h, p)
+    dA_c = dA.reshape(b, nc, chunk, h).astype(jnp.float32)
+    B_c = Bm.reshape(b, nc, chunk, n)
+    C_c = Cm.reshape(b, nc, chunk, n)
+    cum = jnp.cumsum(dA_c, axis=2)  # (b,nc,Q,h)
+    # intra-chunk decay L[q,t] = exp(cum[q]-cum[t]), q >= t
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,Q,Q,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    L = jnp.where(tri, jnp.exp(diff), 0.0).astype(xdt.dtype)
+    scores = jnp.einsum("bcqn,bctn->bcqt", C_c, B_c)
+    y_diag = jnp.einsum("bcqt,bcqth,bcthp->bcqhp", scores, L, xdt_c)
+    # per-chunk state contribution and total chunk decay
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum).astype(xdt.dtype)  # (b,nc,Q,h)
+    states = jnp.einsum("bctn,bcth,bcthp->bchpn", B_c, decay_states, xdt_c)
+    chunk_decay = jnp.exp(cum[:, :, -1, :]).astype(xdt.dtype)  # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st, cd = inp  # (b,h,p,n), (b,h)
+        new = carry * cd[:, :, None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    init = (
+        jnp.zeros((b, h, p, n), xdt.dtype)
+        if init_state is None
+        else init_state.astype(xdt.dtype)
+    )
+    final_state, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,h,p,n)
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp",
+        C_c,
+        prev_states,
+        jnp.exp(cum).astype(xdt.dtype),
+    )
+    y = (y_diag + y_off).reshape(b, s, h, p)[:, :s_orig]
+    return y, final_state
+
+
+def mamba2_block(p: dict, x: jax.Array, cfg, return_state: bool = False):
+    """Full-sequence Mamba2 block. x (B,S,D) -> (B,S,D).
+
+    With return_state=True also returns the decode-ready layer state
+    {"ssm" (B,h,p,n) f32, "conv" (B,k-1,C) pre-activation tail}.
+    """
+    di, h, n = dims(cfg)
+    pdim = cfg.ssm_headdim
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    x_pre = jnp.einsum("bsd,de->bse", x, p["wx"])
+    B_pre = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    C_pre = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    xin = jax.nn.silu(causal_conv(x_pre, p["conv_x"]).astype(jnp.float32)).astype(x.dtype)
+    Bm = jax.nn.silu(causal_conv(B_pre, p["conv_B"]).astype(jnp.float32)).astype(x.dtype)
+    Cm = jax.nn.silu(causal_conv(C_pre, p["conv_C"]).astype(jnp.float32)).astype(x.dtype)
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (h,)
+    dA = dt * A  # (B,S,h)
+    xh = xin.reshape(*xin.shape[:2], h, pdim)
+    xdt = xh * dt[..., None].astype(x.dtype)
+    if getattr(cfg, "ssm_impl", "ref") == "pallas" and x.shape[1] % cfg.ssm_chunk == 0:
+        from repro.kernels import ops as kops
+
+        y, final_state = kops.ssd_full_trainable(xdt, dA, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y, final_state = ssd_chunked(xdt, dA, Bm, Cm, cfg.ssm_chunk)
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    if return_state:
+        k = cfg.ssm_conv
+        pre = jnp.concatenate([x_pre, B_pre, C_pre], axis=-1)  # (B,S,C)
+        conv_cache = pre[:, -(k - 1):, :]
+        S = x.shape[1]
+        if S < k - 1:
+            conv_cache = jnp.pad(pre, ((0, 0), (k - 1 - S, 0), (0, 0)))
+        return out, {"ssm": final_state.astype(jnp.float32), "conv": conv_cache}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode path: O(1)-in-seq recurrent state
+# ---------------------------------------------------------------------------
+
+def state_template(cfg, n_layers: int, batch: int):
+    di, h, n = dims(cfg)
+    k = cfg.ssm_conv
+    conv_ch = di + 2 * n  # x, B, C conv caches concatenated
+    return {
+        "ssm": jax.ShapeDtypeStruct((n_layers, batch, h, cfg.ssm_headdim, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((n_layers, batch, k - 1, conv_ch), jnp.bfloat16),
+    }
+
+
+def init_state(cfg, n_layers: int, batch: int, dtype=jnp.bfloat16):
+    di, h, n = dims(cfg)
+    k = cfg.ssm_conv
+    return {
+        "ssm": jnp.zeros((n_layers, batch, h, cfg.ssm_headdim, n), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, k - 1, di + 2 * n), dtype),
+    }
+
+
+def _conv_step(cache: jax.Array, new: jax.Array, w: jax.Array):
+    """cache (B,k-1,C), new (B,C), w (k,C) -> out (B,C), cache'."""
+    k = w.shape[0]
+    full = jnp.concatenate([cache, new[:, None, :]], axis=1)  # (B,k,C)
+    out = jnp.sum(full * w[None], axis=1)
+    return out, full[:, 1:]
+
+
+def mamba2_decode(p: dict, x: jax.Array, layer_state: dict, cfg):
+    """One-token step. x (B,1,D); layer_state {ssm (B,h,p,n), conv (B,k-1,C)}."""
+    di, h, n = dims(cfg)
+    pdim = cfg.ssm_headdim
+    xt = x[:, 0]  # (B,D)
+    z = jnp.einsum("bd,de->be", xt, p["wz"])
+    pre = jnp.concatenate(
+        [
+            jnp.einsum("bd,de->be", xt, p["wx"]),
+            jnp.einsum("bd,dn->bn", xt, p["wB"]),
+            jnp.einsum("bd,dn->bn", xt, p["wC"]),
+        ],
+        axis=-1,
+    )
+    w_all = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+    conv_out, conv_cache = _conv_step(layer_state["conv"], pre.astype(layer_state["conv"].dtype), w_all)
+    xin, Bm, Cm = jnp.split(conv_out, [di, di + n], axis=-1)
+    xin = jax.nn.silu(xin.astype(jnp.float32)).astype(x.dtype)
+    Bm = jax.nn.silu(Bm.astype(jnp.float32))
+    Cm = jax.nn.silu(Cm.astype(jnp.float32))
+    dt = jnp.einsum("bd,dh->bh", xt, p["wdt"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)  # (B,h)
+    xh = xin.reshape(-1, h, pdim).astype(jnp.float32)
+    ssm = layer_state["ssm"]
+    contrib = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm)
+    ssm = ssm * decay[:, :, None, None] + contrib
+    y = jnp.einsum("bhpn,bn->bhp", ssm, Cm)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["wo"])[:, None, :]
+    return out, {"ssm": ssm, "conv": conv_cache}

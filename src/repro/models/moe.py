@@ -1,0 +1,136 @@
+"""GShard-style top-k Mixture-of-Experts FFN (TPU-native dispatch einsums).
+
+Capacity-based one-hot dispatch/combine — the canonical TPU MoE formulation
+(GShard / Switch). Router aux load-balance loss included. Baseline sharding
+puts d_ff over the "model" axis; the expert-parallel variant (experts over
+"model", see core/rounds EP rules) is the §Perf hillclimb.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamInfo
+
+
+def moe_template(cfg, prefix_axes=("layer",), n_stack=()):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    pa, ns = prefix_axes, n_stack
+    return {
+        "router": ParamInfo(ns + (d, e), pa + ("embed", "expert"), init="small_normal"),
+        "w_gate": ParamInfo(ns + (e, d, f), pa + ("expert", "embed", "ffn")),
+        "w_up": ParamInfo(ns + (e, d, f), pa + ("expert", "embed", "ffn")),
+        "w_down": ParamInfo(ns + (e, f, d), pa + ("expert", "ffn", "embed")),
+    }
+
+
+def capacity(cfg, group_size: int) -> int:
+    cap = int(group_size * cfg.experts_per_token / cfg.n_experts * cfg.capacity_factor)
+    return max(cap, cfg.experts_per_token)
+
+
+def route(cfg, logits: jax.Array):
+    """logits (G, S, E) -> dispatch (G,S,E,C) bool, combine (G,S,E,C), aux loss.
+
+    Top-k per token, capacity-limited per expert within each group.
+    """
+    G, S, E = logits.shape
+    C = capacity(cfg, S)
+    k = cfg.experts_per_token
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (G,S,k)
+    # one-hot per choice: (G, S, k, E)
+    choice_oh = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)
+    # position of each (token, choice) within its expert queue, flattened over (S,k)
+    flat = choice_oh.reshape(G, S * k, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # (G, S*k, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(G, S, k)  # (G,S,k)
+    fits = pos < C
+    gate_vals = gate_vals * fits
+    pos_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * fits[..., None]  # (G,S,k,C)
+    # dispatch (G,S,E,C): token s goes to expert e at slot c
+    dispatch = jnp.einsum("gske,gskc->gsec", choice_oh, pos_oh)
+    combine = jnp.einsum("gsk,gske,gskc->gsec", gate_vals, choice_oh, pos_oh)
+    # aux load-balance loss (Switch): E * mean(fraction_tokens_e * mean_prob_e)
+    frac = jnp.mean(choice_oh[:, :, 0, :], axis=1)  # top-1 assignment fraction (G,E)
+    mean_prob = jnp.mean(probs, axis=1)  # (G,E)
+    aux = E * jnp.mean(jnp.sum(frac * mean_prob, axis=-1))
+    return dispatch, combine, aux
+
+
+def moe_block(p: dict, x: jax.Array, cfg):
+    """x: (B, S, D) -> (B, S, D), aux_loss.
+
+    Routing groups are `moe_group_size` token windows (GShard): capacity —
+    and therefore the one-hot dispatch tensors — stay bounded regardless of
+    sequence length. moe_impl="sort" switches to the gather/scatter dispatch
+    (no dispatch-einsum FLOPs; see EXPERIMENTS.md §Perf hillclimb #1).
+    """
+    if cfg.moe_impl == "sort":
+        return moe_block_sort(p, x, cfg)
+    B, S, D = x.shape
+    gs = min(cfg.moe_group_size, S)
+    ng = S // gs if S % gs == 0 else 1
+    if S % gs:
+        gs, ng = S, 1
+    # keep the batch dim separate (reshaping it into the group dim loses
+    # batch sharding through the dispatch tensors: measured 40 GiB/device
+    # f32 combine buffers on grok prefill)
+    xg = x.reshape(B, ng, gs, D)
+    logits = jnp.einsum("bgsd,de->bgse", xg, p["router"])
+    dispatch, combine, aux = jax.vmap(lambda lg: route(cfg, lg))(logits)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+    xe = jnp.einsum("bgsec,bgsd->bgecd", dispatch, xg)
+    g = jnp.einsum("bgecd,edf->bgecf", xe, p["w_gate"])
+    u = jnp.einsum("bgecd,edf->bgecf", xe, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("bgecf,efd->bgecd", h, p["w_down"])
+    y = jnp.einsum("bgsec,bgecd->bgsd", combine, ye)
+    return y.reshape(B, S, D), jnp.mean(aux).astype(jnp.float32)
+
+
+def moe_block_sort(p: dict, x: jax.Array, cfg):
+    """Sort-based (gather/scatter) top-k dispatch: no one-hot einsum FLOPs.
+
+    Per batch row: flatten (token, choice) pairs, argsort by expert, rank
+    within expert -> capacity slot, gather rows into (E, C, D), run the
+    expert FFN, scale by gates and scatter-add back. Dispatch/combine are
+    pure data movement (gather/scatter), so HLO FLOPs ~= expert FFN FLOPs.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    C = capacity(cfg, S)
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    flat_e = expert_idx.reshape(B, S * k)
+    flat_tok = jnp.broadcast_to(jnp.arange(S)[:, None], (S, k)).reshape(S * k)
+    flat_g = gate_vals.reshape(B, S * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)  # (B, S*k)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    stok = flat_tok[order]  # (B, S*k) token index per sorted entry
+    sgate = jnp.take_along_axis(flat_g, order, axis=-1)
+    # rank within expert = position - first position of that expert
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(se)  # (B,E)
+    rank = jnp.arange(S * k)[None] - jnp.take_along_axis(starts, se, axis=-1)
+    keep = rank < C
+    slot = jnp.where(keep, se * C + rank, E * C)  # OOB -> dropped by scatter
+
+    def per_row(xrow, slot_r, stok_r, sgate_r):
+        dix = jnp.full((E * C,), S, jnp.int32).at[slot_r].set(stok_r, mode="drop")
+        gec = jnp.zeros((E * C,), jnp.float32).at[slot_r].set(sgate_r, mode="drop")
+        xpad = jnp.concatenate([xrow, jnp.zeros((1, D), xrow.dtype)], axis=0)
+        xe = xpad[dix].reshape(E, C, D)
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xrow.dtype) * u
+        ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * C, D)
+        ye = ye * gec[:, None].astype(ye.dtype)
+        y = jnp.zeros((S + 1, D), xrow.dtype).at[dix].add(ye)
+        return y[:S]
+
+    y = jax.vmap(per_row)(x, slot, stok.astype(jnp.int32), sgate)
+    frac = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32), axis=1)
+    aux = E * jnp.mean(jnp.sum(frac * jnp.mean(probs, axis=1), axis=-1))
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,135 @@
+"""Parameter templates: one source of truth for shapes, logical axes, init.
+
+Every model module builds a pytree of :class:`ParamInfo` leaves. From it we
+derive (a) real initialized arrays for training/smoke tests, (b)
+``jax.ShapeDtypeStruct`` stand-ins for the multi-pod dry-run, and (c)
+``PartitionSpec`` shardings via logical-axis rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamInfo:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim
+    init: str = "normal"  # normal | zeros | ones | small_normal
+    scale: float = 1.0  # multiplier on the fan-in init std
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_info(x) -> bool:
+    return isinstance(x, ParamInfo)
+
+
+# Default logical-axis -> mesh-axis rules (tensor parallel over "model").
+# The leading federated-client axis is added by core.rounds, not here.
+DEFAULT_RULES: dict[str | None, str | None] = {
+    None: None,
+    "layer": None,  # scan-stacked layer dim
+    "group": None,  # layer-pattern group dim (gemma3/zamba2)
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "expert": None,  # baseline: experts replicated, ffn sharded
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+}
+
+
+# Production-mesh axis sizes (launch.mesh). Examples on host meshes pass
+# their own sizes.
+PROD_AXIS_SIZES: dict[str, int] = {"pod": 2, "data": 16, "model": 16}
+
+# dims never sharded by fallback placement: scan/stack dims, and head_dim
+# (RoPE splits it in half, so sharding it forces pathological reshards).
+_NO_FALLBACK = {"layer", "group", "conv", "expert", "head_dim"}
+
+
+def spec_for(info: ParamInfo, rules: dict | None = None, axis_sizes: dict | None = None) -> P:
+    """Shape-aware sharding: honor rules where the dim is divisible by the
+    mesh axis, otherwise leave the dim replicated. Non-divisible cases are
+    handled structurally instead (vocab padding, per-group q-head padding —
+    DESIGN.md §4): a measured fallback experiment (EXPERIMENTS.md §Perf)
+    showed row-parallel/head_dim fallbacks trade memory for per-layer
+    activation collectives and RoPE reshards."""
+    rules = DEFAULT_RULES if rules is None else rules
+    sizes = PROD_AXIS_SIZES if axis_sizes is None else axis_sizes
+    n = len(info.shape)
+    assigned: list[str | None] = [None] * n
+    used: set[str] = set()
+    for i in range(n):
+        mesh_ax = rules.get(info.axes[i])
+        if not mesh_ax or mesh_ax in used:
+            continue
+        if info.shape[i] > 0 and info.shape[i] % sizes.get(mesh_ax, 1) == 0:
+            assigned[i] = mesh_ax
+            used.add(mesh_ax)
+    return P(*assigned)
+
+
+def shardings(template: PyTree, mesh, rules: dict | None = None, axis_sizes: dict | None = None) -> PyTree:
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda i: NamedSharding(mesh, spec_for(i, rules, axis_sizes)), template, is_leaf=is_info
+    )
+
+
+def pspecs(template: PyTree, rules: dict | None = None, axis_sizes: dict | None = None) -> PyTree:
+    return jax.tree.map(lambda i: spec_for(i, rules, axis_sizes), template, is_leaf=is_info)
+
+
+def abstract(template: PyTree, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda i: jax.ShapeDtypeStruct(i.shape, dtype), template, is_leaf=is_info
+    )
+
+
+def _fan_in(info: ParamInfo) -> int:
+    # fan-in heuristic: product of all dims except the last
+    if len(info.shape) <= 1:
+        return max(info.shape[-1] if info.shape else 1, 1)
+    return max(math.prod(info.shape[:-1]) // (info.shape[0] if info.axes and info.axes[0] in ("layer", "group", "expert") and len(info.shape) > 2 else 1), 1)
+
+
+def init_params(template: PyTree, rng: jax.Array, dtype=jnp.float32) -> PyTree:
+    """Initialize real arrays from a template (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree.flatten(template, is_leaf=is_info)
+    keys = jax.random.split(rng, len(leaves))
+
+    def make(info: ParamInfo, key):
+        if info.init == "zeros":
+            return jnp.zeros(info.shape, dtype)
+        if info.init == "ones":
+            return jnp.ones(info.shape, dtype)
+        std = info.scale / math.sqrt(_fan_in(info))
+        if info.init == "small_normal":
+            std = 0.02 * info.scale
+        return (jax.random.normal(key, info.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(i, k) for i, k in zip(leaves, keys)])
+
+
+def count_params(template: PyTree) -> int:
+    leaves = jax.tree.leaves(template, is_leaf=is_info)
+    return sum(math.prod(l.shape) for l in leaves)
+
+
+def map_with_path(fn: Callable, template: PyTree) -> PyTree:
+    return jax.tree_util.tree_map_with_path(fn, template, is_leaf=is_info)

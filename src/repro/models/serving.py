@@ -1,0 +1,282 @@
+"""Serving paths: prefill (build caches) and decode_step (one token).
+
+Cache layout per family (all layer-stacked for lax.scan):
+- dense/moe/vlm/audio: {"k","v"}: (L, B, S, kv, hd)   (ring of W if windowed)
+- gemma3 pattern:      {"g_local": {k,v} (ng, p-1, B, W, ...),
+                        "g_global": {k,v} (ng, B, S, ...),
+                        "tail": {k,v} (nt, B, W, ...)}
+- ssm:                 {"ssm": (L,B,h,p,n) f32, "conv": (L,B,k-1,C)}
+- hybrid:              {"ssm","conv" (ng, period, ...), "shared": {k,v} (ng,B,S,...)}
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models.layers import rms_norm, swiglu
+from repro.models.shard_ctx import constrain
+from repro.models.transformer import (
+    _dtype,
+    embed_inputs,
+    gemma_pattern,
+    layer_window,
+    logits_fn,
+)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+def _kv(shape, dtype, make):
+    return {"k": make(shape, dtype), "v": make(shape, dtype)}
+
+
+def cache_spec(cfg: ArchConfig, batch: int, max_len: int, abstract: bool = True) -> PyTree:
+    """Abstract (ShapeDtypeStruct) or zero-initialized cache pytree."""
+    make = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else (lambda s, d: jnp.zeros(s, d))
+    dt = _dtype(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.family in ("dense", "vlm", "audio", "moe") and not cfg.local_global_period:
+        S = min(cfg.window, max_len) if cfg.window else max_len
+        return _kv((cfg.n_layers, batch, S, kv, hd), dt, make)
+    if cfg.local_global_period:
+        ng, nt = gemma_pattern(cfg)
+        p = cfg.local_global_period
+        W = min(cfg.window, max_len)
+        out = {
+            "g_local": _kv((ng, p - 1, batch, W, kv, hd), dt, make),
+            "g_global": _kv((ng, batch, max_len, kv, hd), dt, make),
+        }
+        if nt:
+            out["tail"] = _kv((nt, batch, W, kv, hd), dt, make)
+        return out
+    if cfg.family == "ssm":
+        di, h, n = m2.dims(cfg)
+        conv_ch = di + 2 * n
+        return {
+            "ssm": make((cfg.n_layers, batch, h, cfg.ssm_headdim, n), jnp.float32),
+            "conv": make((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_ch), dt),
+        }
+    if cfg.family == "hybrid":
+        ng = cfg.n_layers // cfg.shared_attn_period
+        di, h, n = m2.dims(cfg)
+        conv_ch = di + 2 * n
+        per = cfg.shared_attn_period
+        return {
+            "ssm": make((ng, per, batch, h, cfg.ssm_headdim, n), jnp.float32),
+            "conv": make((ng, per, batch, cfg.ssm_conv - 1, conv_ch), dt),
+            "shared": _kv((ng, batch, max_len, kv, hd), dt, make),
+        }
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Decode blocks
+# ---------------------------------------------------------------------------
+
+def _dense_decode_block(cfg, p, h, ck, cv, pos, window: int):
+    a, newc = attn.decode_attention(
+        p["attn"], rms_norm(h, p["norm1"], cfg.norm_eps), {"k": ck, "v": cv}, cfg, pos, window=window
+    )
+    h = h + a
+    g = rms_norm(h, p["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = moe_mod.moe_block(p["moe"], g, cfg)
+    else:
+        y = swiglu(g, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return h + y, newc["k"], newc["v"]
+
+
+def _ssm_decode_block(cfg, p, h, st, pos):
+    y, new = m2.mamba2_decode(p["ssm"], rms_norm(h, p["norm1"], cfg.norm_eps), st, cfg)
+    return h + y, new
+
+
+def decode_step(cfg: ArchConfig, params: PyTree, cache: PyTree, tokens: jax.Array, pos: jax.Array):
+    """One-token decode. tokens (B,1) int32, pos scalar int32 (cache length).
+
+    Returns (logits (B,1,V), new_cache).
+    """
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    if cfg.family in ("dense", "vlm", "audio", "moe") and not cfg.local_global_period:
+        def body(h, xs):
+            layer_p, ck, cv = xs
+            h, nk, nv = _dense_decode_block(cfg, layer_p, h, ck, cv, pos, cfg.window)
+            return h, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": nk, "v": nv}
+    elif cfg.local_global_period:
+        p_ = cfg.local_global_period
+
+        def gbody(h, xs):
+            gp, lk, lv, gk, gv = xs
+            nlk, nlv = [], []
+            for i in range(p_):
+                sub = jax.tree.map(lambda w: w[i], gp)
+                w = layer_window(cfg, i)
+                if w:
+                    h, k2, v2 = _dense_decode_block(cfg, sub, h, lk[i], lv[i], pos, w)
+                    nlk.append(k2)
+                    nlv.append(v2)
+                else:
+                    h, gk, gv = _dense_decode_block(cfg, sub, h, gk, gv, pos, 0)
+            return h, (jnp.stack(nlk), jnp.stack(nlv), gk, gv)
+
+        c = cache
+        x, (nlk, nlv, ngk, ngv) = jax.lax.scan(
+            gbody,
+            x,
+            (params["groups"], c["g_local"]["k"], c["g_local"]["v"], c["g_global"]["k"], c["g_global"]["v"]),
+        )
+        new_cache = {"g_local": {"k": nlk, "v": nlv}, "g_global": {"k": ngk, "v": ngv}}
+        if "tail" in params:
+            def tbody(h, xs):
+                layer_p, ck, cv = xs
+                h, nk, nv = _dense_decode_block(cfg, layer_p, h, ck, cv, pos, cfg.window)
+                return h, (nk, nv)
+
+            x, (tk, tv) = jax.lax.scan(tbody, x, (params["tail"], c["tail"]["k"], c["tail"]["v"]))
+            new_cache["tail"] = {"k": tk, "v": tv}
+    elif cfg.family == "ssm":
+        def sbody(h, xs):
+            layer_p, ssm, conv = xs
+            h, new = _ssm_decode_block(cfg, layer_p, h, {"ssm": ssm, "conv": conv}, pos)
+            return h, (new["ssm"], new["conv"])
+
+        x, (ns, nc) = jax.lax.scan(sbody, x, (params["layers"], cache["ssm"], cache["conv"]))
+        new_cache = {"ssm": ns, "conv": nc}
+    elif cfg.family == "hybrid":
+        per = cfg.shared_attn_period
+        shared = params["shared"]
+
+        def hbody(h, xs):
+            gp, ssm, conv, sk, sv = xs
+            nss, ncv = [], []
+            for i in range(per):
+                sub = jax.tree.map(lambda w: w[i], gp)
+                h, new = _ssm_decode_block(cfg, sub, h, {"ssm": ssm[i], "conv": conv[i]}, pos)
+                nss.append(new["ssm"])
+                ncv.append(new["conv"])
+            h, nk, nv = _dense_decode_block(cfg, shared, h, sk, sv, pos, 0)
+            return h, (jnp.stack(nss), jnp.stack(ncv), nk, nv)
+
+        c = cache
+        x, (ns, ncv, nk, nv) = jax.lax.scan(
+            hbody, x, (params["mamba_groups"], c["ssm"], c["conv"], c["shared"]["k"], c["shared"]["v"])
+        )
+        new_cache = {"ssm": ns, "conv": ncv, "shared": {"k": nk, "v": nv}}
+    else:
+        raise ValueError(cfg.family)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits_fn(cfg, params, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full forward emitting caches, last-position logits only
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ArchConfig, params: PyTree, batch: dict, max_len: int = 0):
+    """Returns (last-token logits (B,1,V), cache).
+
+    max_len > S pads the global KV caches so subsequent decode_step calls
+    have slots to write into (windowed/SSM caches are fixed-size already).
+    """
+    x = embed_inputs(cfg, params, batch)
+    S_in = x.shape[1]
+
+    def grow(kv):
+        if not max_len or max_len <= S_in:
+            return kv
+        pad = max_len - S_in
+        return jax.tree.map(
+            lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 3) + [(0, pad), (0, 0), (0, 0)]), kv
+        )
+
+    x = constrain(x)
+
+    def dense_block_kv(p, h, window):
+        a, (kc, vc) = attn.attention_block(
+            p["attn"], rms_norm(h, p["norm1"], cfg.norm_eps), cfg, window=window, return_kv=True
+        )
+        h = h + a
+        g = rms_norm(h, p["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_mod.moe_block(p["moe"], g, cfg)
+        else:
+            y = swiglu(g, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+        return constrain(h + y), kc, vc
+
+    def ssm_block_state(p, h):
+        y, st = m2.mamba2_block(p["ssm"], rms_norm(h, p["norm1"], cfg.norm_eps), cfg, return_state=True)
+        return constrain(h + y), st
+
+    if cfg.family in ("dense", "vlm", "audio", "moe") and not cfg.local_global_period:
+        def body(h, layer_p):
+            h, kc, vc = dense_block_kv(layer_p, h, cfg.window)
+            return h, (kc.astype(_dtype(cfg)), vc.astype(_dtype(cfg)))
+
+        x, (k, v) = jax.lax.scan(body, x, params["layers"])
+        cache = grow({"k": k, "v": v}) if not cfg.window else {"k": k, "v": v}
+    elif cfg.local_global_period:
+        p_ = cfg.local_global_period
+
+        def gbody(h, gp):
+            lk, lv = [], []
+            gk = gv = None
+            for i in range(p_):
+                sub = jax.tree.map(lambda w: w[i], gp)
+                w = layer_window(cfg, i)
+                h, kc, vc = dense_block_kv(sub, h, w)
+                if w:
+                    lk.append(kc)
+                    lv.append(vc)
+                else:
+                    gk, gv = kc, vc
+            return h, (jnp.stack(lk), jnp.stack(lv), gk, gv)
+
+        x, (lk, lv, gk, gv) = jax.lax.scan(gbody, x, params["groups"])
+        cache = {"g_local": {"k": lk, "v": lv}, "g_global": grow({"k": gk, "v": gv})}
+        if "tail" in params:
+            def tbody(h, layer_p):
+                h, kc, vc = dense_block_kv(layer_p, h, cfg.window)
+                return h, (kc, vc)
+
+            x, (tk, tv) = jax.lax.scan(tbody, x, params["tail"])
+            cache["tail"] = {"k": tk, "v": tv}
+    elif cfg.family == "ssm":
+        def sbody(h, layer_p):
+            h, st = ssm_block_state(layer_p, h)
+            return h, (st["ssm"], st["conv"])
+
+        x, (ssm, conv) = jax.lax.scan(sbody, x, params["layers"])
+        cache = {"ssm": ssm, "conv": conv}
+    elif cfg.family == "hybrid":
+        per = cfg.shared_attn_period
+        shared = params["shared"]
+
+        def hbody(h, gp):
+            ss, cc = [], []
+            for i in range(per):
+                sub = jax.tree.map(lambda w: w[i], gp)
+                h, st = ssm_block_state(sub, h)
+                ss.append(st["ssm"])
+                cc.append(st["conv"])
+            h, kc, vc = dense_block_kv(shared, h, 0)
+            return h, (jnp.stack(ss), jnp.stack(cc), kc, vc)
+
+        x, (ssm, conv, sk, sv) = jax.lax.scan(hbody, x, params["mamba_groups"])
+        cache = {"ssm": ssm, "conv": conv, "shared": grow({"k": sk, "v": sv})}
+    else:
+        raise ValueError(cfg.family)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return logits_fn(cfg, params, x), cache

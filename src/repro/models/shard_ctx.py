@@ -1,0 +1,50 @@
+"""Activation-sharding context.
+
+GSPMD's cost model sometimes resolves the weights-over-data (FSDP) vs
+batch-over-data conflict by replicating the batch — catastrophic for the
+saved-carry stack (measured: grok multipod 237 GiB/device temp). Step
+builders set an activation PartitionSpec here; the model applies it at
+block boundaries. Under `jax.vmap(..., spmd_axis_name=client_axis)` the
+client axis is prepended automatically.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACT_BATCH: ContextVar[tuple | None] = ContextVar("act_batch_axes", default=None)
+_ACT_SEQ: ContextVar[str | None] = ContextVar("act_seq_axis", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes: tuple | None, seq_axis: str | None = None):
+    """batch_axes: mesh axes for the leading batch dim of (B, S, D) acts.
+    seq_axis: optional sequence-parallel axis (Megatron-SP): the residual
+    stream between blocks is sharded over S, trading the per-block TP
+    all-reduce for all-gather/reduce-scatter pairs."""
+    tok = _ACT_BATCH.set(batch_axes)
+    tok2 = _ACT_SEQ.set(seq_axis)
+    try:
+        yield
+    finally:
+        _ACT_BATCH.reset(tok)
+        _ACT_SEQ.reset(tok2)
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    """Constrain an activation whose dim 0 is the batch dim.
+
+    batch_axes=() emits an all-None constraint: useless alone, but under
+    vmap(spmd_axis_name=client_axis) the client axis is prepended, which is
+    exactly the per-client sharding the stacked single-pod plan needs.
+    """
+    axes = _ACT_BATCH.get()
+    if axes is None:
+        return x
+    lead = axes if axes else None
+    seq = _ACT_SEQ.get()
+    spec = P(lead, seq, *(None,) * (x.ndim - 2))
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,286 @@
+"""Model zoo orchestrator: templates, forward, loss, prefill, decode.
+
+Families:
+- dense / vlm / audio: pre-norm transformer (GQA + SwiGLU), scan over layers.
+- dense with local:global pattern (gemma3): scan over period-groups; local
+  layers use structural sliding-window attention and ring-buffer KV caches.
+- moe: dense attention + GShard top-k MoE FFN (aux loss threaded via scan).
+- ssm (mamba2): attention-free SSD blocks.
+- hybrid (zamba2): mamba2 groups + one *shared* attention+MLP block applied
+  between groups (single weight set, per-application KV caches).
+
+All full-size dry-runs lower these with `lax.scan` so HLO stays compact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models.layers import rms_norm, softmax_cross_entropy, swiglu
+from repro.models.params import ParamInfo
+from repro.models.shard_ctx import constrain
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+def _mlp_template(cfg, pa, ns):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamInfo(ns + (d, f), pa + ("embed", "ffn")),
+        "w_up": ParamInfo(ns + (d, f), pa + ("embed", "ffn")),
+        "w_down": ParamInfo(ns + (f, d), pa + ("ffn", "embed")),
+    }
+
+
+def _dense_layer_template(cfg, pa=("layer",), ns=()):
+    d = cfg.d_model
+    t = {
+        "norm1": ParamInfo(ns + (d,), pa + ("embed",), init="zeros"),
+        "attn": attn.attention_template(cfg, pa, ns),
+        "norm2": ParamInfo(ns + (d,), pa + ("embed",), init="zeros"),
+    }
+    if cfg.family == "moe":
+        t["moe"] = moe_mod.moe_template(cfg, pa, ns)
+    else:
+        t["mlp"] = _mlp_template(cfg, pa, ns)
+    return t
+
+
+def _ssm_layer_template(cfg, pa=("layer",), ns=()):
+    d = cfg.d_model
+    return {
+        "norm1": ParamInfo(ns + (d,), pa + ("embed",), init="zeros"),
+        "ssm": m2.mamba2_template(cfg, pa, ns),
+    }
+
+
+def gemma_pattern(cfg) -> tuple[int, int]:
+    """(n_groups, n_tail) for the local:global period pattern."""
+    period = cfg.local_global_period
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+VOCAB_PAD = 16  # pad vocab to the model-axis width; padded logits masked
+
+
+def padded_vocab(cfg: ArchConfig) -> int:
+    return -(-cfg.vocab_size // VOCAB_PAD) * VOCAB_PAD
+
+
+def template(cfg: ArchConfig) -> PyTree:
+    d, v = cfg.d_model, padded_vocab(cfg)
+    t: dict = {
+        "embed": ParamInfo((v, d), ("vocab", "embed"), init="small_normal"),
+        "final_norm": ParamInfo((d,), ("embed",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = ParamInfo((d, v), ("embed", "vocab"))
+    if cfg.modality == "vlm":
+        t["img_proj"] = ParamInfo((d, d), ("embed", None))
+    if cfg.family in ("dense", "vlm", "audio", "moe") and not cfg.local_global_period:
+        t["layers"] = _dense_layer_template(cfg, ("layer",), (cfg.n_layers,))
+    elif cfg.local_global_period:  # gemma3
+        ng, nt = gemma_pattern(cfg)
+        t["groups"] = _dense_layer_template(
+            cfg, ("group", "layer"), (ng, cfg.local_global_period)
+        )
+        if nt:
+            t["tail"] = _dense_layer_template(cfg, ("layer",), (nt,))
+    elif cfg.family == "ssm":
+        t["layers"] = _ssm_layer_template(cfg, ("layer",), (cfg.n_layers,))
+    elif cfg.family == "hybrid":
+        ng = cfg.n_layers // cfg.shared_attn_period
+        t["mamba_groups"] = _ssm_layer_template(
+            cfg, ("group", "layer"), (ng, cfg.shared_attn_period)
+        )
+        t["shared"] = {
+            "norm1": ParamInfo((d,), ("embed",), init="zeros"),
+            "attn": attn.attention_template(cfg, (), ()),
+            "norm2": ParamInfo((d,), ("embed",), init="zeros"),
+            "mlp": _mlp_template(cfg, (), ()),
+        }
+    else:
+        raise ValueError(f"unsupported family {cfg.family}")
+    return t
+
+
+def layer_window(cfg, group_pos: int) -> int:
+    """Window for position-in-period: gemma3 = [W]*(p-1) + [0 (global)]."""
+    return cfg.window if group_pos != cfg.local_global_period - 1 else 0
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+def _dense_block(cfg, p, x, window: int):
+    x = x + attn.attention_block(p["attn"], rms_norm(x, p["norm1"], cfg.norm_eps), cfg, window=window)
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe_mod.moe_block(p["moe"], h, cfg)
+        return x + y, aux
+    return x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"]), jnp.float32(0)
+
+
+def _ssm_block(cfg, p, x):
+    return x + m2.mamba2_block(p["ssm"], rms_norm(x, p["norm1"], cfg.norm_eps), cfg)
+
+
+def embed_inputs(cfg, params, batch) -> jax.Array:
+    if cfg.modality == "audio":
+        return batch["frames"].astype(_dtype(cfg))
+    if cfg.modality == "vlm":
+        img = jnp.einsum("bnd,de->bne", batch["images"].astype(_dtype(cfg)), params["img_proj"])
+        txt = params["embed"][batch["tokens"]]
+        return jnp.concatenate([img, txt], axis=1)
+    return params["embed"][batch["tokens"]]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def trunk(cfg: ArchConfig, params: PyTree, x: jax.Array):
+    """Hidden states (B,S,D) -> (B,S,D) after all layers + final norm.
+
+    Returns (hidden, aux_loss).
+    """
+    x = constrain(x)
+    aux_total = jnp.float32(0)
+    # remat each scanned block: the backward pass recomputes activations, so
+    # the saved residency is one (B,S,D) carry per layer instead of every
+    # intermediate — required for the full-size train_4k memory budget.
+    if "layers" in params and cfg.family in ("dense", "vlm", "audio", "moe"):
+        @jax.checkpoint
+        def body(carry, layer_p):
+            h, aux = carry
+            h, a = _dense_block(cfg, layer_p, h, cfg.window)
+            return (constrain(h), aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+    elif "groups" in params:  # gemma3 pattern
+        period = cfg.local_global_period
+
+        @jax.checkpoint
+        def gbody(carry, group_p):
+            h, aux = carry
+            for i in range(period):
+                sub = jax.tree.map(lambda w: w[i], group_p)
+                h, a = _dense_block(cfg, sub, h, layer_window(cfg, i))
+                aux = aux + a
+            return (constrain(h), aux), None
+
+        (x, aux_total), _ = jax.lax.scan(gbody, (x, aux_total), params["groups"])
+        if "tail" in params:
+            @jax.checkpoint
+            def tbody(carry, layer_p):
+                h, aux = carry
+                h, a = _dense_block(cfg, layer_p, h, cfg.window)
+                return (constrain(h), aux + a), None
+
+            (x, aux_total), _ = jax.lax.scan(tbody, (x, aux_total), params["tail"])
+    elif cfg.family == "ssm":
+        @jax.checkpoint
+        def sbody(h, layer_p):
+            return constrain(_ssm_block(cfg, layer_p, h)), None
+
+        x, _ = jax.lax.scan(sbody, x, params["layers"])
+    elif cfg.family == "hybrid":
+        period = cfg.shared_attn_period
+        shared = params["shared"]
+
+        @jax.checkpoint
+        def hbody(h, group_p):
+            for i in range(period):
+                sub = jax.tree.map(lambda w: w[i], group_p)
+                h = _ssm_block(cfg, sub, h)
+            h, _ = _dense_block(cfg, shared, h, 0)
+            return constrain(h), None
+
+        x, _ = jax.lax.scan(hbody, x, params["mamba_groups"])
+    else:
+        raise ValueError(cfg.family)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux_total
+
+
+def logits_fn(cfg, params, hidden: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", hidden, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", hidden, params["lm_head"])
+    if logits.shape[-1] != cfg.vocab_size:  # mask sharding-padding columns
+        pad = logits.shape[-1] - cfg.vocab_size
+        neg = jnp.full((pad,), -1e30, logits.dtype)
+        logits = logits + jnp.concatenate([jnp.zeros((cfg.vocab_size,), logits.dtype), neg])
+    return logits
+
+
+CE_CHUNK = 512  # sequence-chunked loss: never materialize (B,S,V) logits
+
+
+def chunked_ce(cfg, params, hidden: jax.Array, labels: jax.Array, mask: jax.Array | None) -> jax.Array:
+    """CE via lax.scan over sequence chunks (remat'd): peak logits memory is
+    (B, CE_CHUNK, V/shards) instead of (B, S, V/shards)."""
+    B, S, _ = hidden.shape
+    if S % CE_CHUNK or S <= CE_CHUNK:
+        logits = logits_fn(cfg, params, hidden)
+        return softmax_cross_entropy(logits, labels, mask)
+    nc = S // CE_CHUNK
+    h = hidden.reshape(B, nc, CE_CHUNK, -1).transpose(1, 0, 2, 3)
+    l = labels.reshape(B, nc, CE_CHUNK).transpose(1, 0, 2)
+    m = (
+        mask.reshape(B, nc, CE_CHUNK).transpose(1, 0, 2)
+        if mask is not None
+        else jnp.ones((nc, B, CE_CHUNK), jnp.float32)
+    )
+
+    @jax.checkpoint
+    def body(carry, xs):
+        hc, lc, mc = xs
+        logits = logits_fn(cfg, params, hc)
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        gold = jnp.sum(
+            logits.astype(jnp.float32) * (iota == lc[..., None]).astype(jnp.float32), axis=-1
+        )
+        mc = mc.astype(jnp.float32)
+        return (carry[0] + jnp.sum((logz - gold) * mc), carry[1] + jnp.sum(mc)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (h, l, m))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _next_token_ce(cfg, params, hidden: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Next-token CE keeping the full (chunk-divisible) sequence: labels are
+    tokens shifted left, the final position masked out."""
+    S = hidden.shape[1]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.broadcast_to((jnp.arange(S) < S - 1)[None], labels.shape)
+    return chunked_ce(cfg, params, hidden, labels, mask)
+
+
+def loss_fn(cfg: ArchConfig, params: PyTree, batch: dict) -> tuple[jax.Array, dict]:
+    """Training objective per modality. Returns (loss, metrics)."""
+    x = embed_inputs(cfg, params, batch)
+    hidden, aux = trunk(cfg, params, x)
+    if cfg.modality == "audio":
+        # HuBERT masked cluster prediction: CE at masked frames only.
+        ce = chunked_ce(cfg, params, hidden, batch["labels"], batch["mask"])
+    elif cfg.modality == "vlm":
+        n_img = batch["images"].shape[1]
+        ce = _next_token_ce(cfg, params, hidden[:, n_img:], batch["tokens"])
+    else:
+        ce = _next_token_ce(cfg, params, hidden, batch["tokens"])
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}

@@ -1,0 +1,74 @@
+"""Pure-JAX optimizers (optax-style init/update pairs).
+
+SGD+momentum is the paper's local trainer (YOLOv3/Darknet convention);
+AdamW is used for the LM architectures. Optimizer state trees mirror the
+parameter tree, so the federated client-stacking and sharding rules apply
+to them unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    name: str = "opt"
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9, clip_norm: float = 10.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(params, grads, state):
+        if clip_norm:
+            grads = clip_by_global_norm(grads, clip_norm)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(m.dtype), state["mu"], grads)
+        params = jax.tree.map(lambda p, m: p - (lr * m).astype(p.dtype), params, mu)
+        return params, {"mu": mu}
+
+    return Optimizer(init, update, "sgd")
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0, clip_norm: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(params, grads, state):
+        if clip_norm:
+            grads = clip_by_global_norm(grads, clip_norm)
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+        params = jax.tree.map(upd, params, m, v)
+        return params, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update, "adamw")

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device; the 512-way
+# placeholder fleet is strictly dryrun.py's business (see MULTI-POD DRY-RUN).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,142 @@
+"""Attention path equivalences + causality property tests."""
+import dataclasses
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import attention as A
+from repro.models import params as P
+
+CFG = dataclasses.replace(get_arch("gemma3-27b").reduced(), window=8, qk_norm=False)
+
+
+def _qkv(B=2, S=32, H=4, Hkv=2, hd=16, seed=0):
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(B, S, Hkv, hd)), jnp.float32)
+    return q, k, v
+
+
+def test_windowed_equals_masked_full():
+    q, k, v = _qkv(S=32)
+    W = 8
+    got = A.windowed_attention(q, k, v, window=W)
+    qp = jnp.arange(32)[:, None]
+    kp = jnp.arange(32)[None, :]
+    mask = ((qp >= kp) & (qp - kp < W))[None, None, None]
+    want = A._sdpa(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_q_chunked_equals_full():
+    q, k, v = _qkv(S=64)
+    got = A._q_chunked_attention(q, k, v, causal=True, q_chunk=16)
+    want = A._sdpa(q, k, v, (jnp.arange(64)[:, None] >= jnp.arange(64)[None, :])[None, None, None])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(0, 30))
+@settings(max_examples=8, deadline=None)
+def test_causality_future_tokens_do_not_matter(t):
+    """Output at position t is unchanged by any perturbation of tokens > t."""
+    cfg = get_arch("qwen3-1.7b").reduced()
+    from repro.models import transformer as T
+
+    tpl = T.template(cfg)
+    params = P.init_params(tpl, jax.random.key(0), jnp.float32)
+    toks = jnp.asarray(np.random.default_rng(1).integers(0, cfg.vocab_size, (1, 32)), jnp.int32)
+    toks2 = toks.at[0, t + 1 :].set((toks[0, t + 1 :] + 7) % cfg.vocab_size)
+    h1, _ = T.trunk(cfg, params, T.embed_inputs(cfg, params, {"tokens": toks}))
+    h2, _ = T.trunk(cfg, params, T.embed_inputs(cfg, params, {"tokens": toks2}))
+    np.testing.assert_allclose(
+        np.asarray(h1[0, : t + 1]), np.asarray(h2[0, : t + 1]), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_ring_buffer_decode_matches_masked_full():
+    """Windowed ring-buffer decode == full attention with window mask."""
+    cfg = CFG
+    tpl = A.attention_template(cfg, (), ())
+    params = P.init_params(tpl, jax.random.key(3), jnp.float32)
+    B, S, W = 1, 24, cfg.window
+    r = np.random.default_rng(5)
+    xs = jnp.asarray(r.normal(size=(B, S, cfg.d_model)) * 0.3, jnp.float32)
+    # full path with window masking
+    want = A.attention_block(params, xs, cfg, window=W)
+    # decode path, token by token with a ring cache of size W
+    cache = {
+        "k": jnp.zeros((B, W, cfg.n_kv_heads, cfg.resolved_head_dim)),
+        "v": jnp.zeros((B, W, cfg.n_kv_heads, cfg.resolved_head_dim)),
+    }
+    outs = []
+    for t in range(S):
+        o, cache = A.decode_attention(params, xs[:, t : t + 1], cache, cfg, jnp.int32(t), window=W)
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_gqa_grouping_matches_repeated_kv():
+    """GQA == MHA with kv heads repeated G times."""
+    q, k, v = _qkv(H=4, Hkv=2)
+    out_gqa = A.full_attention(q, k, v, causal=True)
+    k_rep = jnp.repeat(k, 2, axis=2)
+    v_rep = jnp.repeat(v, 2, axis=2)
+    out_mha = A.full_attention(q, k_rep, v_rep, causal=True)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha), rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(2, 64))
+@settings(max_examples=10, deadline=None)
+def test_rope_preserves_norm(S):
+    """RoPE is a rotation: per-position vector norms are unchanged."""
+    from repro.models.layers import apply_rope, rope_freqs
+
+    r = np.random.default_rng(S)
+    x = jnp.asarray(r.normal(size=(1, S, 2, 32)), jnp.float32)
+    cos, sin = rope_freqs(jnp.arange(S), 32, 1e4)
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_relative_position_property():
+    """q_i . k_j after RoPE depends only on (i - j): shifting both positions
+    by a constant leaves the attention score unchanged."""
+    from repro.models.layers import apply_rope, rope_freqs
+
+    r = np.random.default_rng(0)
+    hd = 32
+    q = jnp.asarray(r.normal(size=(1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(1, 1, 1, hd)), jnp.float32)
+
+    def score(i, j):
+        cq = rope_freqs(jnp.asarray([i]), hd, 1e4)
+        ck = rope_freqs(jnp.asarray([j]), hd, 1e4)
+        return float(jnp.sum(apply_rope(q, *cq) * apply_rope(k, *ck)))
+
+    np.testing.assert_allclose(score(5, 3), score(105, 103), rtol=1e-4)
+    assert abs(score(5, 3) - score(5, 4)) > 1e-6  # but it does depend on i-j
+
+
+@given(st.floats(0.5, 4.0))
+@settings(max_examples=10, deadline=None)
+def test_rms_norm_scale_invariance(c):
+    """rms_norm(c*x) == rms_norm(x) for any positive scalar c."""
+    from repro.models.layers import rms_norm
+
+    r = np.random.default_rng(1)
+    x = jnp.asarray(r.normal(size=(2, 8, 16)), jnp.float32)
+    w = jnp.asarray(r.normal(size=(16,)) * 0.1, jnp.float32)
+    a = rms_norm(x, w)
+    b = rms_norm(c * x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-3, atol=3e-4)

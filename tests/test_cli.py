@@ -1,0 +1,43 @@
+"""CLI integration: the launchers run end-to-end as subprocesses."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+ENV = {**os.environ, "PYTHONPATH": str(ROOT / "src")}
+
+
+def _run(args, timeout=420):
+    return subprocess.run(
+        [sys.executable, "-m", *args], env=ENV, cwd=ROOT, capture_output=True, text=True, timeout=timeout
+    )
+
+
+def test_train_cli_runs_and_converges():
+    r = _run(["repro.launch.train", "--arch", "qwen3-1.7b", "--rounds", "3", "--clients", "2", "--batch", "2", "--seq", "32"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["rounds"] == 3 and out["final_loss"] > 0
+
+
+def test_train_cli_print_plan():
+    r = _run(["repro.launch.train", "--arch", "zamba2-2.7b", "--print-plan"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "multipod" in r.stdout and "clients=" in r.stdout
+
+
+def test_serve_cli_generates():
+    r = _run(["repro.launch.serve", "--arch", "qwen3-1.7b", "--batch", "2", "--prompt-len", "16", "--new-tokens", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert len(out["generated"]) == 4
+
+
+def test_serve_cli_rejects_encoder_only():
+    r = _run(["repro.launch.serve", "--arch", "hubert-xlarge"])
+    assert r.returncode != 0
+    assert "encoder-only" in (r.stdout + r.stderr)

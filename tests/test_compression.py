@@ -1,0 +1,75 @@
+"""Eq. 6 scoring/masking + int8 quantization properties (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import compression as comp
+from repro.core import rounds as R
+
+CFG = get_arch("qwen3-1.7b").reduced()
+TPL = R.make_template(CFG)
+
+
+def _ones_params():
+    from repro.models.params import is_info
+
+    return jax.tree.map(lambda i: jnp.ones(i.shape), TPL, is_leaf=is_info)
+
+
+def test_layer_sums_shape_and_linearity():
+    p1 = _ones_params()
+    s1 = comp.layer_sums(CFG, TPL, p1)
+    assert s1.shape == (comp.n_score_buckets(CFG),)
+    s2 = comp.layer_sums(CFG, TPL, jax.tree.map(lambda x: 2 * x, p1))
+    np.testing.assert_allclose(np.asarray(s2), 2 * np.asarray(s1), rtol=1e-6)
+    # every parameter is counted exactly once
+    from repro.models.params import count_params
+
+    assert float(s1.sum()) == count_params(TPL)
+
+
+@given(st.integers(1, 10))
+@settings(max_examples=10, deadline=None)
+def test_topn_mask_selects_n(n):
+    scores = jnp.asarray(np.random.default_rng(n).normal(size=17) ** 2)
+    mask = comp.topn_mask(scores, n)
+    assert int(mask.sum()) >= min(n, 17)  # ties may add extras
+    kept = np.asarray(scores)[np.asarray(mask)]
+    dropped = np.asarray(scores)[~np.asarray(mask)]
+    if dropped.size and kept.size:
+        assert kept.min() >= dropped.max()
+
+
+def test_apply_layer_mask_zeroes_unselected():
+    params = _ones_params()
+    nb = comp.n_score_buckets(CFG)
+    mask = jnp.zeros(nb).at[0].set(1.0)  # only layer 0 survives
+    out = comp.apply_layer_mask(CFG, TPL, params, mask)
+    sums = comp.layer_sums(CFG, TPL, out)
+    assert float(sums[0]) > 0
+    np.testing.assert_allclose(np.asarray(sums[1:]), 0.0, atol=1e-6)
+
+
+def test_contribution_scores_eq6():
+    prev = jnp.asarray([1.0, -2.0, 3.0])
+    new = jnp.asarray([1.5, -2.0, -3.0])
+    np.testing.assert_allclose(np.asarray(comp.contribution_scores(prev, new)), [0.5, 0.0, 6.0])
+
+
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=300))
+@settings(max_examples=25, deadline=None)
+def test_quant_roundtrip_error_bound(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    q, s = comp.quantize(x)
+    back = comp.dequantize(q, s)
+    step = float(s)
+    assert np.abs(np.asarray(back) - np.asarray(x)).max() <= 0.51 * step + 1e-9
+
+
+def test_compression_ratio():
+    assert comp.compression_ratio(CFG, comp.n_score_buckets(CFG)) == 1.0
+    assert 0 < comp.compression_ratio(CFG, 1) < 0.5

@@ -1,0 +1,118 @@
+"""Data pipeline: Darknet annotation format, partitioning, target building."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_arch
+from repro.core.rounds import FedConfig
+from repro.data import darknet, partition, synthetic
+from repro.data.pipeline import fed_batches
+from repro.models.yolov3 import ANCHORS
+
+bbox_st = st.builds(
+    darknet.BBox,
+    label=st.integers(0, 9),
+    x=st.floats(0.05, 0.95),
+    y=st.floats(0.05, 0.95),
+    w=st.floats(0.01, 0.5),
+    h=st.floats(0.01, 0.5),
+)
+
+
+@given(st.lists(bbox_st, max_size=8))
+@settings(max_examples=25, deadline=None)
+def test_darknet_roundtrip(boxes):
+    text = darknet.write_annotation(boxes)
+    back = darknet.parse_annotation(text)
+    assert len(back) == len(boxes)
+    for a, b in zip(boxes, back):
+        assert a.label == b.label
+        np.testing.assert_allclose([a.x, a.y, a.w, a.h], [b.x, b.y, b.w, b.h], atol=1e-5)
+
+
+def test_darknet_rejects_malformed():
+    with pytest.raises(ValueError):
+        darknet.parse_annotation("0 0.5 0.5 0.1")  # 4 fields
+    with pytest.raises(ValueError):
+        darknet.parse_annotation("0 1.5 0.5 0.1 0.1")  # out of range
+
+
+def test_darknet_skips_comments_and_blanks():
+    boxes = darknet.parse_annotation("# header\n\n1 0.5 0.5 0.2 0.2\n")
+    assert len(boxes) == 1 and boxes[0].label == 1
+
+
+def test_map_annotations(tmp_path):
+    src = tmp_path / "cam0"
+    src.mkdir()
+    (src / "img1.txt").write_text("0 0.5 0.5 0.2 0.2")
+    (src / "img2.txt").write_text("1 0.25 0.25 0.1 0.1\n2 0.75 0.75 0.1 0.1")
+    out = darknet.map_annotations(src, tmp_path / "train")
+    assert set(out) == {"img1", "img2"}
+    assert (tmp_path / "train" / "img2.txt").exists()
+
+
+def test_build_targets_places_objects():
+    boxes = [[darknet.BBox(1, 0.51, 0.26, 0.2, 0.2)]]
+    tgts = darknet.build_targets(boxes, [8, 4, 2], 3, 3, ANCHORS)
+    t0 = tgts[0]
+    assert t0["obj"].sum() == 1.0
+    gy, gx = np.argwhere(t0["obj"][0].sum(-1))[0][:2]
+    assert (gx, gy) == (int(0.51 * 8), int(0.26 * 8))
+    assert t0["cls"][0, gy, gx].sum() == 1.0
+
+
+def test_iid_partition_covers_all():
+    parts = partition.iid_partition(103, 5, np.random.default_rng(0))
+    joined = np.concatenate(parts)
+    assert len(joined) == 103 and len(set(joined.tolist())) == 103
+
+
+@given(st.integers(2, 8), st.floats(0.05, 10.0))
+@settings(max_examples=15, deadline=None)
+def test_dirichlet_partition_properties(n_clients, alpha):
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, 5, 400)
+    parts = partition.dirichlet_partition(labels, n_clients, alpha, rng)
+    joined = np.concatenate(parts)
+    assert len(joined) == 400 and len(set(joined.tolist())) == 400  # exact cover
+    assert all(len(p) >= 1 for p in parts)
+
+
+def test_dirichlet_skew_increases_with_small_alpha():
+    rng = np.random.default_rng(2)
+    labels = rng.integers(0, 8, 4000)
+    skew_lo = partition.partition_stats(
+        partition.dirichlet_partition(labels, 4, 0.05, np.random.default_rng(3)), labels
+    )["skew_tv"].mean()
+    skew_hi = partition.partition_stats(
+        partition.dirichlet_partition(labels, 4, 100.0, np.random.default_rng(3)), labels
+    )["skew_tv"].mean()
+    assert skew_lo > skew_hi
+
+
+def test_markov_tokens_deterministic_structure():
+    src = synthetic.MarkovTokens(64, seed=0)
+    a = src.sample(np.random.default_rng(0), 2, 50)
+    b = src.sample(np.random.default_rng(0), 2, 50)
+    np.testing.assert_array_equal(a, b)
+    assert a.max() < 64
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "hubert-xlarge", "llava-next-34b", "fedyolov3"])
+def test_fed_batches_shapes(arch):
+    cfg = get_arch(arch).reduced()
+    fed = FedConfig(n_clients=2, local_steps=2, client_axis="data")
+    it = fed_batches(cfg, fed, batch=2, seq=32, img_size=32)
+    batch = next(it)
+    if cfg.family == "yolo":
+        assert batch["images"].shape == (2, 2, 2, 32, 32, 3)
+        assert len(batch["targets"]) == 3
+        assert batch["targets"][0]["obj"].shape[:3] == (2, 2, 2)
+    elif cfg.modality == "audio":
+        assert batch["frames"].shape == (2, 2, 2, 32, cfg.d_model)
+    elif cfg.modality == "vlm":
+        assert batch["tokens"].shape[3] + batch["images"].shape[3] == 32
+    else:
+        assert batch["tokens"].shape == (2, 2, 2, 32)

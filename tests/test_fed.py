@@ -1,0 +1,140 @@
+"""Federated engine behaviour: Eq.5/Eq.6 semantics, all aggregation modes
+train, quant8 tracks dense, FedSGD(E=1) == stacked FedAvg(E=1)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import compression as comp
+from repro.core import fedavg
+from repro.core import rounds as R
+from repro.core.rounds import FedConfig
+from repro.optim import sgd
+
+CFG = get_arch("qwen3-1.7b").reduced()
+
+
+def toy_batch(fed, b=2, S=16, seed=1):
+    rng = np.random.default_rng(seed)
+    if fed.aggregation == "fedsgd":
+        shape = (fed.local_steps, b * fed.n_clients, S)
+    else:
+        shape = (fed.n_clients, fed.local_steps, b, S)
+    return {"tokens": jnp.asarray(rng.integers(0, CFG.vocab_size, shape), jnp.int32)}
+
+
+@pytest.mark.parametrize("mode", ["dense", "eq6", "quant8", "static_topn"])
+def test_modes_train(mode):
+    fed = FedConfig(n_clients=4, local_steps=2, aggregation=mode, topn=2, client_axis="data", data_axis=None)
+    opt = sgd(lr=0.05)
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with jax.set_mesh(mesh):
+        state = R.make_state(CFG, fed, opt, jax.random.key(0))
+        fr = jax.jit(R.build_fed_round(CFG, fed, opt, mesh))
+        batch = toy_batch(fed)
+        w = R.uniform_weights(4)
+        losses = []
+        for _ in range(5):
+            state, m = fr(state, batch, w)
+            losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], (mode, losses)
+    assert int(state["round"]) == 5
+
+
+def test_quant8_tracks_dense():
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    opt = sgd(lr=0.05)
+    out = {}
+    for mode in ["dense", "quant8"]:
+        fed = FedConfig(n_clients=4, local_steps=1, aggregation=mode, client_axis="data", data_axis=None)
+        with jax.set_mesh(mesh):
+            state = R.make_state(CFG, fed, opt, jax.random.key(0))
+            fr = jax.jit(R.build_fed_round(CFG, fed, opt, mesh))
+            batch = toy_batch(fed)
+            for _ in range(3):
+                state, m = fr(state, batch, R.uniform_weights(4))
+        out[mode] = float(m["loss"])
+    assert abs(out["quant8"] - out["dense"]) < 0.05, out
+
+
+def test_fedsgd_equals_stacked_fedavg_e1():
+    """Param-averaging == grad-averaging for E=1 SGD (DESIGN.md §5)."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    opt = sgd(lr=0.05, momentum=0.0)
+    C, b, S = 4, 2, 16
+    rng = np.random.default_rng(7)
+    toks = rng.integers(0, CFG.vocab_size, (C, 1, b, S))
+    fed_a = FedConfig(n_clients=C, local_steps=1, aggregation="dense", client_axis="data", data_axis=None)
+    fed_s = FedConfig(n_clients=C, local_steps=1, aggregation="fedsgd", client_axis="data", data_axis=None)
+    with jax.set_mesh(mesh):
+        st_a = R.make_state(CFG, fed_a, opt, jax.random.key(3))
+        st_s = {
+            "params": jax.tree.map(lambda x: x[0], st_a["params"]),
+            "opt": jax.tree.map(lambda x: x[0], st_a["opt"]),
+            "round": jnp.int32(0),
+        }
+        fr_a = jax.jit(R.build_fed_round(CFG, fed_a, opt, mesh))
+        fr_s = jax.jit(R.build_fed_round(CFG, fed_s, opt, mesh))
+        st_a, _ = fr_a(st_a, {"tokens": jnp.asarray(toks, jnp.int32)}, R.uniform_weights(C))
+        # fedsgd sees the same tokens as one big batch
+        st_s, _ = fr_s(st_s, {"tokens": jnp.asarray(toks.transpose(1, 0, 2, 3).reshape(1, C * b, S), jnp.int32)}, R.uniform_weights(C))
+    a0 = jax.tree.leaves(st_a["params"])[0][0]
+    s0 = jax.tree.leaves(st_s["params"])[0]
+    np.testing.assert_allclose(np.asarray(a0, np.float32), np.asarray(s0, np.float32), rtol=2e-4, atol=2e-5)
+
+
+def test_eq6_uploads_topn_only():
+    """Clients upload exactly topn buckets; non-uploaded layers keep local values."""
+    tpl = R.make_template(CFG)
+    fed = FedConfig(n_clients=3, local_steps=1, aggregation="eq6", topn=1, client_axis="data")
+    opt = sgd()
+    state = R.make_state(CFG, fed, opt, jax.random.key(0))
+    stacked = state["params"]
+    nb = comp.n_score_buckets(CFG)
+    # every client drifts hugely on bucket 0 (-> its top-1 upload) and a
+    # little, client-dependently, on bucket 1 (never uploaded)
+    big = jnp.zeros(nb).at[0].set(1.0)
+    small = jnp.zeros(nb).at[1].set(1.0)
+
+    stacked = jax.vmap(lambda p, c: jax.tree.map(
+        lambda x, d: x + d,
+        p,
+        jax.tree.map(
+            lambda ones_b, ones_s: 100.0 * (c + 1) * ones_b + 0.01 * (c + 1) * ones_s,
+            comp.apply_layer_mask(CFG, tpl, jax.tree.map(jnp.ones_like, p), big),
+            comp.apply_layer_mask(CFG, tpl, jax.tree.map(jnp.ones_like, p), small),
+        ),
+    ))(stacked, jnp.arange(3.0))
+    prev = state["prev_sums"]
+    new, sums = fedavg.aggregate_eq6(CFG, tpl, stacked, R.uniform_weights(3), prev, topn=1)
+    # bucket 0 synced (all uploaded it), bucket 1 still divergent
+    new_sums = jax.vmap(lambda p: comp.layer_sums(CFG, tpl, p))(new)
+    assert float(jnp.max(jnp.abs(new_sums[:, 0] - new_sums[0, 0]))) < 1e-3
+    assert float(jnp.max(jnp.abs(new_sums[:, 1] - new_sums[0, 1]))) > 1e-3
+    assert sums.shape == (3, nb)
+
+
+def test_static_schedule_covers_all_layers():
+    nb = comp.n_score_buckets(CFG)
+    seen = set()
+    for r in range(nb):
+        seen.update(fedavg.static_layer_schedule(nb, 1, r))
+    assert seen == set(range(nb))
+
+
+def test_microbatching_matches_full_batch():
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    opt = sgd(lr=0.05, momentum=0.0)
+    rng = np.random.default_rng(11)
+    toks = jnp.asarray(rng.integers(0, CFG.vocab_size, (2, 1, 4, 16)), jnp.int32)
+    outs = []
+    for mb in (1, 4):
+        fed = FedConfig(n_clients=2, local_steps=1, aggregation="dense", client_axis="data", data_axis=None, microbatches=mb)
+        with jax.set_mesh(mesh):
+            st = R.make_state(CFG, fed, opt, jax.random.key(5))
+            fr = jax.jit(R.build_fed_round(CFG, fed, opt, mesh))
+            st, m = fr(st, {"tokens": toks}, R.uniform_weights(2))
+        outs.append(np.asarray(jax.tree.leaves(st["params"])[0], np.float32))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-5)

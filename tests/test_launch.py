@@ -1,0 +1,143 @@
+"""Launch-layer units that don't need the 512-device fleet: plan matrix
+coverage, input_specs shapes, HLO analyzer trip-count handling, roofline."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, SHAPES, get_arch, get_shape, shape_applicable
+from repro.launch import hlo_analysis, roofline, specs
+
+
+def test_matrix_is_10x4():
+    assert len(ASSIGNED) == 10
+    assert len(SHAPES) == 4
+    pairs = [(a.name, s.name) for a in ASSIGNED for s in SHAPES.values()]
+    assert len(pairs) == 40
+
+
+def test_skip_matrix():
+    skips = {
+        (a.name, s.name)
+        for a in ASSIGNED
+        for s in SHAPES.values()
+        if not shape_applicable(a, s)[0]
+    }
+    assert ("hubert-xlarge", "decode_32k") in skips
+    assert ("hubert-xlarge", "long_500k") in skips
+    for dense in ["granite-3-8b", "qwen3-1.7b", "minitron-8b", "llava-next-34b", "grok-1-314b", "granite-moe-1b-a400m"]:
+        assert (dense, "long_500k") in skips
+    # sub-quadratic archs run long_500k
+    for ok in ["mamba2-1.3b", "zamba2-2.7b", "gemma3-27b"]:
+        assert (ok, "long_500k") not in skips
+    assert len(skips) == 8
+
+
+@pytest.mark.parametrize("multi", [False, True])
+@pytest.mark.parametrize("arch", [a.name for a in ASSIGNED])
+def test_plans_and_input_specs_build(arch, multi):
+    for shape in SHAPES.values():
+        ok, _ = shape_applicable(get_arch(arch), shape)
+        if not ok:
+            continue
+        plan = specs.make_plan(arch, shape.name, multi)
+        args, pspecs_ = specs.input_specs(plan)
+        # structures must match so jit in_shardings align
+        assert jax.tree.structure(args) == jax.tree.structure(
+            pspecs_, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
+        if shape.kind == "train":
+            state = args[0]
+            # every stacked leaf carries the client dim
+            if plan.kind == "train":
+                C = plan.fed.n_clients
+                for leaf in jax.tree.leaves(state["params"]):
+                    assert leaf.shape[0] == C
+        if shape.kind == "decode":
+            params, cache, tokens, pos = args
+            assert tokens.shape == (shape.global_batch, 1)
+
+
+def test_hlo_analyzer_counts_scan_trips():
+    D, L = 64, 6
+
+    def scanned(x, ws):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+
+        h, _ = jax.lax.scan(body, x, ws)
+        return h
+
+    x = jnp.ones((8, D))
+    ws = jnp.ones((L, D, D))
+    txt = jax.jit(scanned).lower(x, ws).compile().as_text()
+    costs = hlo_analysis.analyze(txt)
+    want = 2 * 8 * D * D * L
+    np.testing.assert_allclose(costs.flops, want, rtol=1e-6)
+
+
+def test_hlo_analyzer_collectives():
+    mesh = jax.make_mesh((1,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+    # single-device: no collectives expected
+    with jax.set_mesh(mesh):
+        txt = jax.jit(lambda x: x * 2).lower(jnp.ones(8)).compile().as_text()
+    costs = hlo_analysis.analyze(txt)
+    assert not costs.coll_bytes
+
+
+def test_roofline_terms_and_dominance():
+    arch = get_arch("qwen3-1.7b")
+    shape = get_shape("train_4k")
+    rl = roofline.terms(1e15, 1e12, {"all-reduce": 1e11}, 256, arch, shape)
+    assert rl.compute_s > 0 and rl.memory_s > 0 and rl.collective_s > 0
+    assert rl.dominant in ("compute", "memory", "collective")
+    # all-reduce counts 2x
+    np.testing.assert_allclose(rl.collective_s, 2 * 1e11 / 50e9)
+    assert rl.model_flops == 6.0 * roofline.active_params(arch) * 256 * 4096
+
+
+def test_moe_active_params_smaller_than_total():
+    from repro.core.rounds import make_template
+    from repro.models.params import count_params
+
+    grok = get_arch("grok-1-314b")
+    assert roofline.active_params(grok) < count_params(make_template(grok))
+
+
+def test_default_topn():
+    assert specs.default_topn(get_arch("granite-3-8b")) == 10
+
+
+def test_cross_pod_classifier():
+    assert hlo_analysis.crosses_boundary("replica_groups={{0,256},{1,257}}, x", 256)
+    assert not hlo_analysis.crosses_boundary("replica_groups={{0,1},{256,257}}, x", 256)
+    # iota format: [256,2]<=[512] -> consecutive pairs, all within one pod
+    assert not hlo_analysis.crosses_boundary("replica_groups=[256,2]<=[512], y", 256)
+    # [2,256]<=[512] transposed pairs device i with i+256 -> crosses
+    assert hlo_analysis.crosses_boundary("replica_groups=[256,2]<=[2,256]T(1,0), y", 256)
+
+
+def test_variant_plans_build():
+    for variant in ["moe_sort", "moe_ep", "moe_sort_ep"]:
+        plan = specs.make_plan("granite-moe-1b-a400m", "train_4k", True, variant=variant)
+        args, ps = specs.input_specs(plan)
+        assert jax.tree.structure(args) == jax.tree.structure(
+            ps, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        )
+        if "ep" in variant:
+            assert plan.rules["expert"] == "model" and plan.rules["ffn"] is None
+        if "sort" in variant:
+            assert plan.arch.moe_impl == "sort"
+    plan = specs.make_plan("gemma3-27b", "train_4k", False, variant="zero1")
+    assert plan.rules["embed"] is None and plan.opt_rules["embed"] == "data"
+    plan = specs.make_plan("qwen3-1.7b", "train_4k", False, variant="micro2")
+    assert plan.fed.microbatches == 2
+
+
+def test_roofline_cross_pod_term():
+    arch = get_arch("qwen3-1.7b")
+    shape = get_shape("train_4k")
+    rl = roofline.terms(1e12, 1e12, {"all-gather": 1e9}, 512, arch, shape, cross_pod_bytes={"all-gather": 5e8})
+    np.testing.assert_allclose(rl.cross_pod_s, 5e8 / 25e9)
+    assert rl.cross_pod_bytes == 5e8

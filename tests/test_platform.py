@@ -1,0 +1,139 @@
+"""Platform components: scheduler (Yu 2017), explorer, task manager, COS."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ObjectStore
+from repro.core.explorer import monitor, simulated_loads
+from repro.core.scheduler import SchedulerConfig, TaskScheduler
+from repro.core.task_manager import FederatedTask, TaskManager, TaskStatus
+
+
+# ----------------------------- scheduler -----------------------------------
+
+def test_scheduler_prefers_low_load():
+    s = TaskScheduler(4, SchedulerConfig(max_participants=2, fairness_rounds=100))
+    for c in range(4):
+        s.report_quality(c, 1.0)
+        s.report_quality(c, 0.5)  # identical qualities
+    w = s.select(np.array([0.9, 0.1, 0.8, 0.2]))
+    assert w[1] > 0 and w[3] > 0 and w[0] == 0 and w[2] == 0
+    assert abs(w.sum() - 1.0) < 1e-9
+
+
+def test_scheduler_prefers_quality():
+    s = TaskScheduler(3, SchedulerConfig(max_participants=1, beta=0.0, fairness_rounds=100))
+    s.report_quality(0, 5.0); s.report_quality(0, 4.9)   # small improvement
+    s.report_quality(1, 5.0); s.report_quality(1, 1.0)   # big improvement
+    s.report_quality(2, 5.0); s.report_quality(2, 5.0)   # none
+    w = s.select(np.zeros(3))
+    assert w[1] == 1.0
+
+
+def test_scheduler_fairness_floor():
+    s = TaskScheduler(3, SchedulerConfig(max_participants=1, fairness_rounds=2))
+    s.quality = np.array([1.0, 0.0, 0.0])
+    for _ in range(3):
+        w = s.select(np.zeros(3))
+    # after 2 idle rounds clients 1,2 force-join
+    assert w[1] > 0 and w[2] > 0
+
+
+@given(st.integers(2, 12), st.integers(1, 12))
+@settings(max_examples=20, deadline=None)
+def test_scheduler_invariants(n, k):
+    s = TaskScheduler(n, SchedulerConfig(max_participants=min(k, n)))
+    rng = np.random.default_rng(n * 31 + k)
+    for _ in range(5):
+        w = s.select(rng.random(n))
+        assert w.shape == (n,)
+        assert abs(w.sum() - 1.0) < 1e-9
+        assert (w >= 0).all()
+
+
+# ----------------------------- explorer ------------------------------------
+
+def test_explorer_monitor_reads_proc():
+    r = monitor(0.01)
+    assert 0.0 <= r.cpu_frac <= 1.0
+    assert 0.0 <= r.mem_frac <= 1.0
+    assert r.load1 >= 0
+
+
+def test_simulated_loads_range():
+    loads = simulated_loads(8, np.random.default_rng(0))
+    assert loads.shape == (8,) and (loads >= 0).all() and (loads <= 1).all()
+
+
+# ----------------------------- task manager --------------------------------
+
+def test_task_manager_runs_to_completion():
+    tm = TaskManager()
+    calls = {"a": 0, "b": 0}
+
+    def mk(tid, total):
+        def run(r):
+            calls[tid] += 1
+            return {"round": r}
+
+        return FederatedTask(tid, "qwen3-1.7b", total, run)
+
+    tm.register(mk("a", 3))
+    tm.register(mk("b", 5))
+    tm.run_to_completion()
+    assert calls == {"a": 3, "b": 5}
+    assert all(t.status == TaskStatus.DONE for t in tm.tasks.values())
+
+
+def test_task_manager_isolates_failures():
+    tm = TaskManager()
+
+    def boom(r):
+        raise RuntimeError("client died")
+
+    tm.register(FederatedTask("bad", "x", 2, boom))
+    tm.register(FederatedTask("good", "x", 1, lambda r: {}))
+    tm.run_to_completion()
+    assert tm.tasks["bad"].status == TaskStatus.FAILED
+    assert tm.tasks["good"].status == TaskStatus.DONE
+
+
+def test_task_manager_rejects_duplicates():
+    tm = TaskManager()
+    tm.register(FederatedTask("t", "x", 1, lambda r: {}))
+    with pytest.raises(ValueError):
+        tm.register(FederatedTask("t", "x", 1, lambda r: {}))
+
+
+# ----------------------------- object store (COS) --------------------------
+
+def test_object_store_roundtrip(tmp_path):
+    store = ObjectStore(tmp_path)
+    params = {"w": jnp.arange(6.0).reshape(2, 3), "b": {"x": jnp.ones(4)}}
+    store.put_model("task", 0, params, {"loss": 1.0})
+    store.put_model("task", 1, jax.tree.map(lambda x: x * 2, params))
+    assert store.rounds("task") == [0, 1]
+    back = store.restore_into("task", params, round_idx=1)
+    np.testing.assert_allclose(np.asarray(back["w"]), np.asarray(params["w"]) * 2)
+    latest = store.restore_into("task", params)  # newest round
+    np.testing.assert_allclose(np.asarray(latest["b"]["x"]), 2.0)
+
+
+def test_object_store_dedup_and_gc(tmp_path):
+    store = ObjectStore(tmp_path)
+    params = {"w": jnp.ones(10)}
+    k1 = store.put_model("t", 0, params)
+    k2 = store.put_model("t", 1, params)  # identical content -> same blob
+    assert k1 == k2
+    for r in range(2, 8):
+        store.put_model("t", r, {"w": jnp.full(10, float(r))})
+    removed = store.gc(keep=2)
+    assert store.rounds("t") == [6, 7]
+    assert removed > 0
+    # persistence across reopen
+    store2 = ObjectStore(tmp_path)
+    assert store2.rounds("t") == [6, 7]

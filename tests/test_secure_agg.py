@@ -1,0 +1,58 @@
+"""Secure aggregation: mask cancellation, privacy, FedAvg equivalence."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import secure_agg as sa
+
+
+def _updates(n, shape=(16,), seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        {"w": jnp.asarray(rng.normal(size=shape), jnp.float32), "b": {"x": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}}
+        for _ in range(n)
+    ]
+
+
+@given(st.integers(2, 6), st.integers(0, 5))
+@settings(max_examples=12, deadline=None)
+def test_masks_cancel_exactly(n, round_idx):
+    ups = _updates(n, seed=round_idx)
+    secure = sa.secure_fedavg(ups, round_idx, scale=100.0)
+    plain = jax.tree.map(lambda *xs: sum(xs) / n, *ups)
+    for a, b in zip(jax.tree.leaves(secure), jax.tree.leaves(plain)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+def test_masked_update_hides_individual():
+    """A single masked upload is dominated by mask noise (privacy)."""
+    ups = _updates(3)
+    masked = sa.mask_update(ups[0], 0, 3, round_idx=0, scale=100.0)
+    diff = np.asarray(masked["w"]) - np.asarray(ups[0]["w"])
+    assert np.abs(diff).mean() > 10.0  # mask >> signal
+    # and correlation with the true update is negligible
+    corr = np.corrcoef(np.asarray(masked["w"]), np.asarray(ups[0]["w"]))[0, 1]
+    assert abs(corr) < 0.9
+
+
+def test_pair_seed_symmetric_and_round_dependent():
+    assert sa.pair_seed(1, 3, 7) == sa.pair_seed(3, 1, 7)
+    assert sa.pair_seed(1, 3, 7) != sa.pair_seed(1, 3, 8)
+    assert sa.pair_seed(1, 3, 7, session=1) != sa.pair_seed(1, 3, 7, session=2)
+
+
+def test_monitor_render():
+    from repro.core.monitor import export_json, render_task, sparkline
+    from repro.core.server import RoundRecord
+
+    hist = [RoundRecord(i, 5.0 - 0.1 * i, [0.5, 0.5, 0.0], 0.3) for i in range(10)]
+    out = render_task("demo", hist, 3, upload_bytes_per_round=2.5e6)
+    assert "round 10/10" in out and "2/3 participating" in out and "2.50 MB" in out
+    assert len(sparkline([1, 2, 3])) == 3
+    import json
+
+    j = json.loads(export_json("demo", hist, 3))
+    assert len(j["rounds"]) == 10 and j["rounds"][-1]["participants"] == 2
