@@ -1,17 +1,33 @@
 """Kernel micro-benchmarks: wall time of the jnp reference paths on CPU
 (interpret-mode Pallas timing is not meaningful) plus derived bytes/FLOPs
-per call for the roofline narrative."""
+per call for the roofline narrative.
+
+`agg_rows` benchmarks the packed aggregation transport against the legacy
+per-leaf tree path (dense / eq6 / quant8 at three sizes): wall time, kernel
+launches per round (packed = 1 vs one per leaf), and collective payload
+bytes (quant8's int8 operand moves 4x fewer bytes than dense f32 at equal
+shapes; the per-block f32 scale sideband is reported separately).
+
+Running this module as a script appends one timestamped record to
+``BENCH_kernel_bench.json`` at the repo root — the cross-PR trajectory of
+these numbers.
+"""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import packing
 from repro.kernels import ref
 from repro.models.mamba2 import ssd_chunked
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_kernel_bench.json"
 
 
 def _timeit(fn, *args, iters=5):
@@ -55,6 +71,115 @@ def rows():
     return out
 
 
+def _tree_of(C: int, N: int, n_leaves: int) -> dict:
+    """Synthetic client-stacked param tree: n_leaves equal (C, N/n_leaves).
+
+    Keys are zero-padded so jax.tree.leaves order == slot order."""
+    rng = np.random.default_rng(3)
+    per = N // n_leaves
+    return {f"leaf{i:02d}": jnp.asarray(rng.normal(size=(C, per)), jnp.float32) for i in range(n_leaves)}
+
+
+def agg_rows():
+    """Packed-vs-tree aggregation: dense / eq6-style masked / quant8.
+
+    The packed side times the actual engine entry point
+    (`packing.masked_bucket_mean` over a real PackSpec) — one fused
+    reduction per round — against the seed's per-leaf tree walk.
+    """
+    out = []
+    C, n_leaves, block = 8, 32, 1024
+    w = jnp.full((C,), 1 / C, jnp.float32)
+    for N in (262_144, 1_048_576, 4_194_304):
+        tree = _tree_of(C, N, n_leaves)
+        per = N // n_leaves
+        # one score bucket per leaf, like scan-stacked layers
+        spec = packing.PackSpec(
+            N, n_leaves,
+            tuple(
+                packing.LeafSlot(f"leaf{i}", (per,), i * per, per, i, 1)
+                for i in range(n_leaves)
+            ),
+        )
+        packed = packing.pack(spec, tree)
+        nb = N // block
+        bytes_dense = C * N * 4
+        bytes_q_payload = C * N  # int8 operand: exactly 4x fewer than f32
+        bytes_q_scales = C * nb * 4
+        wmask = jnp.asarray(np.random.default_rng(0).integers(0, 2, (C, n_leaves)), jnp.float32) * w[:, None]
+        ones = jnp.ones((C,), jnp.float32)
+
+        # pack itself (once per round on the packed path, absent on tree's)
+        pack_fn = jax.jit(lambda t: packing.pack(spec, t))
+        out.append((f"agg/pack_{C}x{N>>10}k", _timeit(lambda t: pack_fn(t), tree), f"bytes={bytes_dense/1e6:.1f}MB"))
+
+        # dense
+        tree_fn = jax.jit(lambda t: [ref.fedavg_masked_mean(x, w, ones) for x in t.values()])
+        us_tree = _timeit(lambda t: tree_fn(t), tree)
+        packed_fn = jax.jit(lambda p: packing.weighted_mean(p, w))
+        us_packed = _timeit(lambda p: packed_fn(p), packed)
+        out.append((
+            f"agg/dense_{C}x{N>>10}k_tree", us_tree,
+            f"launches={n_leaves};bytes={bytes_dense/1e6:.1f}MB",
+        ))
+        out.append((
+            f"agg/dense_{C}x{N>>10}k_packed", us_packed,
+            f"launches=1;bytes={bytes_dense/1e6:.1f}MB",
+        ))
+
+        # eq6-style masked mean (per-bucket weight mask)
+        masks = {k: jnp.asarray(np.random.default_rng(i).integers(0, 2, C), jnp.float32) for i, k in enumerate(tree)}
+        tree_fn6 = jax.jit(lambda t: [ref.fedavg_masked_mean(x, w, masks[k]) for k, x in t.items()])
+        us_tree = _timeit(lambda t: tree_fn6(t), tree)
+        packed_fn6 = jax.jit(lambda p: packing.masked_bucket_mean(p, wmask, spec))
+        us_packed = _timeit(lambda p: packed_fn6(p), packed)
+        out.append((f"agg/eq6_{C}x{N>>10}k_tree", us_tree, f"launches={n_leaves}"))
+        out.append((f"agg/eq6_{C}x{N>>10}k_packed", us_packed, "launches=1"))
+
+        # quant8 transport (quantize + dequantize + reduce)
+        def tree_q(t):
+            outs = []
+            for x in t.values():
+                q, s = ref.quantize_blocks(x.reshape(-1), block)
+                d = ref.dequantize_blocks(q, s, block).reshape(x.shape)
+                outs.append(jnp.einsum("c,cn->n", w, d))
+            return outs
+
+        def packed_q(p):
+            q, s = packing.quantize_rows_ref(p, block)
+            d = packing.dequantize_rows_ref(q, s, block)
+            return jnp.einsum("c,cn->n", w, d)
+
+        tree_qj, packed_qj = jax.jit(tree_q), jax.jit(packed_q)
+        us_tree = _timeit(lambda t: tree_qj(t), tree)
+        us_packed = _timeit(lambda p: (packed_qj(p),), packed)
+        ratio = bytes_dense / bytes_q_payload
+        out.append((
+            f"agg/quant8_{C}x{N>>10}k_tree", us_tree,
+            f"launches={2*n_leaves};payload={bytes_q_payload/1e6:.1f}MB",
+        ))
+        out.append((
+            f"agg/quant8_{C}x{N>>10}k_packed", us_packed,
+            f"launches=2;payload={bytes_q_payload/1e6:.1f}MB;scales={bytes_q_scales/1e6:.2f}MB;payload_ratio_vs_dense={ratio:.1f}x",
+        ))
+    return out
+
+
+def emit_trajectory(all_rows) -> None:
+    """Append one timestamped record to the BENCH_*.json trajectory."""
+    traj = []
+    if BENCH_JSON.exists():
+        traj = json.loads(BENCH_JSON.read_text())
+    traj.append({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "rows": [[n, round(float(v), 1), e] for n, v, e in all_rows],
+    })
+    BENCH_JSON.write_text(json.dumps(traj, indent=1))
+
+
 if __name__ == "__main__":
-    for name, val, extra in rows():
+    all_rows = rows() + agg_rows()
+    for name, val, extra in all_rows:
         print(f"{name},{val:.1f},{extra}")
+    emit_trajectory(all_rows)
+    print(f"# trajectory appended to {BENCH_JSON}")

@@ -17,16 +17,17 @@ def main() -> None:
     from benchmarks import bandwidth_model, convergence, kernel_bench, roofline_table, upload_time
 
     modules = [
-        ("upload_time", upload_time),
-        ("bandwidth_model", bandwidth_model),
-        ("convergence", convergence),
-        ("kernel_bench", kernel_bench),
-        ("roofline_table", roofline_table),
+        ("upload_time", upload_time.rows),
+        ("bandwidth_model", bandwidth_model.rows),
+        ("convergence", convergence.rows),
+        ("kernel_bench", kernel_bench.rows),
+        ("kernel_bench_agg", kernel_bench.agg_rows),
+        ("roofline_table", roofline_table.rows),
     ]
     failed = 0
-    for name, mod in modules:
+    for name, rows_fn in modules:
         try:
-            for row_name, val, extra in mod.rows():
+            for row_name, val, extra in rows_fn():
                 print(f"{row_name},{val},{extra}")
         except Exception:  # noqa: BLE001
             failed += 1

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.core import compression as comp
+from repro.core import packing
 from repro.core import rounds as R
 from repro.core.rounds import FedConfig
 from repro.data.pipeline import fed_batches
@@ -32,9 +33,9 @@ def main() -> None:
         state = R.make_state(CFG, fed, opt, jax.random.key(0))
         fr = jax.jit(R.build_fed_round(CFG, fed, opt, mesh))
         batch = jax.tree.map(jnp.asarray, next(fed_batches(CFG, fed, batch=2, seq=32)))
-        before = state["prev_sums"]
+        before = state["agg"]["prev_sums"]
         state, _ = fr(state, batch, R.uniform_weights(3))
-        scores = comp.contribution_scores(before, state["prev_sums"])
+        scores = comp.contribution_scores(before, state["agg"]["prev_sums"])
 
     nb = comp.n_score_buckets(CFG)
     print(f"{CFG.name}: {nb} layer buckets ({CFG.n_layers} layers + misc)")
@@ -51,12 +52,21 @@ def main() -> None:
     print(f"  int8 delta      : {n/1e6:8.2f} MB (+{nb*4} B scales)")
     print(f"  Eq.6 + int8     : {n*comp.compression_ratio(CFG, fed.topn)/1e6:8.2f} MB")
 
-    # kernel-backed aggregation path (Pallas, interpret mode on CPU)
+    # packed aggregation engine: the whole tree as ONE buffer, one launch
     w = R.uniform_weights(3)
-    masks = jax.vmap(lambda s: comp.topn_mask(s, fed.topn))(scores).astype(jnp.float32)
+    spec = packing.build_pack_spec(CFG, tpl)
+    packed = packing.pack(spec, state["params"])
+    wmask = jax.vmap(lambda s: comp.topn_mask(s, fed.topn))(scores).astype(jnp.float32) * w[:, None]
+    num, den = ops.packed_bucket_reduce(packed, wmask, jnp.asarray(packing.bucket_ids(spec)))
+    n_leaves = len(jax.tree.leaves(state["params"]))
+    print(f"\npacked engine: {n_leaves} tensors -> one ({packed.shape[0]}, {packed.shape[1]}) "
+          f"buffer, 1 Pallas launch (legacy tree path: {n_leaves} launches); "
+          f"{int(jnp.sum(den > 0))}/{spec.n_total} elements uploaded this round")
+
+    # legacy per-leaf kernel path, kept as the reference
     flat_mask = jax.tree.map(lambda _: jnp.ones(3), state["params"])  # per-leaf demo mask
     agg = ops.fedavg_tree(state["params"], w, flat_mask)
-    print(f"\nPallas fedavg_tree aggregated {len(jax.tree.leaves(agg))} tensors "
+    print(f"legacy fedavg_tree aggregated {len(jax.tree.leaves(agg))} tensors "
           f"({sum(x.size for x in jax.tree.leaves(agg))/1e6:.1f}M values)")
 
 

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the exact command the roadmap pins, runnable from
+# anywhere. Extra args are forwarded to pytest (e.g. scripts/check.sh -k agg).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

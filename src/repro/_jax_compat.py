@@ -1,0 +1,63 @@
+"""Guarded compatibility layer for older installed jax (0.4.x).
+
+The codebase is written against the current jax API (`jax.set_mesh`,
+`jax.shard_map`, `jax.sharding.AxisType`, `jax.make_mesh(axis_types=...)`).
+The container bakes jax 0.4.37, where those live under older names or don't
+exist; installing a newer jax is not an option here. Each patch below is
+applied ONLY when the attribute is missing, so on a current jax this module
+is a no-op. Imported from ``repro/__init__`` so any `repro.*` import makes
+the surface uniform.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding
+
+
+def _patch() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):  # newer jax: explicit-sharding mesh axes
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    # signature inspection only — calling make_mesh here would initialize
+    # the backend at import time, before callers set XLA_FLAGS/platforms
+    _orig_make_mesh = jax.make_mesh
+    accepts_axis_types = "axis_types" in inspect.signature(_orig_make_mesh).parameters
+    if not accepts_axis_types:
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            # 0.4.x: Mesh is itself the ambient-mesh context manager
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _esm
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kwargs):
+            return _esm(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=bool(check_vma), **kwargs,
+            )
+
+        jax.shard_map = shard_map
+
+
+_patch()

@@ -3,12 +3,14 @@
 fedavg (Eq. 5) + compression (Eq. 6 / int8) + rounds (SPMD fed_round) +
 scheduler/explorer/task_manager/server/client (platform components).
 """
-from repro.core import compression, explorer, fedavg, monitor, rounds, scheduler, secure_agg, server, task_manager
+from repro.core import aggregators, compression, explorer, fedavg, monitor, packing, rounds, scheduler, secure_agg, server, task_manager
 from repro.core.rounds import FedConfig, build_fed_round, make_state, uniform_weights
 from repro.core.server import FLServer
 
 __all__ = [
     "FedConfig",
+    "aggregators",
+    "packing",
     "FLServer",
     "build_fed_round",
     "compression",

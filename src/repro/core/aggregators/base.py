@@ -1,0 +1,115 @@
+"""Aggregator strategy interface + registry (DESIGN.md §7).
+
+An :class:`Aggregator` is the server-side policy for one federated round:
+``init_state`` builds any cross-round aggregator state (Eq. 6 score sums,
+the quant8 base model, server-optimizer moments) and ``aggregate`` maps the
+packed client-stacked update buffer to the packed post-round buffer. All
+modes operate on the single ``(C, N_total)`` buffer from `core.packing`, so
+the hot loop is one masked/weighted reduction regardless of mode.
+
+`core.rounds` and `core.server` dispatch purely through :func:`get` — adding
+an aggregation mode is one `@register`-decorated subclass, and
+``FedConfig.aggregation`` accepts any registered name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import packing
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AggContext:
+    """Everything an aggregator may need, fixed at build time."""
+
+    cfg: Any  # ArchConfig
+    fed: Any  # rounds.FedConfig
+    template: PyTree  # ParamInfo pytree
+    spec: packing.PackSpec
+    mesh: Any = None  # jax Mesh (quant8 int8 collectives) or None
+
+
+class Aggregator:
+    """Strategy interface: init_state / aggregate over the packed buffer."""
+
+    name: str = ""
+    stacked: bool = True  # False -> fedsgd topology: one shared model copy
+
+    def __init__(self, ctx: AggContext):
+        self.ctx = ctx
+
+    # -- cross-round state ---------------------------------------------------
+    def init_state(self, packed0: jax.Array) -> PyTree:
+        """Aggregator state from the packed initial params. Default: none."""
+        return {}
+
+    def state_pspecs(self) -> PyTree:
+        """PartitionSpecs matching init_state's structure. Default: all
+        replicated server-side state; override for client-sharded state."""
+        C = self.ctx.fed.n_clients
+        abs_in = jax.ShapeDtypeStruct((C, self.ctx.spec.n_total), jnp.float32)
+        return jax.tree.map(lambda _: P(), jax.eval_shape(self.init_state, abs_in))
+
+    # -- the round -----------------------------------------------------------
+    def aggregate(
+        self, packed: jax.Array, weights: jax.Array, agg_state: PyTree
+    ) -> tuple[jax.Array, PyTree]:
+        """(C, N) packed updates + (C,) weights -> (packed', agg_state')."""
+        raise NotImplementedError
+
+    # -- shared helpers ------------------------------------------------------
+    def _mean(self, packed: jax.Array, wmask: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """One masked bucket-weighted reduction (ref jnp or Pallas kernel)."""
+        return packing.masked_bucket_mean(
+            packed, wmask, self.ctx.spec, impl=self.ctx.fed.agg_impl
+        )
+
+    def _wmean_full(self, packed: jax.Array, weights: jax.Array) -> jax.Array:
+        """Unmasked Eq. 5 mean — for modes whose mask is uniform across
+        buckets the flat contraction avoids the bucket machinery entirely
+        (the Pallas impl still exercises the packed kernel)."""
+        if self.ctx.fed.agg_impl == "pallas":
+            g, _ = self._mean(packed, self._full_wmask(weights))
+            return g
+        return packing.weighted_mean(packed, weights)
+
+    def _full_wmask(self, weights: jax.Array) -> jax.Array:
+        """(C,) weights -> (C, B) mask with every bucket uploaded."""
+        return jnp.broadcast_to(
+            weights.astype(jnp.float32)[:, None],
+            (weights.shape[0], self.ctx.spec.n_buckets),
+        )
+
+    def _broadcast(self, global_: jax.Array, packed: jax.Array) -> jax.Array:
+        """(N,) global -> (C, N) dispatch (every client gets the new model)."""
+        return jnp.broadcast_to(global_.astype(packed.dtype)[None], packed.shape)
+
+
+_REGISTRY: dict[str, type[Aggregator]] = {}
+
+
+def register(cls: type[Aggregator]) -> type[Aggregator]:
+    assert cls.name, f"{cls.__name__} needs a non-empty .name"
+    assert cls.name not in _REGISTRY, f"duplicate aggregator {cls.name!r}"
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get(name: str) -> type[Aggregator]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregation {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,62 @@
+"""Baseline aggregators: Eq. 5 dense FedAvg, static layer schedules, FedSGD."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregators.base import Aggregator, register
+
+
+def static_layer_schedule(n_buckets: int, topn: int, round_idx: int) -> tuple[int, ...]:
+    """Round-robin layer subset for round `round_idx` (trace-time static)."""
+    off = (round_idx * topn) % n_buckets
+    return tuple((off + i) % n_buckets for i in range(topn))
+
+
+@register
+class Dense(Aggregator):
+    """Paper Eq. 5: weighted mean of every parameter, full upload."""
+
+    name = "dense"
+
+    def aggregate(self, packed, weights, agg_state):
+        g = self._wmean_full(packed, weights)
+        return self._broadcast(g, packed), agg_state
+
+
+@register
+class StaticTopN(Aggregator):
+    """Beyond-paper: trace-time round-robin layer subset. Only the scheduled
+    buckets aggregate; the rest keep each client's local values, so the
+    cross-client collective operand shrinks structurally."""
+
+    name = "static_topn"
+
+    def __init__(self, ctx):
+        super().__init__(ctx)
+        sched = static_layer_schedule(ctx.spec.n_buckets, ctx.fed.topn, ctx.fed.round_idx_static)
+        mask = np.zeros(ctx.spec.n_buckets, np.float32)
+        mask[list(sched)] = 1.0
+        self._bucket_mask = mask
+
+    def aggregate(self, packed, weights, agg_state):
+        wmask = weights.astype(jnp.float32)[:, None] * jnp.asarray(self._bucket_mask)[None, :]
+        g, den = self._mean(packed, wmask)
+        out = jnp.where((den > 0)[None, :], self._broadcast(g, packed), packed)
+        return out, agg_state
+
+
+@register
+class FedSGD(Aggregator):
+    """FedSGD-equivalent topology: clients are data-parallel shards of ONE
+    shared model copy, so there is no client-stacked buffer to aggregate
+    (param-averaging == gradient-averaging for E=1; DESIGN.md §5).
+    `core.rounds` branches on `stacked`, never on the mode name."""
+
+    name = "fedsgd"
+    stacked = False
+
+    def aggregate(self, packed, weights, agg_state):  # pragma: no cover
+        raise RuntimeError("fedsgd runs one shared model copy; nothing to aggregate")

@@ -1,0 +1,39 @@
+"""Paper Eq. 6 top-n aggregation over the packed buffer.
+
+Each client ranks its score buckets by v(j) = |sum_k - sum_{k-1}| (signed
+per-layer parameter sums across consecutive rounds) and uploads only its
+top-n. A bucket's global value is the weighted mean over the clients that
+uploaded it; buckets uploaded by nobody keep each client's local values.
+
+On the packed transport this is: two segment-sum passes for the scores plus
+ONE masked reduction — versus the seed's per-leaf mask/sum/where tree walk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compression as comp
+from repro.core import packing
+from repro.core.aggregators.base import Aggregator, register
+
+
+@register
+class Eq6(Aggregator):
+    name = "eq6"
+
+    def init_state(self, packed0):
+        return {"prev_sums": packing.bucket_sums(self.ctx.spec, packed0)}
+
+    def state_pspecs(self):
+        return {"prev_sums": P(self.ctx.fed.client_axis, None)}
+
+    def aggregate(self, packed, weights, agg_state):
+        new_sums = packing.bucket_sums(self.ctx.spec, packed)  # (C, B)
+        v = comp.contribution_scores(agg_state["prev_sums"], new_sums)
+        mask = jax.vmap(lambda s: comp.topn_mask(s, self.ctx.fed.topn))(v)
+        wmask = mask.astype(jnp.float32) * weights.astype(jnp.float32)[:, None]
+        g, den = self._mean(packed, wmask)
+        out = jnp.where((den > 0)[None, :], self._broadcast(g, packed), packed)
+        return out, {"prev_sums": new_sums}

@@ -1,0 +1,89 @@
+"""quant8: int8-quantized delta upload over the packed buffer.
+
+global = base + wmean_c(dequant(quant(new_c - base))). The transport is an
+explicit int8 all_gather over the client mesh axis inside shard_map, so the
+HLO moves 1-byte operands — ~4x fewer collective bytes than f32 — and it is
+ONE collective over the packed buffer instead of one per leaf. Scale
+granularity is one f32 per `FedConfig.quant_block` elements per client row
+(0.4% overhead at the default 1024).
+
+`FedConfig.agg_impl="pallas"` routes the quantize/dequantize through the
+packed row-block kernels (`kernels/pack.quantize_rows`); the default "ref"
+impl uses the numerically identical jnp formulation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import packing
+from repro.core.aggregators.base import Aggregator, register
+
+
+@register
+class Quant8(Aggregator):
+    name = "quant8"
+
+    def __init__(self, ctx):
+        super().__init__(ctx)
+        C = ctx.fed.n_clients
+        if ctx.mesh is not None:
+            shards = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)).get(
+                ctx.fed.client_axis, 1
+            )
+            if C % shards:
+                raise ValueError(
+                    f"quant8 requires n_clients ({C}) divisible by the "
+                    f"'{ctx.fed.client_axis}' mesh axis ({shards} shards); "
+                    f"otherwise the gathered row-scale vector has the wrong length"
+                )
+
+    def init_state(self, packed0):
+        # the dispatched base model each client diffs against next round
+        return {"base": packed0}
+
+    def state_pspecs(self):
+        return {"base": packing.packed_pspec(self.ctx.spec, self.ctx.fed.client_axis, self.ctx.mesh)}
+
+    def _quant(self, delta, block):
+        if self.ctx.fed.agg_impl == "pallas":
+            from repro.kernels import pack as _pk
+
+            return _pk.quantize_rows(delta, block=block)
+        return packing.quantize_rows_ref(delta, block)
+
+    def _dequant(self, q, scales, block):
+        if self.ctx.fed.agg_impl == "pallas":
+            from repro.kernels import pack as _pk
+
+            return _pk.dequantize_rows(q, scales, block=block)
+        return packing.dequantize_rows_ref(q, scales, block)
+
+    def aggregate(self, packed, weights, agg_state):
+        base = agg_state["base"]
+        block = self.ctx.fed.quant_block
+        axis = self.ctx.fed.client_axis
+
+        def body(new, base_, w):
+            delta = new.astype(jnp.float32) - base_.astype(jnp.float32)  # (C_loc, N)
+            q, scales = self._quant(delta, block)
+            if self.ctx.mesh is not None:
+                q = jax.lax.all_gather(q, axis, axis=0, tiled=True)  # int8 (C, N)
+                scales = jax.lax.all_gather(scales, axis, axis=0, tiled=True)
+            d = self._dequant(q, scales, block)  # (C, N) f32
+            gd = jnp.einsum("c,cn->n", w.astype(jnp.float32), d)
+            return (base_.astype(jnp.float32) + gd[None, :]).astype(new.dtype)
+
+        if self.ctx.mesh is None:
+            out = body(packed, base, weights)
+        else:
+            spec = packing.packed_pspec(self.ctx.spec, axis, self.ctx.mesh)
+            out = jax.shard_map(
+                body,
+                mesh=self.ctx.mesh,
+                in_specs=(spec, spec, P()),
+                out_specs=spec,
+                check_vma=False,
+            )(packed, base, weights)
+        return out, {"base": out}

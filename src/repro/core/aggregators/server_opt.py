@@ -1,0 +1,61 @@
+"""Server-side optimizer aggregation (FedAvgM / FedAdam, Reddi et al. 2021).
+
+The weighted client mean is treated as a target and ``delta = global - avg``
+as a pseudo-gradient; a server optimizer from `repro.optim` (whose states
+are plain pytrees, so a flat (N,) vector works unchanged) takes one step per
+round. With server_lr=1 and zero momentum this reduces exactly to dense
+FedAvg; momentum/adaptivity accelerate under client drift.
+
+FedAdam wants a small server_lr (0.01-0.1): the adaptive step is ~server_lr
+per coordinate regardless of delta magnitude.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.aggregators.base import Aggregator, register
+from repro.optim import adamw, sgd
+
+
+class _ServerOpt(Aggregator):
+    def _optimizer(self):
+        raise NotImplementedError
+
+    def init_state(self, packed0):
+        g = packed0[0].astype(jnp.float32)  # clients start from one dispatch
+        return {"global": g, "opt": self._optimizer().init(g)}
+
+    def aggregate(self, packed, weights, agg_state):
+        avg = self._wmean_full(packed, weights)
+        delta = agg_state["global"] - avg  # pseudo-gradient
+        g, opt_state = self._optimizer().update(agg_state["global"], delta, agg_state["opt"])
+        return self._broadcast(g, packed), {"global": g, "opt": opt_state}
+
+
+@register
+class FedAvgM(_ServerOpt):
+    """Dense FedAvg + server momentum on the aggregated delta."""
+
+    name = "fedavgm"
+
+    def _optimizer(self):
+        fed = self.ctx.fed
+        return sgd(lr=fed.server_lr, momentum=fed.server_momentum, clip_norm=0.0)
+
+
+@register
+class FedAdam(_ServerOpt):
+    """Adam on the server delta (weight decay off, clipping off)."""
+
+    name = "fedadam"
+
+    def _optimizer(self):
+        fed = self.ctx.fed
+        return adamw(
+            lr=fed.server_lr,
+            b1=fed.server_momentum,
+            b2=fed.server_beta2,
+            eps=fed.server_eps,
+            weight_decay=0.0,
+            clip_norm=0.0,
+        )

@@ -26,8 +26,12 @@ def n_score_buckets(cfg) -> int:
     return cfg.n_layers + 1
 
 
-def _leaf_layer_ids(path, info: ParamInfo, cfg) -> tuple[str, int]:
-    """-> (kind, offset): kind in {stack1, stack2, misc}."""
+def leaf_layer_ids(path, info: ParamInfo, cfg) -> tuple[str, int]:
+    """-> (kind, offset): kind in {stack1, stack2, misc}.
+
+    The single source of truth for the param-leaf -> score-bucket mapping;
+    `core.packing` reuses it to lay out the packed aggregation buffer.
+    """
     top = path[0].key if hasattr(path[0], "key") else str(path[0])
     if info.axes[:2] == ("group", "layer"):
         return "stack2", 0
@@ -37,6 +41,9 @@ def _leaf_layer_ids(path, info: ParamInfo, cfg) -> tuple[str, int]:
             return "stack1", (cfg.n_layers // period) * period
         return "stack1", 0
     return "misc", cfg.n_layers
+
+
+_leaf_layer_ids = leaf_layer_ids  # legacy-internal alias (core.fedavg)
 
 
 def layer_sums(cfg, template: PyTree, params: PyTree) -> jax.Array:

@@ -1,4 +1,11 @@
-"""Federated aggregation (paper Eq. 5) over a client-stacked parameter tree.
+"""Legacy tree-path aggregation (paper Eq. 5) over a client-stacked pytree.
+
+The live round path now packs the stacked tree into one (C, N_total) buffer
+and dispatches through :mod:`repro.core.aggregators` (DESIGN.md §7). This
+module is kept as the per-leaf reference implementation: the packed engine
+is required to match it numerically on the four seed modes
+(tests/test_aggregators.py), and it remains the clearest statement of each
+mode's semantics.
 
 All functions take `stacked`: a pytree whose every leaf has a leading client
 dim C (sharded over the client mesh axis), plus participation `weights`
@@ -28,6 +35,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import compression as comp
+from repro.core.aggregators.basic import static_layer_schedule  # noqa: F401 (canonical home moved; re-exported for callers)
 from repro.models.params import is_info
 
 PyTree = Any
@@ -87,6 +95,13 @@ def aggregate_quant8(stacked: PyTree, base: PyTree, weights: jax.Array, mesh, cl
     """
     C = weights.shape[0]
     n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[client_axis]
+    if C % n_shards:
+        raise ValueError(
+            f"quant8 requires n_clients ({C}) divisible by the "
+            f"'{client_axis}' mesh axis ({n_shards} shards): "
+            f"jnp.repeat(scales, C // n_shards) would silently produce a "
+            f"wrong-length row-scale vector"
+        )
 
     def f(new, base_, w):
         def per_leaf(n_leaf, b_leaf):
@@ -107,10 +122,6 @@ def aggregate_quant8(stacked: PyTree, base: PyTree, weights: jax.Array, mesh, cl
     )(stacked, base, weights)
 
 
-def static_layer_schedule(n_buckets: int, topn: int, round_idx: int) -> tuple[int, ...]:
-    """Round-robin layer subset for round `round_idx` (trace-time static)."""
-    off = (round_idx * topn) % n_buckets
-    return tuple((off + i) % n_buckets for i in range(topn))
 
 
 def aggregate_static_topn(cfg, template, stacked: PyTree, weights: jax.Array, sync_layers: tuple[int, ...]) -> PyTree:

@@ -1,0 +1,236 @@
+"""Packed-buffer transport for the aggregation engine (DESIGN.md §7).
+
+The server's hot loop used to aggregate a client-stacked param *pytree*:
+every mode walked the tree with `tree_map`, launching one (padded) reduction
+per leaf. This module packs the whole tree once per round into a single
+contiguous ``(C, N_total)`` buffer with a precomputed layer-bucket map, so
+every aggregation mode becomes one masked/weighted reduction over one flat
+buffer — a single tiled kernel launch — and the int8 transport quantizes one
+buffer instead of per-leaf fragments.
+
+Layer buckets reuse `compression.leaf_layer_ids`: each slot of the buffer
+spans a contiguous range of Eq. 6 score buckets (scan-stacked layers map to
+one bucket per layer; all unstacked tensors share the final "misc" bucket).
+The bucket structure is kept *slot-wise* (offset + bucket count per leaf)
+rather than as a materialized per-element id vector, so building a
+``PackSpec`` for a 314B-param arch costs nothing; the explicit ``(N,)`` id
+vector is only materialized for the Pallas kernel path and benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compression as comp
+from repro.models.params import is_info
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    name: str  # keystr path, for debugging/benchmarks
+    shape: tuple[int, ...]  # per-client leaf shape (no leading C)
+    offset: int  # element offset into the packed buffer
+    size: int  # number of elements
+    bucket_off: int  # first Eq.6 score bucket this slot touches
+    n_buckets: int  # contiguous buckets spanned (layers, or 1 for misc)
+
+    @property
+    def per_bucket(self) -> int:
+        return self.size // self.n_buckets
+
+
+@dataclasses.dataclass(frozen=True)
+class PackSpec:
+    n_total: int
+    n_buckets: int  # total score buckets (cfg.n_layers + 1)
+    slots: tuple[LeafSlot, ...]
+
+
+def build_pack_spec(cfg, template: PyTree) -> PackSpec:
+    """Flatten the param template into slot metadata (trace-time, cheap)."""
+    leaves = jax.tree_util.tree_flatten_with_path(template, is_leaf=is_info)[0]
+    slots: list[LeafSlot] = []
+    off = 0
+    for path, info in leaves:
+        size = max(math.prod(info.shape), 1)
+        kind, boff = comp.leaf_layer_ids(path, info, cfg)
+        if kind == "stack2":
+            nb = info.shape[0] * info.shape[1]
+        elif kind == "stack1":
+            nb = info.shape[0]
+        else:
+            nb = 1
+        slots.append(LeafSlot(jax.tree_util.keystr(path), tuple(info.shape), off, size, boff, nb))
+        off += size
+    return PackSpec(off, comp.n_score_buckets(cfg), tuple(slots))
+
+
+def packed_pspec(spec: PackSpec, client_axis: str, mesh=None, axis_sizes: dict | None = None):
+    """PartitionSpec for the (C, N_total) buffer: client dim on the client
+    axis, flat dim sharded over the "model" axis when it exists and divides
+    N_total (restores per-device memory scaling for the persistent packed
+    state of quant8 at FSDP scale), else replicated."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.params import PROD_AXIS_SIZES
+
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    else:
+        sizes = PROD_AXIS_SIZES if axis_sizes is None else axis_sizes
+    if "model" in sizes and spec.n_total % sizes["model"] == 0:
+        return P(client_axis, "model")
+    return P(client_axis, None)
+
+
+@functools.lru_cache(maxsize=16)
+def bucket_ids(spec: PackSpec) -> np.ndarray:
+    """Explicit (N_total,) int32 bucket id per element — Pallas/bench path
+    only; the jnp reference path never materializes it."""
+    return np.concatenate(
+        [
+            np.repeat(np.arange(s.n_buckets, dtype=np.int32) + s.bucket_off, s.per_bucket)
+            for s in spec.slots
+        ]
+    )
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+def pack(spec: PackSpec, stacked: PyTree, dtype=None) -> jax.Array:
+    """Client-stacked pytree -> one (C, N_total) buffer (one concat/round).
+
+    With dtype=None the buffer takes the promoted dtype of all leaves, so a
+    mixed-precision tree (bf16 weights + f32 norms) packs without rounding
+    any leaf; unpack casts each slot back to its own dtype.
+    """
+    leaves = jax.tree.leaves(stacked)
+    C = leaves[0].shape[0]
+    if dtype is None:
+        dtype = functools.reduce(jnp.promote_types, (x.dtype for x in leaves))
+    return jnp.concatenate([x.reshape(C, -1).astype(dtype) for x in leaves], axis=1)
+
+
+def unpack(spec: PackSpec, packed: jax.Array, like: PyTree) -> PyTree:
+    """(C, N_total) buffer -> pytree shaped/dtyped like `like`."""
+    leaves, treedef = jax.tree.flatten(like)
+    C = packed.shape[0]
+    out = [
+        packed[:, s.offset : s.offset + s.size].reshape((C,) + s.shape).astype(l.dtype)
+        for s, l in zip(spec.slots, leaves)
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# bucket <-> element maps (no N-sized constants: slot-wise broadcasts)
+# ---------------------------------------------------------------------------
+
+def expand_bucket_vec(spec: PackSpec, vec: jax.Array) -> jax.Array:
+    """(..., n_buckets) bucket vector -> (..., N_total) per-element vector."""
+    parts = []
+    for s in spec.slots:
+        v = jax.lax.slice_in_dim(vec, s.bucket_off, s.bucket_off + s.n_buckets, axis=-1)
+        v = jnp.broadcast_to(v[..., None], v.shape + (s.per_bucket,))
+        parts.append(v.reshape(v.shape[:-2] + (s.size,)))
+    return jnp.concatenate(parts, axis=-1)
+
+
+def bucket_sums(spec: PackSpec, packed: jax.Array) -> jax.Array:
+    """Per-bucket signed element sums: (C, N_total) -> (C, n_buckets) f32.
+
+    Packed-buffer equivalent of `compression.layer_sums` (Eq. 6 inner sums),
+    vectorized over the client dim.
+    """
+    C = packed.shape[0]
+    out = jnp.zeros((C, spec.n_buckets), jnp.float32)
+    for s in spec.slots:
+        x = packed[:, s.offset : s.offset + s.size].astype(jnp.float32)
+        sums = x.reshape(C, s.n_buckets, s.per_bucket).sum(axis=-1)
+        out = out.at[:, s.bucket_off : s.bucket_off + s.n_buckets].add(sums)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the one masked/weighted reduction every mode lowers to
+# ---------------------------------------------------------------------------
+
+def weighted_mean(packed: jax.Array, weights: jax.Array) -> jax.Array:
+    """Unmasked Eq. 5 over the flat buffer: (C, N), (C,) -> (N,) f32.
+
+    The fast path for modes whose upload mask is uniform across buckets
+    (dense, server-optimizer): one flat contraction, no bucket machinery.
+    """
+    w = weights.astype(jnp.float32)
+    num = jnp.einsum("c,cn->n", w, packed.astype(jnp.float32))
+    return num / jnp.maximum(jnp.sum(w), 1e-12)
+
+
+def masked_bucket_mean(
+    packed: jax.Array,
+    wmask: jax.Array,
+    spec: PackSpec,
+    *,
+    impl: str = "ref",
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Weighted mean over clients under a per-(client, bucket) mask.
+
+    packed: (C, N); wmask: (C, B) — participation weight times the 0/1
+    upload mask per score bucket. Returns (global (N,) f32, den (N,) f32):
+    ``global[n] = sum_c wmask[c, bucket(n)] x[c, n] / den[n]`` with
+    ``den[n] = sum_c wmask[c, bucket(n)]`` (0 where nobody uploaded).
+    """
+    if impl == "pallas":
+        from repro.kernels import pack as _pk  # deferred: kernels are optional here
+
+        ids = jnp.asarray(bucket_ids(spec))
+        num, den = _pk.packed_bucket_reduce(packed, wmask, ids, interpret=interpret)
+    else:
+        # slot-wise einsum: reads `packed` once and never materializes a
+        # (C, N) weight buffer — each slot's buckets are contiguous, so the
+        # per-bucket weights contract directly against (C, nb, per) views
+        C = packed.shape[0]
+        wm = wmask.astype(jnp.float32)
+        parts = []
+        for s in spec.slots:
+            x = packed[:, s.offset : s.offset + s.size].astype(jnp.float32)
+            x = x.reshape(C, s.n_buckets, s.per_bucket)
+            w = jax.lax.slice_in_dim(wm, s.bucket_off, s.bucket_off + s.n_buckets, axis=1)
+            parts.append(jnp.einsum("cb,cbp->bp", w, x).reshape(s.size))
+        num = jnp.concatenate(parts)
+        den = expand_bucket_vec(spec, jnp.sum(wm, axis=0))
+    return num / jnp.maximum(den, 1e-12), den
+
+
+# ---------------------------------------------------------------------------
+# row-block int8 quantization of the packed buffer (quant8 transport)
+# ---------------------------------------------------------------------------
+
+def quantize_rows_ref(x: jax.Array, block: int) -> tuple[jax.Array, jax.Array]:
+    """(C, N) f32 -> (q int8 (C, N), scales f32 (C, ceil(N/block)))."""
+    C, N = x.shape
+    pad = (-N) % block
+    xb = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad))).reshape(C, -1, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(C, -1)[:, :N], scale
+
+
+def dequantize_rows_ref(q: jax.Array, scales: jax.Array, block: int, dtype=jnp.float32) -> jax.Array:
+    C, N = q.shape
+    pad = (-N) % block
+    qb = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, pad))).reshape(C, -1, block)
+    return (qb * scales[..., None]).reshape(C, -1)[:, :N].astype(dtype)

@@ -4,10 +4,14 @@ Structure (DESIGN.md §4):
   1. `vmap` of the local trainer over the client-stacked state — each mesh
      slice along the client axis trains its own divergent model copy for
      E local steps (lax.scan), with *no* cross-client collectives;
-  2. aggregation over the client axis per the configured mode (Eq. 5 dense,
-     Eq. 6 top-n, int8-quantized delta, or static layer schedule).
+  2. aggregation: the client-stacked param tree is packed once into a single
+     (C, N_total) buffer (core.packing) and handed to the configured
+     :mod:`repro.core.aggregators` strategy — one masked/weighted reduction
+     per round regardless of mode (DESIGN.md §7).
 
-The same builder also yields `make_state`, `input_template`, and the
+There is no mode-specific branching here: `FedConfig.aggregation` names any
+registered aggregator, whose cross-round state lives under ``state["agg"]``.
+The same builder also yields `make_state`, `state_template`, and the
 sharding specs used by the launcher and the dry-run.
 """
 from __future__ import annotations
@@ -20,8 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core import compression as comp
-from repro.core import fedavg
+from repro.core import aggregators, packing
 from repro.models import params as mp
 from repro.models import transformer, yolov3
 from repro.optim import Optimizer
@@ -33,12 +36,19 @@ PyTree = Any
 class FedConfig:
     n_clients: int
     local_steps: int = 1
-    aggregation: str = "eq6"  # dense | eq6 | quant8 | static_topn | fedsgd
+    aggregation: str = "eq6"  # any name in repro.core.aggregators.names()
     topn: int = 8  # Eq. 6 / static_topn upload budget (layer buckets)
     client_axis: str = "pod"  # mesh axis acting as the federation
     data_axis: str | None = "data"  # within-client data-parallel axis
     round_idx_static: int = 0  # static_topn: trace-time round phase
     microbatches: int = 1  # grad-accumulation splits of each local step
+    agg_impl: str = "ref"  # ref (jnp) | pallas (packed kernel, interpret on CPU)
+    quant_block: int = 1024  # quant8: elements per int8 scale block
+    server_lr: float = 1.0  # fedavgm/fedadam server step (fedadam wants ~0.01-0.1)
+    server_momentum: float = 0.9  # fedavgm momentum / fedadam b1
+    server_beta2: float = 0.99  # fedadam second-moment decay
+    server_eps: float = 1e-3  # fedadam adaptivity floor (Reddi et al. tau)
+    trim_ratio: float = 0.25  # trimmed_mean: fraction trimmed per side (>=1 client)
 
 
 def loss_for(cfg: ArchConfig) -> Callable:
@@ -51,6 +61,15 @@ def make_template(cfg: ArchConfig) -> PyTree:
     if cfg.family == "yolo":
         return yolov3.template(cfg)
     return transformer.template(cfg)
+
+
+def make_aggregator(cfg: ArchConfig, fed: FedConfig, mesh=None) -> aggregators.Aggregator:
+    """Resolve FedConfig.aggregation through the registry (build-time
+    validation: unknown names and invalid mode configs fail here)."""
+    tpl = make_template(cfg)
+    spec = packing.build_pack_spec(cfg, tpl)
+    ctx = aggregators.AggContext(cfg=cfg, fed=fed, template=tpl, spec=spec, mesh=mesh)
+    return aggregators.get(fed.aggregation)(ctx)
 
 
 # ---------------------------------------------------------------------------
@@ -74,46 +93,59 @@ def batch_pspecs(batch_template: PyTree, fed: FedConfig) -> PyTree:
 
 def state_template(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, dtype) -> PyTree:
     """Abstract FedState (ShapeDtypeStructs) for dry-run lowering."""
-    tpl = make_template(cfg)
+    agg = make_aggregator(cfg, fed)
+    tpl = agg.ctx.template
     pabs = mp.abstract(tpl, dtype)
-    if fed.aggregation == "fedsgd":
+    if not agg.stacked:
         stack = lambda t: t  # FedSGD-equivalent: one shared model copy
     else:
         stack = lambda t: jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((fed.n_clients,) + s.shape, s.dtype), t
         )
     opt_abs = jax.eval_shape(optimizer.init, pabs)
-    st = {
+    packed_abs = jax.ShapeDtypeStruct((fed.n_clients, agg.ctx.spec.n_total), dtype)
+    return {
         "params": stack(pabs),
         "opt": stack(opt_abs),
+        "agg": jax.eval_shape(agg.init_state, packed_abs) if agg.stacked else {},
         "round": jax.ShapeDtypeStruct((), jnp.int32),
     }
-    if fed.aggregation == "eq6":
-        st["prev_sums"] = jax.ShapeDtypeStruct((fed.n_clients, comp.n_score_buckets(cfg)), jnp.float32)
-    return st
 
 
 def make_state(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, rng, dtype=jnp.float32) -> PyTree:
-    tpl = make_template(cfg)
-    if fed.aggregation == "fedsgd":
+    agg = make_aggregator(cfg, fed)
+    tpl = agg.ctx.template
+    if not agg.stacked:
         params = mp.init_params(tpl, rng, dtype)
-        return {"params": params, "opt": optimizer.init(params), "round": jnp.int32(0)}
+        return {"params": params, "opt": optimizer.init(params), "agg": {}, "round": jnp.int32(0)}
     keys = jax.random.split(rng, fed.n_clients)
     params = jax.vmap(lambda k: mp.init_params(tpl, k, dtype))(keys)
     # clients start from the same global model (server dispatch)
     params = jax.tree.map(lambda x: jnp.broadcast_to(x[:1], x.shape), params)
     opt = jax.vmap(optimizer.init)(params)
-    st = {"params": params, "opt": opt, "round": jnp.int32(0)}
-    if fed.aggregation == "eq6":
-        st["prev_sums"] = jax.vmap(lambda p: comp.layer_sums(cfg, tpl, p))(params)
-    return st
+    # pack the initial params only for aggregators that keep packed state —
+    # eval_shape first so stateless modes skip the O(C*N) concat entirely
+    packed_abs = jax.ShapeDtypeStruct((fed.n_clients, agg.ctx.spec.n_total), dtype)
+    agg_abs = jax.eval_shape(agg.init_state, packed_abs)
+    agg_state = (
+        agg.init_state(packing.pack(agg.ctx.spec, params))
+        if jax.tree.leaves(agg_abs)
+        else agg_abs
+    )
+    return {
+        "params": params,
+        "opt": opt,
+        "agg": agg_state,
+        "round": jnp.int32(0),
+    }
 
 
 def state_pspecs(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, rules: dict | None = None, opt_rules: dict | None = None) -> PyTree:
     """opt_rules: optional separate sharding rules for optimizer moments —
     ZeRO-1 style (moments sharded over data while params stay TP-only)."""
-    tpl = make_template(cfg)
-    if fed.aggregation == "fedsgd":
+    agg = make_aggregator(cfg, fed)
+    tpl = agg.ctx.template
+    if not agg.stacked:
         pspec = mp.pspecs(tpl, rules)
         mspec = mp.pspecs(tpl, opt_rules) if opt_rules else pspec
     else:
@@ -121,10 +153,12 @@ def state_pspecs(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, rules: d
         mspec = stacked_pspecs(tpl, fed.client_axis, opt_rules) if opt_rules else pspec
     opt_shape = jax.eval_shape(optimizer.init, mp.abstract(tpl, jnp.float32))
     ospec = {k: (mspec if k in ("mu", "m", "v") else P()) for k in opt_shape}
-    st = {"params": pspec, "opt": ospec, "round": P()}
-    if fed.aggregation == "eq6":
-        st["prev_sums"] = P(fed.client_axis, None)
-    return st
+    return {
+        "params": pspec,
+        "opt": ospec,
+        "agg": agg.state_pspecs() if agg.stacked else {},
+        "round": P(),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -136,10 +170,14 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
 
     batch leaves: (C, E, per_step_shard...). weights: (C,) normalized
     participation weights from the scheduler (Eq. 5 uses 1/N).
+
+    `rules` shapes the per-leaf training-state shardings (consumed via
+    state_pspecs by the launcher); the packed aggregation operand itself
+    shards (client_axis, "model") when divisible — packing.packed_pspec.
     """
-    tpl = make_template(cfg)
+    agg = make_aggregator(cfg, fed, mesh)
     loss_fn = loss_for(cfg)
-    pspec = stacked_pspecs(tpl, fed.client_axis, rules)
+    spec = agg.ctx.spec
 
     def grads_of(params, step_batch):
         """Gradients for one local step, with microbatch accumulation.
@@ -178,7 +216,7 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
         return params, opt, jnp.mean(losses)
 
     def fed_round(state, batch, weights):
-        if fed.aggregation == "fedsgd":
+        if not agg.stacked:
             # FedSGD-equivalent: clients = data-parallel shards, E=1,
             # param-averaging == gradient-averaging (DESIGN.md §5). One
             # shared model copy, so FSDP-style rules fit huge archs.
@@ -190,24 +228,16 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
         new_p, new_o, loss = jax.vmap(local_train, spmd_axis_name=fed.client_axis)(
             state["params"], state["opt"], batch
         )
-        metrics = {"loss": jnp.mean(loss)}
-        if fed.aggregation == "dense":
-            agg = fedavg.aggregate_dense(new_p, weights)
-            out = {**state, "params": agg, "opt": new_o}
-        elif fed.aggregation == "eq6":
-            agg, sums = fedavg.aggregate_eq6(cfg, tpl, new_p, weights, state["prev_sums"], fed.topn)
-            out = {**state, "params": agg, "opt": new_o, "prev_sums": sums}
-        elif fed.aggregation == "quant8":
-            agg = fedavg.aggregate_quant8(new_p, state["params"], weights, mesh, fed.client_axis, pspec)
-            out = {**state, "params": agg, "opt": new_o}
-        elif fed.aggregation == "static_topn":
-            sched = fedavg.static_layer_schedule(comp.n_score_buckets(cfg), fed.topn, fed.round_idx_static)
-            agg = fedavg.aggregate_static_topn(cfg, tpl, new_p, weights, sched)
-            out = {**state, "params": agg, "opt": new_o}
-        else:
-            raise ValueError(fed.aggregation)
-        out["round"] = state["round"] + 1
-        return out, metrics
+        packed = packing.pack(spec, new_p)
+        packed_out, agg_state = agg.aggregate(packed, weights, state["agg"])
+        out = {
+            **state,
+            "params": packing.unpack(spec, packed_out, new_p),
+            "opt": new_o,
+            "agg": agg_state,
+            "round": state["round"] + 1,
+        }
+        return out, {"loss": jnp.mean(loss)}
 
     return fed_round
 

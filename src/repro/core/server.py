@@ -3,7 +3,9 @@
 "responsible for model parameter uploading, model aggregation, and model
 dispatch." The server owns the jitted fed_round, the scheduler, the object
 store, and the round loop; FL_CLIENTs are the mesh slices (their control
-surface is repro.core.client).
+surface is repro.core.client). Aggregation policy is resolved purely
+through the :mod:`repro.core.aggregators` registry — the server never
+branches on a mode name.
 """
 from __future__ import annotations
 
@@ -18,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import ObjectStore
 from repro.configs.base import ArchConfig
-from repro.core import explorer, rounds
+from repro.core import aggregators, explorer, rounds
 from repro.core.scheduler import SchedulerConfig, TaskScheduler
 from repro.optim import Optimizer
 
@@ -57,12 +59,23 @@ class FLServer:
         self.checkpoint_every = checkpoint_every
         self.scheduler = scheduler or TaskScheduler(fed.n_clients, SchedulerConfig())
         self._rng = np.random.default_rng(seed)
+        # registry dispatch: validates the mode name and any mode config
+        # (e.g. quant8 divisibility, trimmed_mean ratio) before any jit
+        self.aggregator = rounds.make_aggregator(cfg, fed, mesh)
         self.state = rounds.make_state(cfg, fed, optimizer, jax.random.key(seed), dtype)
         self._fed_round = jax.jit(rounds.build_fed_round(cfg, fed, optimizer, mesh, rules))
         self.history: list[RoundRecord] = []
 
+    @property
+    def aggregation_modes(self) -> tuple[str, ...]:
+        """Every mode this server could be configured with."""
+        return aggregators.names()
+
     def global_params(self) -> PyTree:
-        """Dispatchable global model = client 0's copy (synced post-round)."""
+        """Dispatchable global model = client 0's copy (synced post-round;
+        fedsgd topology already holds the single shared copy)."""
+        if not self.aggregator.stacked:
+            return self.state["params"]
         return jax.tree.map(lambda x: x[0], self.state["params"])
 
     def run_round(self, batch: PyTree) -> RoundRecord:

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import fedavg as _fedavg
 from repro.kernels import flash_attention as _flash
+from repro.kernels import pack as _pack
 from repro.kernels import quant as _quant
 from repro.kernels import ref
 from repro.kernels import ssd_scan as _ssd
@@ -21,6 +22,9 @@ from repro.kernels import ssd_scan as _ssd
 PyTree = Any
 
 fedavg_masked_mean = _fedavg.fedavg_masked_mean
+packed_bucket_reduce = _pack.packed_bucket_reduce
+quantize_rows = _pack.quantize_rows
+dequantize_rows = _pack.dequantize_rows
 quantize = _quant.quantize
 dequantize = _quant.dequantize
 flash_attention = _flash.flash_attention

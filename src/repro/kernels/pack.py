@@ -1,0 +1,139 @@
+"""Pallas kernels over the packed (C, N_total) aggregation buffer.
+
+`packed_bucket_reduce` is the single launch the whole round's aggregation
+lowers to: a tiled masked/weighted reduction over the flat buffer. Each grid
+step loads one (C, BLOCK_N) window plus the small (C, B) per-bucket weight
+mask; the per-element weights are recovered on the MXU as
+``wmask @ one_hot(bucket_ids)`` (B is n_layers+1, so the one-hot matmul is
+tiny) and the client reduction runs on the VPU with f32 accumulation.
+
+`quantize_rows` / `dequantize_rows` are the packed int8 transport: one 2-D
+grid over (client row, block) quantizes the entire buffer in a single
+launch, instead of a `tree_map` of per-leaf 1-D quant calls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 1024
+
+
+def _reduce_kernel(x_ref, wm_ref, bid_ref, num_ref, den_ref):
+    x = x_ref[...].astype(jnp.float32)  # (C, BN)
+    wm = wm_ref[...].astype(jnp.float32)  # (C, B)
+    bid = bid_ref[...]  # (BN,) int32
+    B = wm.shape[1]
+    bn = bid.shape[0]
+    # per-element weights via one-hot matmul (MXU): (C, B) @ (B, BN)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (B, bn), 0) == bid[None, :]).astype(jnp.float32)
+    w = jnp.dot(wm, onehot, preferred_element_type=jnp.float32)  # (C, BN)
+    num_ref[...] = jnp.sum(x * w, axis=0)
+    den_ref[...] = jnp.sum(w, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def packed_bucket_reduce(
+    packed: jax.Array,
+    wmask: jax.Array,
+    bucket_ids: jax.Array,
+    *,
+    interpret: bool = True,
+    block_n: int = BLOCK_N,
+) -> tuple[jax.Array, jax.Array]:
+    """packed (C, N), wmask (C, B), bucket_ids (N,) -> (num (N,), den (N,)).
+
+    num[n] = sum_c wmask[c, bucket_ids[n]] * packed[c, n];
+    den[n] = sum_c wmask[c, bucket_ids[n]]. N is padded to block_n
+    internally (padding positions get bucket id B, which one-hots to zero).
+    """
+    C, N = packed.shape
+    B = wmask.shape[1]
+    pad = (-N) % block_n
+    if pad:
+        packed = jnp.pad(packed, ((0, 0), (0, pad)))
+        bucket_ids = jnp.pad(bucket_ids, (0, pad), constant_values=B)
+    npad = N + pad
+    num, den = pl.pallas_call(
+        _reduce_kernel,
+        grid=(npad // block_n,),
+        in_specs=[
+            pl.BlockSpec((C, block_n), lambda i: (0, i)),
+            pl.BlockSpec((C, B), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(packed, wmask.astype(jnp.float32), bucket_ids.astype(jnp.int32))
+    return num[:N], den[:N]
+
+
+def _rowquant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)  # (1, BLOCK)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _rowdequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[0, 0]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def quantize_rows(x: jax.Array, *, interpret: bool = True, block: int = BLOCK_N):
+    """x (C, N) -> (q int8 (C, N), scales f32 (C, ceil(N/block))).
+
+    One 2-D-grid launch quantizing the whole packed buffer; scale
+    granularity is one f32 per `block` elements per client row.
+    """
+    C, N = x.shape
+    pad = (-N) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    nb = (N + pad) // block
+    q, s = pl.pallas_call(
+        _rowquant_kernel,
+        grid=(C, nb),
+        in_specs=[pl.BlockSpec((1, block), lambda c, i: (c, i))],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda c, i: (c, i)),
+            pl.BlockSpec((1, 1), lambda c, i: (c, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, N + pad), jnp.int8),
+            jax.ShapeDtypeStruct((C, nb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q[:, :N], s
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block", "dtype"))
+def dequantize_rows(q: jax.Array, scales: jax.Array, *, dtype=jnp.float32, interpret: bool = True, block: int = BLOCK_N) -> jax.Array:
+    C, N = q.shape
+    pad = (-N) % block
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+    out = pl.pallas_call(
+        _rowdequant_kernel,
+        grid=(C, (N + pad) // block),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda c, i: (c, i)),
+            pl.BlockSpec((1, 1), lambda c, i: (c, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda c, i: (c, i)),
+        out_shape=jax.ShapeDtypeStruct((C, N + pad), dtype),
+        interpret=interpret,
+    )(q, scales)
+    return out[:, :N]

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import ObjectStore
 from repro.configs import get_arch
+from repro.core import aggregators
 from repro.core.rounds import FedConfig
 from repro.core.scheduler import SchedulerConfig, TaskScheduler
 from repro.core.server import FLServer
@@ -44,7 +45,10 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=1)
-    ap.add_argument("--agg", default="eq6", choices=["dense", "eq6", "quant8", "static_topn"])
+    # any registered aggregator (fedsgd is a topology, not a CLI mode here)
+    ap.add_argument("--agg", default="eq6", choices=[n for n in aggregators.names() if n != "fedsgd"])
+    ap.add_argument("--server-lr", type=float, default=None,
+                    help="fedavgm/fedadam server step (default: 1.0 for fedavgm, 0.02 for fedadam)")
     ap.add_argument("--topn", type=int, default=0)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
@@ -69,6 +73,9 @@ def main() -> None:
         topn=args.topn or specs.default_topn(cfg),
         client_axis="data",
         data_axis=None,
+        # adaptive server step is ~server_lr per coordinate: fedadam needs a
+        # small one out of the box (see core/aggregators/server_opt.py)
+        server_lr=args.server_lr if args.server_lr is not None else (0.02 if args.agg == "fedadam" else 1.0),
     )
     optimizer = adamw(args.lr) if args.optimizer == "adamw" else sgd(args.lr)
     mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)

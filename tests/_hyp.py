@@ -1,0 +1,83 @@
+"""hypothesis, or a deterministic fallback when it is not installed.
+
+Test modules import `given` / `settings` / `st` from here instead of from
+`hypothesis` directly. With the real package present this module is a pure
+re-export. Without it, `@given` degrades to a fixed number of deterministic
+example draws per strategy (seeded rng per example index), which keeps the
+property tests meaningful as smoke tests and — more importantly — keeps the
+suite collectable in containers where hypothesis isn't baked in.
+
+Only the strategy combinators this repo uses are implemented: integers,
+floats, lists, builds.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+    _N_EXAMPLES = 8  # fixed draws per test when falling back
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: int(r.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, allow_infinity=False, **_kw):
+            return _Strategy(lambda r: float(r.uniform(min_value, max_value)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            return _Strategy(
+                lambda r: [
+                    elements.example(r)
+                    for _ in range(int(r.integers(min_size, max_size + 1)))
+                ]
+            )
+
+        @staticmethod
+        def builds(target, **kwargs):
+            return _Strategy(
+                lambda r: target(**{k: v.example(r) for k, v in kwargs.items()})
+            )
+
+    st = _Strategies()
+
+    def settings(**_kwargs):  # max_examples/deadline knobs are meaningless here
+        return lambda f: f
+
+    def given(*strategies, **kw_strategies):
+        def decorate(f):
+            # zero-arg wrapper: pytest must not mistake strategy params for
+            # fixtures, so the original signature is deliberately hidden
+            def run():
+                for i in range(_N_EXAMPLES):
+                    rng = _np.random.default_rng(1000 + i)
+                    args = [s.example(rng) for s in strategies]
+                    kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                    f(*args, **kwargs)
+
+            run.__name__ = f.__name__
+            run.__module__ = f.__module__
+            run.__doc__ = f.__doc__
+            return run
+
+        return decorate
+
+
+strategies = st
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st", "strategies"]

@@ -2,8 +2,7 @@
 import dataclasses
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 import jax
 import jax.numpy as jnp

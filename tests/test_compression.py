@@ -1,7 +1,6 @@
 """Eq. 6 scoring/masking + int8 quantization properties (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,7 @@
 """Data pipeline: Darknet annotation format, partitioning, target building."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.configs import get_arch
 from repro.core.rounds import FedConfig

@@ -1,5 +1,9 @@
 """Federated engine behaviour: Eq.5/Eq.6 semantics, all aggregation modes
-train, quant8 tracks dense, FedSGD(E=1) == stacked FedAvg(E=1)."""
+train, quant8 tracks dense, FedSGD(E=1) == stacked FedAvg(E=1).
+
+Aggregation now runs through the packed-buffer engine behind the
+repro.core.aggregators registry; packed-vs-legacy numerical equivalence
+lives in tests/test_aggregators.py."""
 import numpy as np
 import pytest
 
@@ -77,6 +81,7 @@ def test_fedsgd_equals_stacked_fedavg_e1():
         }
         fr_a = jax.jit(R.build_fed_round(CFG, fed_a, opt, mesh))
         fr_s = jax.jit(R.build_fed_round(CFG, fed_s, opt, mesh))
+        st_s["agg"] = {}
         st_a, _ = fr_a(st_a, {"tokens": jnp.asarray(toks, jnp.int32)}, R.uniform_weights(C))
         # fedsgd sees the same tokens as one big batch
         st_s, _ = fr_s(st_s, {"tokens": jnp.asarray(toks.transpose(1, 0, 2, 3).reshape(1, C * b, S), jnp.int32)}, R.uniform_weights(C))
@@ -107,7 +112,7 @@ def test_eq6_uploads_topn_only():
             comp.apply_layer_mask(CFG, tpl, jax.tree.map(jnp.ones_like, p), small),
         ),
     ))(stacked, jnp.arange(3.0))
-    prev = state["prev_sums"]
+    prev = state["agg"]["prev_sums"]
     new, sums = fedavg.aggregate_eq6(CFG, tpl, stacked, R.uniform_weights(3), prev, topn=1)
     # bucket 0 synced (all uploaded it), bucket 1 still divergent
     new_sums = jax.vmap(lambda p: comp.layer_sums(CFG, tpl, p))(new)

@@ -1,8 +1,7 @@
 """Platform components: scheduler (Yu 2017), explorer, task manager, COS."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 import jax
 import jax.numpy as jnp

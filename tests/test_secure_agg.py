@@ -1,7 +1,6 @@
 """Secure aggregation: mask cancellation, privacy, FedAvg equivalence."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 import jax
 import jax.numpy as jnp
