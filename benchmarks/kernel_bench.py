@@ -8,6 +8,11 @@ launches per round (packed = 1 vs one per leaf), and collective payload
 bytes (quant8's int8 operand moves 4x fewer bytes than dense f32 at equal
 shapes; the per-block f32 scale sideband is reported separately).
 
+`participation_rows` sweeps the participation fraction C_active/C of the
+compact round engine (DESIGN.md §8): local training gathers only the K
+selected clients, so per-round wall time drops with the fraction while the
+aggregation still spans the full (C, N_total) buffer.
+
 Running this module as a script appends one timestamped record to
 ``BENCH_kernel_bench.json`` at the repo root — the cross-PR trajectory of
 these numbers.
@@ -165,6 +170,42 @@ def agg_rows():
     return out
 
 
+def participation_rows(iters: int = 3):
+    """Per-round wall time vs participation fraction (compact engine).
+
+    C_active/C in {0.25, 0.5, 1.0} on the reduced qwen3 arch: K of 8
+    clients train per round, the rest keep their rows; aggregation weights/
+    mask flow in as traced inputs (one compile per static K only).
+    """
+    from repro.configs import get_arch
+    from repro.core import rounds as R
+    from repro.optim import sgd
+
+    cfg = get_arch("qwen3-1.7b").reduced()
+    C = 8
+    opt = sgd(lr=0.05)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (C, 1, 2, 32)), jnp.int32)
+    out = []
+    for K in (2, 4, 8):
+        fed = R.FedConfig(
+            n_clients=C, local_steps=1, aggregation="dense", client_axis="data",
+            data_axis=None, participation="compact", max_participants=K,
+        )
+        state = R.make_state(cfg, fed, opt, jax.random.key(0))
+        fr = jax.jit(R.build_fed_round(cfg, fed, opt))
+        mask = np.zeros(C, np.float32)
+        mask[:K] = 1.0
+        part = R.participation_input(fed, mask, mask / K, np.arange(K))
+        batch = {"tokens": toks}
+        us = _timeit(lambda s: fr(s, batch, part)[1]["loss"], state, iters=iters)
+        out.append((
+            f"fed/round_participation_{K}of{C}", us,
+            f"frac={K / C:.2f};mode=compact;train_work=K/C",
+        ))
+    return out
+
+
 def emit_trajectory(all_rows) -> None:
     """Append one timestamped record to the BENCH_*.json trajectory."""
     traj = []
@@ -178,7 +219,7 @@ def emit_trajectory(all_rows) -> None:
 
 
 if __name__ == "__main__":
-    all_rows = rows() + agg_rows()
+    all_rows = rows() + agg_rows() + participation_rows()
     for name, val, extra in all_rows:
         print(f"{name},{val:.1f},{extra}")
     emit_trajectory(all_rows)

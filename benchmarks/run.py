@@ -5,25 +5,45 @@ Prints ``name,value,derived`` CSV. Modules:
   bandwidth_model  — paper SPIC cost claim (50 MB/s video vs <1 MB/s updates)
   convergence      — paper efficiency claim (federated vs centralized)
   kernel_bench     — kernel reference micro-benchmarks
+  kernel_bench_agg — packed-vs-tree aggregation transport
+  participation    — per-round work vs participation fraction (DESIGN.md §8)
   roofline_table   — per (arch x shape x mesh) roofline from the dry-run
+
+``--smoke`` runs the cheap analytic tables plus a 1-iteration participation
+sweep — the CI gate (scripts/check.sh) that proves the harness imports and
+the round engine runs, in well under a minute of compute.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: analytic tables + tiny participation sweep")
+    args = ap.parse_args()
+
     from benchmarks import bandwidth_model, convergence, kernel_bench, roofline_table, upload_time
 
-    modules = [
-        ("upload_time", upload_time.rows),
-        ("bandwidth_model", bandwidth_model.rows),
-        ("convergence", convergence.rows),
-        ("kernel_bench", kernel_bench.rows),
-        ("kernel_bench_agg", kernel_bench.agg_rows),
-        ("roofline_table", roofline_table.rows),
-    ]
+    if args.smoke:
+        modules = [
+            ("upload_time", upload_time.rows),
+            ("bandwidth_model", bandwidth_model.rows),
+            ("participation", lambda: kernel_bench.participation_rows(iters=1)),
+        ]
+    else:
+        modules = [
+            ("upload_time", upload_time.rows),
+            ("bandwidth_model", bandwidth_model.rows),
+            ("convergence", convergence.rows),
+            ("kernel_bench", kernel_bench.rows),
+            ("kernel_bench_agg", kernel_bench.agg_rows),
+            ("participation", kernel_bench.participation_rows),
+            ("roofline_table", roofline_table.rows),
+        ]
     failed = 0
     for name, rows_fn in modules:
         try:

@@ -1,10 +1,12 @@
 """FedYOLOv3 — the paper's headline application, end to end.
 
 Multiple data owners hold procedurally generated camera scenes annotated in
-the paper's Darknet ``{label x y w h}`` format. Each round: the scheduler
-selects clients, clients train YOLOv3 locally (Eqs 2-4 loss), upload their
-Eq.6 top-n layers, the server aggregates (Eq. 5) and stores the round model
-in the COS object store.
+the paper's Darknet ``{label x y w h}`` format. Each round: the Task
+Scheduler selects participants (masked participation — the straggler load
+model keeps overloaded cameras out), the selected clients train YOLOv3
+locally (Eqs 2-4 loss), upload their Eq.6 top-n layers through the
+registry aggregator, and the server aggregates (Eq. 5) and stores the
+round model in the COS object store.
 
   PYTHONPATH=src python examples/fed_yolo.py [--rounds 30]
 """
@@ -19,6 +21,7 @@ import jax.numpy as jnp
 from repro.checkpoint import ObjectStore
 from repro.configs import get_arch
 from repro.core.rounds import FedConfig
+from repro.core.scheduler import SchedulerConfig, TaskScheduler
 from repro.core.server import FLServer
 from repro.data import darknet, synthetic
 from repro.data.pipeline import fed_batches
@@ -34,7 +37,8 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_arch("fedyolov3")
-    fed = FedConfig(n_clients=args.clients, local_steps=1, aggregation="eq6", topn=4, client_axis="data", data_axis=None)
+    fed = FedConfig(n_clients=args.clients, local_steps=1, aggregation="eq6", topn=4,
+                    client_axis="data", data_axis=None, participation="masked")
     mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
     # --- crowdsourced annotation flow: clients write Darknet rows ---------
@@ -52,7 +56,12 @@ def main() -> None:
 
         store = ObjectStore(Path(tmp) / "cos")
         with jax.set_mesh(mesh):
-            server = FLServer(cfg, fed, sgd(lr=1e-3), store=store, mesh=mesh, checkpoint_every=5, task_id="fedyolo")
+            server = FLServer(
+                cfg, fed, sgd(lr=1e-3), store=store, mesh=mesh,
+                scheduler=TaskScheduler(args.clients, SchedulerConfig(
+                    max_participants=max(2, args.clients - 1), fairness_rounds=3)),
+                checkpoint_every=5, task_id="fedyolo",
+            )
             batches = (
                 jax.tree.map(jnp.asarray, b)
                 for b in fed_batches(cfg, fed, batch=2, seq=0, img_size=args.img_size)

@@ -1,41 +1,63 @@
 """Quickstart: federated training of a small LM with the FedVision engine.
 
-Four clients with non-IID token streams train locally; the FL_SERVER
-aggregates with the paper's Eq. 6 top-n upload compression each round and
-the Yu-2017 scheduler picks participants by quality/load.
+Four clients with non-IID token streams train locally; each round the
+Yu-2017 Task Scheduler picks participants from quality/load scores (masked
+participation — unselected clients skip the round), and the FL_SERVER
+aggregates through the registry with the paper's Eq. 6 top-n upload
+compression. Any registered aggregation mode works via --agg.
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py --rounds 5
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
+from repro.core import aggregators
 from repro.core.rounds import FedConfig
 from repro.core.scheduler import SchedulerConfig, TaskScheduler
 from repro.core.server import FLServer
 from repro.data.pipeline import fed_batches
 from repro.optim import adamw
 
-ARCH = get_arch("qwen3-1.7b").reduced()
-FED = FedConfig(n_clients=4, local_steps=2, aggregation="eq6", topn=2, client_axis="data", data_axis=None)
-
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--agg", default="eq6", choices=[n for n in aggregators.names() if n != "fedsgd"])
+    args = ap.parse_args()
+
+    arch = get_arch("qwen3-1.7b").reduced()
+    fed = FedConfig(
+        n_clients=4,
+        local_steps=2,
+        aggregation=args.agg,
+        topn=2,
+        client_axis="data",
+        data_axis=None,
+        participation="masked",  # scheduler-selected clients train; the rest sit out
+        # fedadam's adaptive step is ~server_lr per coordinate — needs a small
+        # one (see core/aggregators/server_opt.py); 1.0 is exact FedAvg otherwise
+        server_lr=0.02 if args.agg == "fedadam" else 1.0,
+    )
     mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
     with jax.set_mesh(mesh):
         server = FLServer(
-            ARCH,
-            FED,
+            arch,
+            fed,
             adamw(3e-3),
             scheduler=TaskScheduler(4, SchedulerConfig(max_participants=3)),
             mesh=mesh,
         )
         batches = (
-            jax.tree.map(jnp.asarray, b) for b in fed_batches(ARCH, FED, batch=4, seq=48)
+            jax.tree.map(jnp.asarray, b) for b in fed_batches(arch, fed, batch=4, seq=48)
         )
-        history = server.fit(batches, n_rounds=15)
+        history = server.fit(batches, n_rounds=args.rounds)
     first, last = history[0].loss, history[-1].loss
-    print(f"\nfederated loss {first:.3f} -> {last:.3f} over {len(history)} rounds")
+    mean_part = sum(len(r.participants) for r in history) / len(history)
+    print(f"\nfederated loss {first:.3f} -> {last:.3f} over {len(history)} rounds "
+          f"({args.agg}, mean participants {mean_part:.1f}/4)")
     assert last < first
 
 

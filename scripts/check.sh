@@ -1,6 +1,10 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the exact command the roadmap pins, runnable from
-# anywhere. Extra args are forwarded to pytest (e.g. scripts/check.sh -k agg).
+# anywhere, plus the docs check and a benchmark smoke step. Extra args are
+# forwarded to pytest (e.g. scripts/check.sh -k agg).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+python scripts/check_docs.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke >/dev/null
+echo "benchmark smoke OK"

@@ -1,4 +1,4 @@
-"""Aggregator strategy interface + registry (DESIGN.md §7).
+"""Aggregator strategy interface + registry (DESIGN.md §7, Appendix A).
 
 An :class:`Aggregator` is the server-side policy for one federated round:
 ``init_state`` builds any cross-round aggregator state (Eq. 6 score sums,
@@ -10,6 +10,50 @@ the hot loop is one masked/weighted reduction regardless of mode.
 `core.rounds` and `core.server` dispatch purely through :func:`get` — adding
 an aggregation mode is one `@register`-decorated subclass, and
 ``FedConfig.aggregation`` accepts any registered name.
+
+Adding an aggregator — the contract
+-----------------------------------
+
+1. Subclass :class:`Aggregator`, set a unique ``name``, and decorate with
+   :func:`register` (importing your module must run the decorator; built-ins
+   register from ``aggregators/__init__.py``).
+
+2. ``__init__(self, ctx)`` receives an :class:`AggContext` and is the place
+   for *build-time validation* — raise ``ValueError`` on invalid configs
+   (see quant8's divisibility check, trimmed_mean's ratio check) so bad
+   setups fail before any tracing. ``ctx.fed`` carries every FedConfig knob;
+   add new knobs there rather than inventing side-channels.
+
+3. ``init_state(packed0) -> pytree`` builds cross-round state from the
+   packed initial params. It must be shape-derivable: `rounds.state_template`
+   calls it under ``jax.eval_shape`` for the dry-run, so no host-side
+   branching on values. Return ``{}`` if the mode is stateless.
+
+4. ``aggregate(packed, weights, agg_state, mask=None)`` is traced inside
+   the jitted round every round. Inputs:
+
+   - ``packed``: the (C, N_total) client-stacked update buffer;
+   - ``weights``: (C,) scheduler weights (sum 1 over participants);
+   - ``agg_state``: whatever ``init_state`` returned, threaded each round;
+   - ``mask``: (C,) 0/1 participation vector, or None when the caller runs
+     full participation. **Honor it**: rows with ``mask == 0`` are clients
+     that did not train this round — they must contribute to neither the
+     numerator nor denominator of any mean. The helpers below do this for
+     you; only a mode that reduces over clients directly (like
+     trimmed_mean's sort) needs mask-aware logic of its own. A mask of all
+     ones must be numerically identical to ``mask=None``.
+
+   Return ``(packed', agg_state')`` where ``packed'`` is the post-round
+   (C, N_total) buffer (the dispatch: usually the global model broadcast
+   to every row via :meth:`_broadcast`, with non-aggregated positions
+   keeping each client's local values).
+
+5. ``state_pspecs()`` only needs overriding when the state is not
+   replicated server-side (e.g. eq6's client-sharded ``prev_sums``).
+
+`tests/test_aggregators.py::test_state_template_matches_make_state` and the
+equivalence suite in `tests/test_participation.py` will exercise a new mode
+automatically once it is added to their mode lists.
 """
 from __future__ import annotations
 
@@ -37,7 +81,10 @@ class AggContext:
 
 
 class Aggregator:
-    """Strategy interface: init_state / aggregate over the packed buffer."""
+    """Strategy interface: init_state / aggregate over the packed buffer.
+
+    See the module docstring for the full "adding an aggregator" contract.
+    """
 
     name: str = ""
     stacked: bool = True  # False -> fedsgd topology: one shared model copy
@@ -47,7 +94,10 @@ class Aggregator:
 
     # -- cross-round state ---------------------------------------------------
     def init_state(self, packed0: jax.Array) -> PyTree:
-        """Aggregator state from the packed initial params. Default: none."""
+        """Aggregator state from the packed initial params. Default: none.
+
+        Must work under jax.eval_shape (dry-run lowering) — derive shapes
+        from ``packed0``, never branch on its values host-side."""
         return {}
 
     def state_pspecs(self) -> PyTree:
@@ -59,26 +109,40 @@ class Aggregator:
 
     # -- the round -----------------------------------------------------------
     def aggregate(
-        self, packed: jax.Array, weights: jax.Array, agg_state: PyTree
+        self,
+        packed: jax.Array,
+        weights: jax.Array,
+        agg_state: PyTree,
+        mask: jax.Array | None = None,
     ) -> tuple[jax.Array, PyTree]:
-        """(C, N) packed updates + (C,) weights -> (packed', agg_state')."""
+        """(C, N) packed updates + (C,) weights [+ (C,) 0/1 participation
+        mask] -> (packed', agg_state'). mask=None means full participation;
+        an all-ones mask must be numerically identical to None."""
         raise NotImplementedError
 
     # -- shared helpers ------------------------------------------------------
-    def _mean(self, packed: jax.Array, wmask: jax.Array) -> tuple[jax.Array, jax.Array]:
-        """One masked bucket-weighted reduction (ref jnp or Pallas kernel)."""
+    def _mean(
+        self, packed: jax.Array, wmask: jax.Array, mask: jax.Array | None = None
+    ) -> tuple[jax.Array, jax.Array]:
+        """One masked bucket-weighted reduction (ref jnp or Pallas kernel).
+
+        The participation mask rides as its own kernel operand so selection
+        changes per round without retracing."""
         return packing.masked_bucket_mean(
-            packed, wmask, self.ctx.spec, impl=self.ctx.fed.agg_impl
+            packed, wmask, self.ctx.spec, mask, impl=self.ctx.fed.agg_impl
         )
 
-    def _wmean_full(self, packed: jax.Array, weights: jax.Array) -> jax.Array:
-        """Unmasked Eq. 5 mean — for modes whose mask is uniform across
-        buckets the flat contraction avoids the bucket machinery entirely
-        (the Pallas impl still exercises the packed kernel)."""
+    def _wmean_full(
+        self, packed: jax.Array, weights: jax.Array, mask: jax.Array | None = None
+    ) -> jax.Array:
+        """Participation-weighted Eq. 5 mean — for modes whose upload mask is
+        uniform across buckets the flat contraction avoids the bucket
+        machinery entirely (the Pallas impl still exercises the packed
+        kernel)."""
         if self.ctx.fed.agg_impl == "pallas":
-            g, _ = self._mean(packed, self._full_wmask(weights))
+            g, _ = self._mean(packed, self._full_wmask(weights), mask)
             return g
-        return packing.weighted_mean(packed, weights)
+        return packing.weighted_mean(packed, weights, mask)
 
     def _full_wmask(self, weights: jax.Array) -> jax.Array:
         """(C,) weights -> (C, B) mask with every bucket uploaded."""
@@ -86,6 +150,11 @@ class Aggregator:
             weights.astype(jnp.float32)[:, None],
             (weights.shape[0], self.ctx.spec.n_buckets),
         )
+
+    def _masked_weights(self, weights: jax.Array, mask: jax.Array | None) -> jax.Array:
+        """Fold the participation mask into the weight vector (f32)."""
+        w = weights.astype(jnp.float32)
+        return w if mask is None else w * mask.astype(jnp.float32)
 
     def _broadcast(self, global_: jax.Array, packed: jax.Array) -> jax.Array:
         """(N,) global -> (C, N) dispatch (every client gets the new model)."""

@@ -21,8 +21,8 @@ class Dense(Aggregator):
 
     name = "dense"
 
-    def aggregate(self, packed, weights, agg_state):
-        g = self._wmean_full(packed, weights)
+    def aggregate(self, packed, weights, agg_state, mask=None):
+        g = self._wmean_full(packed, weights, mask)
         return self._broadcast(g, packed), agg_state
 
 
@@ -41,9 +41,9 @@ class StaticTopN(Aggregator):
         mask[list(sched)] = 1.0
         self._bucket_mask = mask
 
-    def aggregate(self, packed, weights, agg_state):
+    def aggregate(self, packed, weights, agg_state, mask=None):
         wmask = weights.astype(jnp.float32)[:, None] * jnp.asarray(self._bucket_mask)[None, :]
-        g, den = self._mean(packed, wmask)
+        g, den = self._mean(packed, wmask, mask)
         out = jnp.where((den > 0)[None, :], self._broadcast(g, packed), packed)
         return out, agg_state
 
@@ -58,5 +58,5 @@ class FedSGD(Aggregator):
     name = "fedsgd"
     stacked = False
 
-    def aggregate(self, packed, weights, agg_state):  # pragma: no cover
+    def aggregate(self, packed, weights, agg_state, mask=None):  # pragma: no cover
         raise RuntimeError("fedsgd runs one shared model copy; nothing to aggregate")

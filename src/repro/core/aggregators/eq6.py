@@ -29,11 +29,11 @@ class Eq6(Aggregator):
     def state_pspecs(self):
         return {"prev_sums": P(self.ctx.fed.client_axis, None)}
 
-    def aggregate(self, packed, weights, agg_state):
+    def aggregate(self, packed, weights, agg_state, mask=None):
         new_sums = packing.bucket_sums(self.ctx.spec, packed)  # (C, B)
         v = comp.contribution_scores(agg_state["prev_sums"], new_sums)
-        mask = jax.vmap(lambda s: comp.topn_mask(s, self.ctx.fed.topn))(v)
-        wmask = mask.astype(jnp.float32) * weights.astype(jnp.float32)[:, None]
-        g, den = self._mean(packed, wmask)
+        upload = jax.vmap(lambda s: comp.topn_mask(s, self.ctx.fed.topn))(v)
+        wmask = upload.astype(jnp.float32) * weights.astype(jnp.float32)[:, None]
+        g, den = self._mean(packed, wmask, mask)
         out = jnp.where((den > 0)[None, :], self._broadcast(g, packed), packed)
         return out, {"prev_sums": new_sums}

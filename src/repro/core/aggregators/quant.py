@@ -60,10 +60,11 @@ class Quant8(Aggregator):
             return _pk.dequantize_rows(q, scales, block=block)
         return packing.dequantize_rows_ref(q, scales, block)
 
-    def aggregate(self, packed, weights, agg_state):
+    def aggregate(self, packed, weights, agg_state, mask=None):
         base = agg_state["base"]
         block = self.ctx.fed.quant_block
         axis = self.ctx.fed.client_axis
+        w_eff = self._masked_weights(weights, mask)
 
         def body(new, base_, w):
             delta = new.astype(jnp.float32) - base_.astype(jnp.float32)  # (C_loc, N)
@@ -72,11 +73,11 @@ class Quant8(Aggregator):
                 q = jax.lax.all_gather(q, axis, axis=0, tiled=True)  # int8 (C, N)
                 scales = jax.lax.all_gather(scales, axis, axis=0, tiled=True)
             d = self._dequant(q, scales, block)  # (C, N) f32
-            gd = jnp.einsum("c,cn->n", w.astype(jnp.float32), d)
+            gd = jnp.einsum("c,cn->n", w, d)
             return (base_.astype(jnp.float32) + gd[None, :]).astype(new.dtype)
 
         if self.ctx.mesh is None:
-            out = body(packed, base, weights)
+            out = body(packed, base, w_eff)
         else:
             spec = packing.packed_pspec(self.ctx.spec, axis, self.ctx.mesh)
             out = jax.shard_map(
@@ -85,5 +86,5 @@ class Quant8(Aggregator):
                 in_specs=(spec, spec, P()),
                 out_specs=spec,
                 check_vma=False,
-            )(packed, base, weights)
+            )(packed, base, w_eff)
         return out, {"base": out}

@@ -5,6 +5,13 @@ discarding the k = floor(trim_ratio * C) largest and smallest values —
 tolerant to up to k Byzantine/outlier clients per coordinate. Scheduler
 weights are intentionally ignored: weighting re-opens the attack surface
 robustness is meant to close (a poisoned high-weight client would dominate).
+
+Under partial participation the trim happens *within the selected subset*:
+with C_sel participants this round, k = floor(trim_ratio * C_sel) extremes
+are dropped per side among participant values only — a non-participating
+client's stale row can neither be trimmed in place of an attacker nor leak
+into the average. C_sel is traced (the fairness floor makes it dynamic), so
+the masked path ranks participants per coordinate instead of slicing.
 """
 from __future__ import annotations
 
@@ -34,8 +41,23 @@ class TrimmedMean(Aggregator):
                 f"2*{self._k} >= n_clients ({C}); nothing left to average"
             )
 
-    def aggregate(self, packed, weights, agg_state):
+    def aggregate(self, packed, weights, agg_state, mask=None):
         C = packed.shape[0]
-        x = jnp.sort(packed.astype(jnp.float32), axis=0)
-        g = jnp.mean(x[self._k : C - self._k], axis=0)
+        if mask is None:
+            x = jnp.sort(packed.astype(jnp.float32), axis=0)
+            g = jnp.mean(x[self._k : C - self._k], axis=0)
+            return self._broadcast(g, packed), agg_state
+        # masked trim: rank each coordinate's *participant* values; drop the
+        # k = floor(ratio * C_sel) extremes per side (k and C_sel traced)
+        m = mask.astype(jnp.float32)
+        c_sel = jnp.sum(m)
+        k = jnp.floor(self.ctx.fed.trim_ratio * c_sel).astype(jnp.int32)
+        order = jnp.argsort(packed.astype(jnp.float32), axis=0)  # (C, N)
+        x_sorted = jnp.take_along_axis(packed.astype(jnp.float32), order, axis=0)
+        m_sorted = jnp.take_along_axis(
+            jnp.broadcast_to(m[:, None], packed.shape), order, axis=0
+        )
+        rank = jnp.cumsum(m_sorted, axis=0) - m_sorted  # participant rank, 0-based
+        keep = m_sorted * (rank >= k) * (rank < c_sel - k)
+        g = jnp.sum(x_sorted * keep, axis=0) / jnp.maximum(jnp.sum(keep, axis=0), 1.0)
         return self._broadcast(g, packed), agg_state

@@ -25,8 +25,8 @@ class _ServerOpt(Aggregator):
         g = packed0[0].astype(jnp.float32)  # clients start from one dispatch
         return {"global": g, "opt": self._optimizer().init(g)}
 
-    def aggregate(self, packed, weights, agg_state):
-        avg = self._wmean_full(packed, weights)
+    def aggregate(self, packed, weights, agg_state, mask=None):
+        avg = self._wmean_full(packed, weights, mask)
         delta = agg_state["global"] - avg  # pseudo-gradient
         g, opt_state = self._optimizer().update(agg_state["global"], delta, agg_state["opt"])
         return self._broadcast(g, packed), {"global": g, "opt": opt_state}

@@ -4,8 +4,10 @@
 usage, memory usage, network load) so as to inform the Task Scheduler."
 
 /proc-based (no external deps). In the TPU adaptation each simulated client
-shares this host, so monitor() returns the host telemetry and
-`simulated_loads` draws per-client loads for scheduler experiments.
+shares this host, so monitor() returns the host telemetry,
+`simulated_loads` draws i.i.d. per-client loads for quick experiments, and
+:class:`ClientLoadModel` is the persistent heterogeneous straggler model
+whose per-round reports feed the Task Scheduler (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -53,3 +55,51 @@ def simulated_loads(n_clients: int, rng: np.random.Generator, base: ResourceRepo
     """Per-client load in [0,1]: host load plus client-specific jitter."""
     host = base.cpu_frac if base else 0.2
     return np.clip(host + rng.uniform(-0.1, 0.6, n_clients), 0.0, 1.0)
+
+
+@dataclasses.dataclass
+class LoadModelConfig:
+    straggler_frac: float = 0.25  # fraction of chronically overloaded clients
+    straggler_load: float = 0.85  # their baseline load
+    base_load: float = 0.25  # everyone else's baseline
+    base_spread: float = 0.1  # per-client baseline spread
+    persistence: float = 0.8  # AR(1) pull toward the client baseline
+    jitter: float = 0.08  # AR(1) innovation scale
+    spike_prob: float = 0.05  # transient spike probability per client-round
+    spike_load: float = 1.0  # spike level (device fully busy)
+
+
+class ClientLoadModel:
+    """Persistent per-client load process: stragglers + AR(1) drift + spikes.
+
+    Unlike `simulated_loads` (i.i.d. per round), clients here have identity:
+    a fixed straggler subset sits near `straggler_load` every round, the
+    rest drift around their own baseline, and any client can transiently
+    spike to `spike_load`. This is what makes the scheduler's load term do
+    real work — a quality-only policy would keep picking stragglers.
+    Deterministic under a fixed seed.
+    """
+
+    def __init__(self, n_clients: int, seed: int = 0, config: LoadModelConfig | None = None):
+        self.cfg = config or LoadModelConfig()
+        self.n = n_clients
+        self._rng = np.random.default_rng(seed)
+        n_strag = int(round(self.cfg.straggler_frac * n_clients))
+        self.stragglers = self._rng.choice(n_clients, size=n_strag, replace=False)
+        self.baseline = np.clip(
+            self.cfg.base_load + self.cfg.base_spread * self._rng.standard_normal(n_clients),
+            0.05,
+            0.6,
+        )
+        self.baseline[self.stragglers] = self.cfg.straggler_load
+        self.loads = self.baseline.copy()
+
+    def step(self) -> np.ndarray:
+        """Advance one round; returns the (n,) load report in [0, 1]."""
+        c = self.cfg
+        innov = c.jitter * self._rng.standard_normal(self.n)
+        self.loads = c.persistence * self.loads + (1 - c.persistence) * self.baseline + innov
+        spikes = self._rng.random(self.n) < c.spike_prob
+        self.loads = np.where(spikes, c.spike_load, self.loads)
+        self.loads = np.clip(self.loads, 0.0, 1.0)
+        return self.loads.copy()

@@ -166,13 +166,17 @@ def bucket_sums(spec: PackSpec, packed: jax.Array) -> jax.Array:
 # the one masked/weighted reduction every mode lowers to
 # ---------------------------------------------------------------------------
 
-def weighted_mean(packed: jax.Array, weights: jax.Array) -> jax.Array:
+def weighted_mean(packed: jax.Array, weights: jax.Array, mask: jax.Array | None = None) -> jax.Array:
     """Unmasked Eq. 5 over the flat buffer: (C, N), (C,) -> (N,) f32.
 
     The fast path for modes whose upload mask is uniform across buckets
     (dense, server-optimizer): one flat contraction, no bucket machinery.
+    `mask` is the optional (C,) 0/1 participation vector from the scheduler
+    — masked-out client rows drop from both numerator and denominator.
     """
     w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
     num = jnp.einsum("c,cn->n", w, packed.astype(jnp.float32))
     return num / jnp.maximum(jnp.sum(w), 1e-12)
 
@@ -181,6 +185,7 @@ def masked_bucket_mean(
     packed: jax.Array,
     wmask: jax.Array,
     spec: PackSpec,
+    mask: jax.Array | None = None,
     *,
     impl: str = "ref",
     interpret: bool = True,
@@ -188,21 +193,24 @@ def masked_bucket_mean(
     """Weighted mean over clients under a per-(client, bucket) mask.
 
     packed: (C, N); wmask: (C, B) — participation weight times the 0/1
-    upload mask per score bucket. Returns (global (N,) f32, den (N,) f32):
-    ``global[n] = sum_c wmask[c, bucket(n)] x[c, n] / den[n]`` with
-    ``den[n] = sum_c wmask[c, bucket(n)]`` (0 where nobody uploaded).
+    upload mask per score bucket; mask: optional (C,) 0/1 participation
+    vector (None -> everyone). Returns (global (N,) f32, den (N,) f32):
+    ``global[n] = sum_c mask[c] wmask[c, bucket(n)] x[c, n] / den[n]`` with
+    ``den[n] = sum_c mask[c] wmask[c, bucket(n)]`` (0 where nobody uploaded).
     """
     if impl == "pallas":
         from repro.kernels import pack as _pk  # deferred: kernels are optional here
 
         ids = jnp.asarray(bucket_ids(spec))
-        num, den = _pk.packed_bucket_reduce(packed, wmask, ids, interpret=interpret)
+        num, den = _pk.packed_bucket_reduce(packed, wmask, ids, mask, interpret=interpret)
     else:
         # slot-wise einsum: reads `packed` once and never materializes a
         # (C, N) weight buffer — each slot's buckets are contiguous, so the
         # per-bucket weights contract directly against (C, nb, per) views
         C = packed.shape[0]
         wm = wmask.astype(jnp.float32)
+        if mask is not None:
+            wm = wm * mask.astype(jnp.float32)[:, None]
         parts = []
         for s in spec.slots:
             x = packed[:, s.offset : s.offset + s.size].astype(jnp.float32)

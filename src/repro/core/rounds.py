@@ -1,6 +1,6 @@
 """fed_round: one federated round as a single jit-able SPMD program.
 
-Structure (DESIGN.md §4):
+Structure (DESIGN.md §4, §8):
   1. `vmap` of the local trainer over the client-stacked state — each mesh
      slice along the client axis trains its own divergent model copy for
      E local steps (lax.scan), with *no* cross-client collectives;
@@ -8,6 +8,20 @@ Structure (DESIGN.md §4):
      (C, N_total) buffer (core.packing) and handed to the configured
      :mod:`repro.core.aggregators` strategy — one masked/weighted reduction
      per round regardless of mode (DESIGN.md §7).
+
+Partial participation (DESIGN.md §8): the Task Scheduler's selection enters
+the jitted round as a *traced* participation pytree (`participation_input`),
+so per-round selection changes never retrace. `FedConfig.participation`
+picks the round body:
+  - ``full``   — every client trains; weights alone shape the aggregate
+                 (PR 1 behavior, and the numerical reference);
+  - ``masked`` — per-client `lax.cond` gates the whole local-training scan
+                 on the mask; unselected clients carry params/opt through
+                 unchanged and drop out of the aggregation denominator;
+  - ``compact``— a static budget K = max_participants gathers the selected
+                 client rows into a compact (K, ...) axis, trains only
+                 those, and scatters back — per-round local-training work is
+                 K/C of full participation.
 
 There is no mode-specific branching here: `FedConfig.aggregation` names any
 registered aggregator, whose cross-round state lives under ``state["agg"]``.
@@ -49,6 +63,8 @@ class FedConfig:
     server_beta2: float = 0.99  # fedadam second-moment decay
     server_eps: float = 1e-3  # fedadam adaptivity floor (Reddi et al. tau)
     trim_ratio: float = 0.25  # trimmed_mean: fraction trimmed per side (>=1 client)
+    participation: str = "full"  # full | masked | compact (DESIGN.md §8)
+    max_participants: int = 0  # compact: static per-round budget K (0 -> C)
 
 
 def loss_for(cfg: ArchConfig) -> Callable:
@@ -162,14 +178,62 @@ def state_pspecs(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, rules: d
 
 
 # ---------------------------------------------------------------------------
+# Participation input
+# ---------------------------------------------------------------------------
+
+def static_budget(fed: FedConfig) -> int:
+    """Compact mode's static per-round participant count K."""
+    return fed.max_participants or fed.n_clients
+
+
+def participation_input(fed: FedConfig, mask, weights, idx=None) -> dict:
+    """Host arrays from the scheduler -> the traced pytree fed_round takes.
+
+    mask: (C,) 0/1; weights: (C,) normalized over participants; idx: (K,)
+    int32 selected-client indices, required (and only used) in compact mode.
+    The structure is fixed per FedConfig, so only leaf *values* change per
+    round — selection never retraces the jitted round.
+    """
+    part = {
+        "mask": jnp.asarray(mask, jnp.float32),
+        "weights": jnp.asarray(weights, jnp.float32),
+    }
+    if fed.participation == "compact":
+        if idx is None:
+            raise ValueError("compact participation needs the (K,) idx vector")
+        idx = jnp.asarray(idx, jnp.int32)
+        if idx.shape != (static_budget(fed),):
+            raise ValueError(
+                f"compact idx has shape {idx.shape}; the static budget is "
+                f"({static_budget(fed)},) — the scheduler must emit exactly K indices"
+            )
+        part["idx"] = idx
+    return part
+
+
+def _parse_participation(fed: FedConfig, part) -> tuple[jax.Array, jax.Array | None, jax.Array | None]:
+    """Normalize fed_round's third argument.
+
+    A bare (C,) array is the PR 1 calling convention: weights only, full
+    participation (mask None keeps the aggregation graph bit-identical to
+    the pre-participation engine). A dict is participation_input's output.
+    """
+    if isinstance(part, dict):
+        return part["weights"].astype(jnp.float32), part["mask"].astype(jnp.float32), part.get("idx")
+    return part.astype(jnp.float32), None, None
+
+
+# ---------------------------------------------------------------------------
 # The round
 # ---------------------------------------------------------------------------
 
 def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=None, rules: dict | None = None) -> Callable:
-    """Returns fed_round(state, batch, weights) -> (state, metrics).
+    """Returns fed_round(state, batch, part) -> (state, metrics).
 
-    batch leaves: (C, E, per_step_shard...). weights: (C,) normalized
-    participation weights from the scheduler (Eq. 5 uses 1/N).
+    batch leaves: (C, E, per_step_shard...). part: either a bare (C,)
+    normalized weight vector (full participation, the PR 1 convention) or
+    the `participation_input` pytree {mask, weights[, idx]} from the
+    scheduler. metrics: {"loss": participant mean, "client_loss": (C,)}.
 
     `rules` shapes the per-leaf training-state shardings (consumed via
     state_pspecs by the launcher); the packed aggregation operand itself
@@ -178,6 +242,22 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
     agg = make_aggregator(cfg, fed, mesh)
     loss_fn = loss_for(cfg)
     spec = agg.ctx.spec
+    if fed.participation not in ("full", "masked", "compact"):
+        raise ValueError(
+            f"unknown participation {fed.participation!r}; expected full|masked|compact"
+        )
+    if fed.participation != "full" and not agg.stacked:
+        raise ValueError(
+            f"participation={fed.participation!r} needs a client-stacked "
+            "topology; fedsgd runs one shared model copy (use participation='full')"
+        )
+    if fed.participation == "compact":
+        K = static_budget(fed)
+        if not 1 <= K <= fed.n_clients:
+            raise ValueError(
+                f"compact participation: max_participants={fed.max_participants} "
+                f"must be in [1, n_clients={fed.n_clients}]"
+            )
 
     def grads_of(params, step_batch):
         """Gradients for one local step, with microbatch accumulation.
@@ -215,7 +295,40 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
         (params, opt), losses = jax.lax.scan(step, (params, opt), client_batch)
         return params, opt, jnp.mean(losses)
 
-    def fed_round(state, batch, weights):
+    def gated_local_train(on, params, opt, client_batch):
+        """Whole-client gate: the masked branch carries params/opt through
+        untouched (vmap lowers the cond to a select along the client axis)."""
+        return jax.lax.cond(
+            on > 0,
+            local_train,
+            lambda p, o, b: (p, o, jnp.float32(0.0)),
+            params, opt, client_batch,
+        )
+
+    def train_clients(state, batch, mask, idx):
+        """Dispatch on the participation mode; returns (new_p, new_o,
+        client_loss (C,))."""
+        if fed.participation == "compact":
+            # gather the K selected client rows into a compact axis: local
+            # training runs K clients' worth of work, not C (DESIGN.md §8).
+            take = lambda t: jax.tree.map(lambda x: jnp.take(x, idx, axis=0), t)
+            p_k, o_k, loss_k = jax.vmap(local_train)(
+                take(state["params"]), take(state["opt"]), take(batch)
+            )
+            put = lambda full, upd: jax.tree.map(lambda x, u: x.at[idx].set(u), full, upd)
+            loss = jnp.zeros((fed.n_clients,), jnp.float32).at[idx].set(loss_k)
+            return put(state["params"], p_k), put(state["opt"], o_k), loss
+        if fed.participation == "masked":
+            on = jnp.ones((fed.n_clients,), jnp.float32) if mask is None else mask
+            return jax.vmap(gated_local_train, spmd_axis_name=fed.client_axis)(
+                on, state["params"], state["opt"], batch
+            )
+        return jax.vmap(local_train, spmd_axis_name=fed.client_axis)(
+            state["params"], state["opt"], batch
+        )
+
+    def fed_round(state, batch, part):
+        weights, mask, idx = _parse_participation(fed, part)
         if not agg.stacked:
             # FedSGD-equivalent: clients = data-parallel shards, E=1,
             # param-averaging == gradient-averaging (DESIGN.md §5). One
@@ -223,13 +336,16 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
             p, o, loss = local_train(state["params"], state["opt"], batch)
             return (
                 {**state, "params": p, "opt": o, "round": state["round"] + 1},
-                {"loss": loss},
+                {"loss": loss, "client_loss": jnp.full((fed.n_clients,), loss)},
             )
-        new_p, new_o, loss = jax.vmap(local_train, spmd_axis_name=fed.client_axis)(
-            state["params"], state["opt"], batch
-        )
+        if fed.participation == "compact" and idx is None:
+            raise ValueError(
+                "compact participation: pass participation_input(fed, mask, "
+                "weights, idx), not a bare weight vector"
+            )
+        new_p, new_o, loss = train_clients(state, batch, mask, idx)
         packed = packing.pack(spec, new_p)
-        packed_out, agg_state = agg.aggregate(packed, weights, state["agg"])
+        packed_out, agg_state = agg.aggregate(packed, weights, state["agg"], mask)
         out = {
             **state,
             "params": packing.unpack(spec, packed_out, new_p),
@@ -237,7 +353,11 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
             "agg": agg_state,
             "round": state["round"] + 1,
         }
-        return out, {"loss": jnp.mean(loss)}
+        if mask is None:
+            mean_loss = jnp.mean(loss)
+        else:
+            mean_loss = jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return out, {"loss": mean_loss, "client_loss": loss}
 
     return fed_round
 

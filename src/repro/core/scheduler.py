@@ -9,7 +9,12 @@ We implement that as per-round selection maximizing
 subject to a participation budget, with a fairness floor so starved clients
 eventually re-enter (their data would otherwise never contribute). Quality
 is an EMA of each client's local loss improvement; load comes from Explorer
-reports. The output is the weight vector fed to the Eq. 5 aggregation.
+reports (`core.explorer.ClientLoadModel` in the simulated platform).
+
+:meth:`TaskScheduler.participation` is the engine-facing output: a 0/1 mask,
+the Eq. 5 weight vector, and (under a static budget) the compact index
+vector — exactly the `rounds.participation_input` operands, so the selection
+flows into the jitted round as traced values (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -42,23 +47,52 @@ class TaskScheduler:
         self.quality[client] = e * self.quality[client] + (1 - e) * improvement
         self.last_loss[client] = loss
 
-    def select(self, loads: np.ndarray) -> np.ndarray:
-        """loads: (n,) in [0,1] from Explorer. Returns weights (n,), sum 1."""
+    def participation(self, loads: np.ndarray, k_static: int | None = None) -> dict[str, np.ndarray]:
+        """One round of selection. loads: (n,) in [0,1] from the Explorer.
+
+        Returns {"mask": (n,) f32 0/1, "weights": (n,) f32 summing to 1 over
+        participants, ["idx": (k_static,) int32]}.
+
+        Without ``k_static`` the participant count is dynamic: the top
+        ``max_participants`` by score, *plus* every client whose idle streak
+        hit the fairness floor. With ``k_static`` (compact rounds need a
+        static shape) exactly k_static clients are returned and the fairness
+        floor *preempts* the budget instead of growing it: longest-idle
+        floored clients claim slots first, best-scoring clients fill the
+        rest.
+        """
         loads = np.asarray(loads, float)
         score = self.cfg.alpha * self.quality - self.cfg.beta * loads
-        k = self.cfg.max_participants or self.n
-        k = min(k, self.n)
-        chosen = set(np.argsort(-score)[:k].tolist())
-        # fairness floor: anyone idle too long joins this round
+        order = np.argsort(-score)
+        floored = [i for i in range(self.n) if self.idle_rounds[i] >= self.cfg.fairness_rounds]
+        if k_static is None:
+            k = min(self.cfg.max_participants or self.n, self.n)
+            chosen = set(order[:k].tolist())
+            chosen.update(floored)
+        else:
+            k = min(k_static, self.n)
+            picked = sorted(floored, key=lambda i: (-self.idle_rounds[i], i))[:k]
+            for i in order:
+                if len(picked) >= k:
+                    break
+                if i not in picked:
+                    picked.append(int(i))
+            chosen = set(picked)
+        mask = np.zeros(self.n, np.float32)
+        mask[list(chosen)] = 1.0
         for i in range(self.n):
-            if self.idle_rounds[i] >= self.cfg.fairness_rounds:
-                chosen.add(i)
-        weights = np.zeros(self.n)
-        for i in range(self.n):
-            if i in chosen:
-                weights[i] = 1.0
-                self.idle_rounds[i] = 0
-            else:
-                self.idle_rounds[i] += 1
-        total = weights.sum()
-        return weights / total if total else np.full(self.n, 1.0 / self.n)
+            self.idle_rounds[i] = 0 if mask[i] else self.idle_rounds[i] + 1
+        total = float(mask.sum())
+        weights = mask.astype(float) / total if total else np.full(self.n, 1.0 / self.n)
+        out = {"mask": mask, "weights": weights}
+        if k_static is not None:
+            out["idx"] = np.asarray(sorted(chosen), np.int32)
+        return out
+
+    def select(self, loads: np.ndarray) -> np.ndarray:
+        """loads: (n,) in [0,1] from Explorer. Returns weights (n,), sum 1.
+
+        PR 1 convention (weights only); new callers want
+        :meth:`participation` for the mask/idx the round engine consumes.
+        """
+        return self.participation(loads)["weights"].astype(float)

@@ -6,6 +6,14 @@ store, and the round loop; FL_CLIENTs are the mesh slices (their control
 surface is repro.core.client). Aggregation policy is resolved purely
 through the :mod:`repro.core.aggregators` registry — the server never
 branches on a mode name.
+
+Scheduler-in-the-loop (DESIGN.md §8): each round the Explorer's load model
+reports per-client loads, `TaskScheduler.participation` turns them into the
+mask/weight (and compact-index) vectors, and those flow into the jitted
+round as traced inputs — selection changes every round, the compiled
+program never retraces. Per-client losses come back in the metrics and feed
+the scheduler's quality EMA for the *participants only* (a skipped client's
+quality signal would otherwise be fabricated).
 """
 from __future__ import annotations
 
@@ -33,6 +41,8 @@ class RoundRecord:
     loss: float
     weights: list[float]
     seconds: float
+    participants: list[int] = dataclasses.field(default_factory=list)
+    loads: list[float] = dataclasses.field(default_factory=list)
 
 
 class FLServer:
@@ -50,6 +60,7 @@ class FLServer:
         dtype=jnp.float32,
         checkpoint_every: int = 0,
         task_id: str = "task",
+        load_model: explorer.ClientLoadModel | None = None,
     ):
         self.cfg = cfg
         self.fed = fed
@@ -58,7 +69,9 @@ class FLServer:
         self.task_id = task_id
         self.checkpoint_every = checkpoint_every
         self.scheduler = scheduler or TaskScheduler(fed.n_clients, SchedulerConfig())
-        self._rng = np.random.default_rng(seed)
+        self.load_model = load_model or explorer.ClientLoadModel(fed.n_clients, seed=seed)
+        # compact rounds need the scheduler to emit exactly K indices
+        self._k_static = rounds.static_budget(fed) if fed.participation == "compact" else None
         # registry dispatch: validates the mode name and any mode config
         # (e.g. quant8 divisibility, trimmed_mean ratio) before any jit
         self.aggregator = rounds.make_aggregator(cfg, fed, mesh)
@@ -80,13 +93,23 @@ class FLServer:
 
     def run_round(self, batch: PyTree) -> RoundRecord:
         t0 = time.time()
-        loads = explorer.simulated_loads(self.fed.n_clients, self._rng)
-        weights = jnp.asarray(self.scheduler.select(loads), jnp.float32)
-        self.state, metrics = self._fed_round(self.state, batch, weights)
+        loads = self.load_model.step()
+        sel = self.scheduler.participation(loads, k_static=self._k_static)
+        part = rounds.participation_input(self.fed, sel["mask"], sel["weights"], sel.get("idx"))
+        self.state, metrics = self._fed_round(self.state, batch, part)
         loss = float(metrics["loss"])
-        for c in range(self.fed.n_clients):
-            self.scheduler.report_quality(c, loss)
-        rec = RoundRecord(len(self.history), loss, [float(w) for w in weights], time.time() - t0)
+        participants = [int(c) for c in np.nonzero(sel["mask"])[0]]
+        client_loss = np.asarray(metrics["client_loss"], np.float32)
+        for c in participants:
+            self.scheduler.report_quality(c, float(client_loss[c]))
+        rec = RoundRecord(
+            len(self.history),
+            loss,
+            [float(w) for w in sel["weights"]],
+            time.time() - t0,
+            participants=participants,
+            loads=[float(x) for x in loads],
+        )
         self.history.append(rec)
         if self.store and self.checkpoint_every and rec.round_idx % self.checkpoint_every == 0:
             self.store.put_model(self.task_id, rec.round_idx, self.global_params(), {"loss": loss})
@@ -96,5 +119,5 @@ class FLServer:
         for r in range(n_rounds):
             rec = self.run_round(next(batches))
             if log and (r % max(1, n_rounds // 10) == 0 or r == n_rounds - 1):
-                log(f"round {rec.round_idx:4d}  loss {rec.loss:.4f}  participants {sum(1 for w in rec.weights if w > 0)}/{self.fed.n_clients}")
+                log(f"round {rec.round_idx:4d}  loss {rec.loss:.4f}  participants {len(rec.participants)}/{self.fed.n_clients}")
         return self.history

@@ -2,7 +2,10 @@
 
 `fed_batches(cfg, fed, ...)` yields client-stacked batches (C, E, b, ...)
 matching what `core.rounds.build_fed_round` consumes, for any assigned
-architecture (text/audio/vlm) or the paper's detector.
+architecture (text/audio/vlm) or the paper's detector. For text archs,
+``partition_name`` swaps the default per-client Markov drift ("stream") for
+one of the `data.partition` non-IID scenarios over a labeled sequence pool
+(`partitioned_token_batches`).
 """
 from __future__ import annotations
 
@@ -10,12 +13,58 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.rounds import FedConfig
-from repro.data import darknet, synthetic
+from repro.data import darknet, partition, synthetic
 from repro.models.yolov3 import ANCHORS
 
 
-def fed_batches(cfg: ArchConfig, fed: FedConfig, batch: int, seq: int, seed: int = 0, img_size: int = 96):
+def partitioned_token_batches(
+    vocab: int,
+    n_clients: int,
+    local_steps: int,
+    batch: int,
+    seq: int,
+    scenario: str = "dirichlet",
+    seed: int = 0,
+    *,
+    alpha: float = 0.5,
+    n_sources: int = 8,
+    pool_per_source: int = 64,
+):
+    """Token batches drawn from a partitioned labeled pool.
+
+    A pool of sequences is pre-sampled from `n_sources` distinct Markov
+    chains (label = source id), split across clients by the named
+    `data.partition` scenario, and each client then draws batches from its
+    own index set only — label-skew/quantity-skew federated text data with
+    measurable `partition_stats`. Yields {"tokens": (C, E, b, S)}.
+    """
+    sources = [synthetic.MarkovTokens(vocab, seed=seed + s) for s in range(n_sources)]
+    rng = np.random.default_rng(seed + 101)
+    seqs = np.concatenate([s.sample(rng, pool_per_source, seq) for s in sources])
+    labels = np.repeat(np.arange(n_sources), pool_per_source)
+    parts = partition.make_scenario(
+        scenario, labels, n_clients, np.random.default_rng(seed + 202), alpha=alpha
+    )
+    draw = np.random.default_rng(seed + 303)
+    while True:
+        idx = np.stack(
+            [draw.choice(parts[c], size=(local_steps, batch)) for c in range(n_clients)]
+        )
+        yield {"tokens": seqs[idx].astype(np.int32)}  # (C, E, b, S)
+
+
+def fed_batches(cfg: ArchConfig, fed: FedConfig, batch: int, seq: int, seed: int = 0, img_size: int = 96, partition_name: str = "stream", alpha: float = 0.5):
     C, E = fed.n_clients, fed.local_steps
+    if partition_name != "stream":
+        if cfg.modality != "text":
+            raise ValueError(
+                f"partition scenarios only apply to text archs (got modality="
+                f"{cfg.modality!r}); use the default 'stream'"
+            )
+        yield from partitioned_token_batches(
+            cfg.vocab_size, C, E, batch, seq, partition_name, seed, alpha=alpha
+        )
+        return
     if cfg.modality == "audio":
         yield from synthetic.audio_batches(cfg.d_model, cfg.vocab_size, C, E, batch, seq, seed)
     elif cfg.modality == "vlm":

@@ -3,9 +3,13 @@
 `packed_bucket_reduce` is the single launch the whole round's aggregation
 lowers to: a tiled masked/weighted reduction over the flat buffer. Each grid
 step loads one (C, BLOCK_N) window plus the small (C, B) per-bucket weight
-mask; the per-element weights are recovered on the MXU as
-``wmask @ one_hot(bucket_ids)`` (B is n_layers+1, so the one-hot matmul is
-tiny) and the client reduction runs on the VPU with f32 accumulation.
+mask and the (C, 1) participation mask from the Task Scheduler; the
+per-element weights are recovered on the MXU as
+``(mask * wmask) @ one_hot(bucket_ids)`` (B is n_layers+1, so the one-hot
+matmul is tiny) and the client reduction runs on the VPU with f32
+accumulation. Rows of non-participating clients (mask 0) contribute to
+neither numerator nor denominator, so partial participation is one traced
+operand away — no recompilation when the selection changes per round.
 
 `quantize_rows` / `dequantize_rows` are the packed int8 transport: one 2-D
 grid over (client row, block) quantizes the entire buffer in a single
@@ -22,15 +26,17 @@ from jax.experimental import pallas as pl
 BLOCK_N = 1024
 
 
-def _reduce_kernel(x_ref, wm_ref, bid_ref, num_ref, den_ref):
+def _reduce_kernel(x_ref, wm_ref, pm_ref, bid_ref, num_ref, den_ref):
     x = x_ref[...].astype(jnp.float32)  # (C, BN)
     wm = wm_ref[...].astype(jnp.float32)  # (C, B)
+    pm = pm_ref[...].astype(jnp.float32)  # (C, 1) participation mask
     bid = bid_ref[...]  # (BN,) int32
     B = wm.shape[1]
     bn = bid.shape[0]
-    # per-element weights via one-hot matmul (MXU): (C, B) @ (B, BN)
+    # per-element weights via one-hot matmul (MXU): (C, B) @ (B, BN); the
+    # participation mask zeroes whole client rows before the matmul
     onehot = (jax.lax.broadcasted_iota(jnp.int32, (B, bn), 0) == bid[None, :]).astype(jnp.float32)
-    w = jnp.dot(wm, onehot, preferred_element_type=jnp.float32)  # (C, BN)
+    w = jnp.dot(wm * pm, onehot, preferred_element_type=jnp.float32)  # (C, BN)
     num_ref[...] = jnp.sum(x * w, axis=0)
     den_ref[...] = jnp.sum(w, axis=0)
 
@@ -40,18 +46,25 @@ def packed_bucket_reduce(
     packed: jax.Array,
     wmask: jax.Array,
     bucket_ids: jax.Array,
+    mask: jax.Array | None = None,
     *,
     interpret: bool = True,
     block_n: int = BLOCK_N,
 ) -> tuple[jax.Array, jax.Array]:
-    """packed (C, N), wmask (C, B), bucket_ids (N,) -> (num (N,), den (N,)).
+    """packed (C, N), wmask (C, B), bucket_ids (N,), mask (C,) or None
+    -> (num (N,), den (N,)).
 
-    num[n] = sum_c wmask[c, bucket_ids[n]] * packed[c, n];
-    den[n] = sum_c wmask[c, bucket_ids[n]]. N is padded to block_n
-    internally (padding positions get bucket id B, which one-hots to zero).
+    num[n] = sum_c mask[c] wmask[c, bucket_ids[n]] * packed[c, n];
+    den[n] = sum_c mask[c] wmask[c, bucket_ids[n]]. `mask` is the 0/1
+    participation vector from the scheduler (None -> all participate);
+    it is a traced operand, so per-round selection changes never retrace.
+    N is padded to block_n internally (padding positions get bucket id B,
+    which one-hots to zero).
     """
     C, N = packed.shape
     B = wmask.shape[1]
+    if mask is None:
+        mask = jnp.ones((C,), jnp.float32)
     pad = (-N) % block_n
     if pad:
         packed = jnp.pad(packed, ((0, 0), (0, pad)))
@@ -63,6 +76,7 @@ def packed_bucket_reduce(
         in_specs=[
             pl.BlockSpec((C, block_n), lambda i: (0, i)),
             pl.BlockSpec((C, B), lambda i: (0, 0)),
+            pl.BlockSpec((C, 1), lambda i: (0, 0)),
             pl.BlockSpec((block_n,), lambda i: (i,)),
         ],
         out_specs=[
@@ -74,7 +88,12 @@ def packed_bucket_reduce(
             jax.ShapeDtypeStruct((npad,), jnp.float32),
         ],
         interpret=interpret,
-    )(packed, wmask.astype(jnp.float32), bucket_ids.astype(jnp.int32))
+    )(
+        packed,
+        wmask.astype(jnp.float32),
+        mask.astype(jnp.float32).reshape(C, 1),
+        bucket_ids.astype(jnp.int32),
+    )
     return num[:N], den[:N]
 
 

@@ -17,13 +17,17 @@ def fedavg_masked_mean(stacked: jax.Array, weights: jax.Array, mask: jax.Array) 
     return (num / den).astype(stacked.dtype)
 
 
-def packed_bucket_reduce(packed: jax.Array, wmask: jax.Array, bucket_ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+def packed_bucket_reduce(packed: jax.Array, wmask: jax.Array, bucket_ids: jax.Array, mask: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
     """Oracle for kernels.pack.packed_bucket_reduce.
 
     packed: (C, N); wmask: (C, B) per-(client, bucket) weights; bucket_ids:
-    (N,) int32. Returns (num (N,), den (N,)) f32.
+    (N,) int32; mask: optional (C,) 0/1 participation vector (None -> all).
+    Returns (num (N,), den (N,)) f32.
     """
-    w = jnp.take(wmask.astype(jnp.float32), bucket_ids, axis=1)  # (C, N)
+    wm = wmask.astype(jnp.float32)
+    if mask is not None:
+        wm = wm * mask.astype(jnp.float32)[:, None]
+    w = jnp.take(wm, bucket_ids, axis=1)  # (C, N)
     num = jnp.sum(packed.astype(jnp.float32) * w, axis=0)
     return num, jnp.sum(w, axis=0)
 

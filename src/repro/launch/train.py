@@ -7,6 +7,8 @@ or emits the production-mesh launch configuration with --print-plan.
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --rounds 20
   PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
       --agg quant8 --clients 8 --local-steps 2
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --rounds 20 \
+      --participation compact --max-participants 2 --partition dirichlet
   PYTHONPATH=src python -m repro.launch.train --arch grok-1-314b --print-plan
 """
 from __future__ import annotations
@@ -23,6 +25,7 @@ from repro.core import aggregators
 from repro.core.rounds import FedConfig
 from repro.core.scheduler import SchedulerConfig, TaskScheduler
 from repro.core.server import FLServer
+from repro.data import partition
 from repro.data.pipeline import fed_batches
 from repro.launch import specs
 from repro.optim import adamw, sgd
@@ -50,6 +53,19 @@ def main() -> None:
     ap.add_argument("--server-lr", type=float, default=None,
                     help="fedavgm/fedadam server step (default: 1.0 for fedavgm, 0.02 for fedadam)")
     ap.add_argument("--topn", type=int, default=0)
+    ap.add_argument("--participation", default="full", choices=["full", "masked", "compact"],
+                    help="round body: full (everyone trains), masked (cond-gated), "
+                    "compact (static-K gather; see --max-participants)")
+    ap.add_argument("--max-participants", type=int, default=0,
+                    help="scheduler budget per round (0 -> clients//2, min 2; "
+                    "compact mode uses this as the static K)")
+    ap.add_argument("--fairness-rounds", type=int, default=4,
+                    help="force-include clients idle this many rounds")
+    ap.add_argument("--partition", default="stream",
+                    choices=["stream", *partition.SCENARIOS],
+                    help="client data split: stream (per-client Markov drift) or a "
+                    "data.partition scenario over a labeled pool (text archs)")
+    ap.add_argument("--alpha", type=float, default=0.5, help="dirichlet label-skew concentration")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
@@ -66,6 +82,7 @@ def main() -> None:
     cfg = get_arch(args.arch)
     if not args.full_size:
         cfg = cfg.reduced()
+    budget = args.max_participants or max(2, args.clients // 2)
     fed = FedConfig(
         n_clients=args.clients,
         local_steps=args.local_steps,
@@ -76,6 +93,8 @@ def main() -> None:
         # adaptive server step is ~server_lr per coordinate: fedadam needs a
         # small one out of the box (see core/aggregators/server_opt.py)
         server_lr=args.server_lr if args.server_lr is not None else (0.02 if args.agg == "fedadam" else 1.0),
+        participation=args.participation,
+        max_participants=budget if args.participation == "compact" else 0,
     )
     optimizer = adamw(args.lr) if args.optimizer == "adamw" else sgd(args.lr)
     mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
@@ -86,17 +105,25 @@ def main() -> None:
             fed,
             optimizer,
             store=store,
-            scheduler=TaskScheduler(fed.n_clients, SchedulerConfig(max_participants=max(2, fed.n_clients // 2))),
+            scheduler=TaskScheduler(fed.n_clients, SchedulerConfig(
+                max_participants=budget, fairness_rounds=args.fairness_rounds)),
             mesh=mesh,
             checkpoint_every=5 if store else 0,
             task_id=args.arch,
         )
         batches = (
             jax.tree.map(jnp.asarray, b)
-            for b in fed_batches(cfg, fed, batch=args.batch, seq=args.seq)
+            for b in fed_batches(cfg, fed, batch=args.batch, seq=args.seq,
+                                 partition_name=args.partition, alpha=args.alpha)
         )
         history = server.fit(batches, args.rounds)
-    print(json.dumps({"final_loss": history[-1].loss, "rounds": len(history)}))
+    mean_participants = sum(len(r.participants) for r in history) / len(history)
+    print(json.dumps({
+        "final_loss": history[-1].loss,
+        "rounds": len(history),
+        "participation": args.participation,
+        "mean_participants": mean_participants,
+    }))
 
 
 if __name__ == "__main__":

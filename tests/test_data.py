@@ -79,6 +79,66 @@ def test_dirichlet_partition_properties(n_clients, alpha):
     assert all(len(p) >= 1 for p in parts)
 
 
+def test_dirichlet_partition_deterministic_under_fixed_seed():
+    labels = np.random.default_rng(0).integers(0, 6, 500)
+    a = partition.dirichlet_partition(labels, 5, 0.3, np.random.default_rng(42))
+    b = partition.dirichlet_partition(labels, 5, 0.3, np.random.default_rng(42))
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_quantity_skew_partition_covers_and_skews():
+    rng = np.random.default_rng(1)
+    parts = partition.quantity_skew_partition(1000, 6, rng, sigma=1.5, min_per_client=4)
+    joined = np.concatenate(parts)
+    assert len(joined) == 1000 and len(set(joined.tolist())) == 1000
+    sizes = sorted(len(p) for p in parts)
+    assert sizes[0] >= 4 and sizes[-1] > 2 * sizes[0]  # a real long tail
+
+
+def test_class_shard_partition_limits_classes_per_client():
+    rng = np.random.default_rng(2)
+    labels = np.repeat(np.arange(10), 40)
+    parts = partition.class_shard_partition(labels, 5, 2, rng)
+    joined = np.concatenate(parts)
+    assert len(joined) == 400 and len(set(joined.tolist())) == 400
+    # 2 contiguous label shards -> at most ~3 distinct classes per client
+    assert max(len(set(labels[p].tolist())) for p in parts) <= 4
+
+
+def test_ensure_min_reaches_fixed_point_even_when_donor_dips():
+    # the donor (5 elems) must itself be topped back up after giving 4 away
+    out = [np.array([], int), np.arange(0, 5), np.arange(5, 12)]
+    fixed = partition._ensure_min(out, 4)
+    assert all(len(p) >= 4 for p in fixed)
+    joined = np.concatenate(fixed)
+    assert len(joined) == 12 and len(set(joined.tolist())) == 12
+    with pytest.raises(ValueError, match="infeasible"):
+        partition._ensure_min([np.arange(3), np.arange(3, 5)], 4)
+
+
+def test_make_scenario_dispatch_and_unknown():
+    labels = np.random.default_rng(3).integers(0, 4, 200)
+    for name in partition.SCENARIOS:
+        parts = partition.make_scenario(name, labels, 4, np.random.default_rng(7))
+        assert len(np.concatenate(parts)) == 200
+    with pytest.raises(ValueError, match="scenario"):
+        partition.make_scenario("nope", labels, 4, np.random.default_rng(7))
+
+
+def test_partitioned_token_batches_shapes_and_scenarios():
+    cfg = get_arch("qwen3-1.7b").reduced()
+    fed = FedConfig(n_clients=3, local_steps=2, client_axis="data")
+    it = fed_batches(cfg, fed, batch=2, seq=24, partition_name="dirichlet", alpha=0.1)
+    batch = next(it)
+    assert batch["tokens"].shape == (3, 2, 2, 24)
+    assert batch["tokens"].dtype == np.int32
+    with pytest.raises(ValueError, match="text"):
+        next(fed_batches(get_arch("fedyolov3").reduced(), fed, batch=2, seq=0,
+                         partition_name="dirichlet"))
+
+
 def test_dirichlet_skew_increases_with_small_alpha():
     rng = np.random.default_rng(2)
     labels = rng.integers(0, 8, 4000)

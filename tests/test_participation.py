@@ -1,0 +1,262 @@
+"""Scheduler-in-the-loop partial participation engine (DESIGN.md §8).
+
+Pins the load-bearing equivalence: with every client selected at uniform
+weight, the masked packed path reproduces the PR 1 packed path bit-for-bit
+on all four seed modes — and compact (static-K gather) agrees with masked
+on partial selections. Plus scheduler fairness, the participation mask
+kernel operand, and the straggler load model.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import rounds as R
+from repro.core.explorer import ClientLoadModel, LoadModelConfig
+from repro.core.rounds import FedConfig
+from repro.core.scheduler import SchedulerConfig, TaskScheduler
+from repro.kernels import ops, ref
+from repro.optim import sgd
+
+CFG = get_arch("qwen3-1.7b").reduced()
+SEED_MODES = ["dense", "eq6", "quant8", "static_topn"]
+C = 4
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _fed(mode, **kw):
+    base = dict(n_clients=C, local_steps=1, aggregation=mode, topn=2,
+                client_axis="data", data_axis=None)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _toks(seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab_size, (C, 1, 2, 16)), jnp.int32)
+
+
+def _one_round(fed, part, mesh, seed=0):
+    opt = sgd(lr=0.05)
+    with jax.set_mesh(mesh):
+        state = R.make_state(CFG, fed, opt, jax.random.key(seed))
+        fr = jax.jit(R.build_fed_round(CFG, fed, opt, mesh))
+        state, metrics = fr(state, {"tokens": _toks()}, part)
+    return state, metrics
+
+
+def _assert_trees_equal(a, b, exact=True):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if exact:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        else:
+            np.testing.assert_allclose(
+                np.asarray(x, np.float32), np.asarray(y, np.float32), rtol=1e-6, atol=1e-7
+            )
+
+
+# ---------------- full mask == PR 1 packed path, bit for bit -----------------
+
+@pytest.mark.parametrize("mode", SEED_MODES)
+def test_full_mask_masked_path_bitwise_equals_pr1(mode):
+    mesh = _mesh()
+    st_legacy, m_legacy = _one_round(_fed(mode), R.uniform_weights(C), mesh)
+    fed_m = _fed(mode, participation="masked")
+    part = R.participation_input(fed_m, np.ones(C), np.full(C, 1.0 / C))
+    st_masked, m_masked = _one_round(fed_m, part, mesh)
+    _assert_trees_equal(st_legacy["params"], st_masked["params"])
+    _assert_trees_equal(st_legacy["agg"], st_masked["agg"])
+    assert float(m_legacy["loss"]) == float(m_masked["loss"])
+
+
+def test_full_budget_compact_matches_full():
+    mesh = _mesh()
+    st_full, _ = _one_round(_fed("dense"), R.uniform_weights(C), mesh)
+    fed_c = _fed("dense", participation="compact", max_participants=C)
+    part = R.participation_input(fed_c, np.ones(C), np.full(C, 1.0 / C), np.arange(C))
+    st_compact, _ = _one_round(fed_c, part, mesh)
+    _assert_trees_equal(st_full["params"], st_compact["params"], exact=False)
+
+
+@pytest.mark.parametrize("mode", SEED_MODES)
+def test_masked_and_compact_agree_on_partial_selection(mode):
+    mesh = _mesh()
+    mask = np.array([1.0, 0.0, 1.0, 0.0], np.float32)
+    w = mask / mask.sum()
+    fed_m = _fed(mode, participation="masked")
+    fed_c = _fed(mode, participation="compact", max_participants=2)
+    st_m, mm = _one_round(fed_m, R.participation_input(fed_m, mask, w), mesh)
+    st_c, mc = _one_round(fed_c, R.participation_input(fed_c, mask, w, np.array([0, 2])), mesh)
+    _assert_trees_equal(st_m["params"], st_c["params"], exact=False)
+    np.testing.assert_allclose(
+        np.asarray(mm["client_loss"]), np.asarray(mc["client_loss"]), rtol=1e-6
+    )
+    # unselected clients trained nothing: their loss slots stay zero
+    assert float(mm["client_loss"][1]) == 0.0 and float(mm["client_loss"][3]) == 0.0
+
+
+def test_masked_partial_excludes_unselected_from_aggregate():
+    """The dense global under a partial mask is the weighted mean of the
+    *selected* clients' trained params only."""
+    mesh = _mesh()
+    mask = np.array([1.0, 1.0, 0.0, 0.0], np.float32)
+    w = mask / mask.sum()
+    fed_m = _fed("dense", participation="masked")
+    st, _ = _one_round(fed_m, R.participation_input(fed_m, mask, w), mesh)
+    # an all-clients run from the same init, restricted to clients {0,1}:
+    # the masked global must not depend on clients 2,3 at all — rerun with a
+    # different batch for the unselected clients and demand identity
+    toks2 = np.array(_toks())
+    toks2[2:] = np.asarray(_toks(seed=99))[2:]
+    opt = sgd(lr=0.05)
+    with jax.set_mesh(mesh):
+        state = R.make_state(CFG, fed_m, opt, jax.random.key(0))
+        fr = jax.jit(R.build_fed_round(CFG, fed_m, opt, mesh))
+        st2, _ = fr(state, {"tokens": jnp.asarray(toks2)}, R.participation_input(fed_m, mask, w))
+    _assert_trees_equal(st["params"], st2["params"])
+
+
+# ---------------------------- validation -------------------------------------
+
+def test_participation_validation():
+    with pytest.raises(ValueError, match="full|masked|compact"):
+        R.build_fed_round(CFG, _fed("dense", participation="nope"), sgd())
+    with pytest.raises(ValueError, match="fedsgd"):
+        R.build_fed_round(CFG, _fed("fedsgd", participation="masked"), sgd())
+    with pytest.raises(ValueError, match="max_participants"):
+        R.build_fed_round(CFG, _fed("dense", participation="compact", max_participants=C + 1), sgd())
+    fed_c = _fed("dense", participation="compact", max_participants=2)
+    with pytest.raises(ValueError, match="idx"):
+        R.participation_input(fed_c, np.ones(C), np.full(C, 0.25))
+    with pytest.raises(ValueError, match="exactly K"):
+        R.participation_input(fed_c, np.ones(C), np.full(C, 0.25), np.arange(3))
+
+
+# ------------------------- kernel mask operand --------------------------------
+
+@pytest.mark.parametrize("C_,N,B", [(4, 3000, 3), (3, 277, 5)])
+def test_packed_bucket_reduce_mask_operand(C_, N, B):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(C_, N)), jnp.float32)
+    wm = jnp.asarray(rng.random((C_, B)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, B, N), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, C_), jnp.float32)
+    num_k, den_k = ops.packed_bucket_reduce(x, wm, ids, mask, block_n=256)
+    num_r, den_r = ref.packed_bucket_reduce(x, wm, ids, mask)
+    np.testing.assert_allclose(np.asarray(num_k), np.asarray(num_r), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(den_k), np.asarray(den_r), rtol=1e-5, atol=1e-5)
+    # folding the mask into wmask is the same reduction
+    num_f, den_f = ref.packed_bucket_reduce(x, wm * mask[:, None], ids)
+    np.testing.assert_allclose(np.asarray(num_r), np.asarray(num_f), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(den_r), np.asarray(den_f), rtol=1e-6)
+
+
+def test_trimmed_mean_masked_ignores_unselected_outlier():
+    from repro.core import aggregators, packing
+
+    tpl = R.make_template(CFG)
+    spec = packing.build_pack_spec(CFG, tpl)
+    state = R.make_state(CFG, _fed("dense"), sgd(), jax.random.key(0))
+    packed = packing.pack(spec, state["params"])
+    packed = packed + jnp.asarray(np.random.default_rng(3).normal(size=packed.shape) * 0.01, packed.dtype)
+    poisoned = packed.at[3].set(1e6)  # Byzantine *unselected* client
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0])
+    ctx = aggregators.AggContext(cfg=CFG, fed=_fed("trimmed_mean", trim_ratio=0.34),
+                                 template=tpl, spec=spec, mesh=None)
+    agg = aggregators.get("trimmed_mean")(ctx)
+    out_clean, _ = agg.aggregate(packed, R.uniform_weights(C), {}, mask)
+    out_pois, _ = agg.aggregate(poisoned, R.uniform_weights(C), {}, mask)
+    np.testing.assert_array_equal(np.asarray(out_clean[0]), np.asarray(out_pois[0]))
+    # and the masked trim still drops a *selected* outlier
+    pois_sel = packed.at[0].set(1e6)
+    out_sel, _ = agg.aggregate(pois_sel, R.uniform_weights(C), {}, mask)
+    assert float(jnp.max(jnp.abs(out_sel[1]))) < 1e3
+
+
+# --------------------------- scheduler fairness -------------------------------
+
+def test_fairness_floor_readmits_within_fairness_rounds():
+    fr = 3
+    s = TaskScheduler(4, SchedulerConfig(max_participants=1, fairness_rounds=fr))
+    s.quality = np.array([10.0, 0.0, 0.0, 0.0])  # client 0 always wins on score
+    starved_round = None
+    for r in range(fr + 1):
+        sel = s.participation(np.zeros(4))
+        if r > 0 and sel["mask"][1] > 0:
+            starved_round = r
+            break
+    assert starved_round is not None and starved_round <= fr, starved_round
+
+
+def test_compact_budget_is_exact_and_fairness_preempts():
+    s = TaskScheduler(6, SchedulerConfig(max_participants=2, fairness_rounds=2))
+    s.quality = np.array([10.0, 9.0, 0.0, 0.0, 0.0, 0.0])
+    seen = set()
+    for _ in range(6):
+        sel = s.participation(np.zeros(6), k_static=2)
+        assert sel["idx"].shape == (2,)
+        assert sel["mask"].sum() == 2
+        assert set(np.nonzero(sel["mask"])[0]) == set(sel["idx"].tolist())
+        np.testing.assert_allclose(sel["weights"].sum(), 1.0, rtol=1e-6)
+        seen.update(sel["idx"].tolist())
+    # the fairness floor preempted the two high-quality clients often enough
+    # that every client participated at least once
+    assert seen == set(range(6))
+
+
+def test_scheduler_select_backcompat():
+    s = TaskScheduler(4, SchedulerConfig(max_participants=2, fairness_rounds=100))
+    for c in range(4):
+        s.report_quality(c, 1.0)
+        s.report_quality(c, 0.5)
+    w = s.select(np.array([0.9, 0.1, 0.8, 0.2]))
+    assert w[1] > 0 and w[3] > 0 and w[0] == 0 and w[2] == 0
+
+
+# ----------------------------- load model -------------------------------------
+
+def test_load_model_deterministic_and_bounded():
+    a = ClientLoadModel(8, seed=3)
+    b = ClientLoadModel(8, seed=3)
+    for _ in range(5):
+        la, lb = a.step(), b.step()
+        np.testing.assert_array_equal(la, lb)
+        assert (la >= 0).all() and (la <= 1).all()
+
+
+def test_load_model_stragglers_run_hot():
+    m = ClientLoadModel(16, seed=0, config=LoadModelConfig(straggler_frac=0.25, spike_prob=0.0))
+    loads = np.mean([m.step() for _ in range(20)], axis=0)
+    strag = np.zeros(16, bool)
+    strag[m.stragglers] = True
+    assert loads[strag].mean() > loads[~strag].mean() + 0.2
+
+
+# --------------------------- server end to end --------------------------------
+
+def test_server_compact_end_to_end():
+    from repro.core.server import FLServer
+    from repro.data.pipeline import fed_batches
+
+    fed = _fed("dense", participation="compact", max_participants=2,
+               local_steps=1)
+    mesh = _mesh()
+    with jax.set_mesh(mesh):
+        server = FLServer(
+            CFG, fed, sgd(lr=0.05),
+            scheduler=TaskScheduler(C, SchedulerConfig(max_participants=2, fairness_rounds=2)),
+            mesh=mesh,
+        )
+        batches = (jax.tree.map(jnp.asarray, b) for b in fed_batches(CFG, fed, batch=2, seq=16))
+        history = server.fit(batches, 4, log=None)
+    assert all(len(r.participants) == 2 for r in history)
+    assert all(np.isfinite(r.loss) for r in history)
+    # quality EMA only ever updated for clients that actually participated
+    seen = set(c for r in history for c in r.participants)
+    untouched = [c for c in range(C) if c not in seen]
+    assert all(np.isnan(server.scheduler.last_loss[c]) for c in untouched)
