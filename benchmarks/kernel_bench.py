@@ -76,6 +76,50 @@ def rows():
     return out
 
 
+def detect_rows(iters: int = 5):
+    """Detection eval kernels: Pallas IoU/NMS (interpret mode on this CPU
+    container — wall time measures the traced jnp body, not real kernel
+    perf) vs the host-side NumPy oracles, plus the O(pairs) Python-loop
+    IoU the seed's eval would have needed, at matched shapes."""
+    from repro.kernels import detect
+
+    rng = np.random.default_rng(5)
+
+    def boxes(*shape):
+        xy = rng.uniform(0, 1, shape + (2,)).astype(np.float32)
+        wh = rng.uniform(0.02, 0.4, shape + (2,)).astype(np.float32)
+        return np.concatenate([xy, wh], -1)
+
+    out = []
+    B, N, M = 4, 256, 256
+    a_np, b_np = boxes(B, N), boxes(B, M)
+    a, b = jnp.asarray(a_np), jnp.asarray(b_np)
+    pairs = B * N * M
+    us = _timeit(lambda x, y: (detect.pairwise_iou(x, y),), a, b, iters=iters)
+    out.append((f"detect/iou_pallas_{B}x{N}x{M}", us, f"pairs={pairs};impl=interpret"))
+    t0 = time.time()
+    for _ in range(iters):
+        ref.pairwise_iou_np(a_np, b_np)
+    out.append((f"detect/iou_numpy_{B}x{N}x{M}", (time.time() - t0) / iters * 1e6, f"pairs={pairs}"))
+    # the replaced per-pair Python loop, one image's worth (N*M scalar calls)
+    t0 = time.time()
+    for i in range(64):
+        for j in range(64):
+            ref.pairwise_iou_np(a_np[0, i : i + 1], b_np[0, j : j + 1])
+    per_pair_us = (time.time() - t0) / (64 * 64) * 1e6
+    out.append((f"detect/iou_python_pairs_{B}x{N}x{M}", per_pair_us * pairs, "extrapolated;launches=pairs"))
+    K = 128
+    nb, ns = boxes(B, K), rng.uniform(0, 1, (B, K)).astype(np.float32)
+    nbj, nsj = jnp.asarray(nb), jnp.asarray(ns)
+    us = _timeit(lambda x, y: (detect.nms(x, y),), nbj, nsj, iters=iters)
+    out.append((f"detect/nms_pallas_{B}x{K}", us, "impl=interpret;fixed_shape"))
+    t0 = time.time()
+    for _ in range(iters):
+        ref.nms_np(nb, ns)
+    out.append((f"detect/nms_numpy_{B}x{K}", (time.time() - t0) / iters * 1e6, "python_loop"))
+    return out
+
+
 def _tree_of(C: int, N: int, n_leaves: int) -> dict:
     """Synthetic client-stacked param tree: n_leaves equal (C, N/n_leaves).
 
@@ -219,7 +263,7 @@ def emit_trajectory(all_rows) -> None:
 
 
 if __name__ == "__main__":
-    all_rows = rows() + agg_rows() + participation_rows()
+    all_rows = rows() + detect_rows() + agg_rows() + participation_rows()
     for name, val, extra in all_rows:
         print(f"{name},{val:.1f},{extra}")
     emit_trajectory(all_rows)

@@ -5,6 +5,7 @@ Prints ``name,value,derived`` CSV. Modules:
   bandwidth_model  — paper SPIC cost claim (50 MB/s video vs <1 MB/s updates)
   convergence      — paper efficiency claim (federated vs centralized)
   kernel_bench     — kernel reference micro-benchmarks
+  kernel_bench_detect — detection IoU/NMS: Pallas vs NumPy oracle
   kernel_bench_agg — packed-vs-tree aggregation transport
   participation    — per-round work vs participation fraction (DESIGN.md §8)
   roofline_table   — per (arch x shape x mesh) roofline from the dry-run
@@ -40,6 +41,7 @@ def main() -> None:
             ("bandwidth_model", bandwidth_model.rows),
             ("convergence", convergence.rows),
             ("kernel_bench", kernel_bench.rows),
+            ("kernel_bench_detect", kernel_bench.detect_rows),
             ("kernel_bench_agg", kernel_bench.agg_rows),
             ("participation", kernel_bench.participation_rows),
             ("roofline_table", roofline_table.rows),

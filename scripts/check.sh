@@ -1,10 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the exact command the roadmap pins, runnable from
-# anywhere, plus the docs check and a benchmark smoke step. Extra args are
-# forwarded to pytest (e.g. scripts/check.sh -k agg).
+# anywhere, plus the docs check, a test-count floor (suites only grow —
+# a collection regression below the PR 2 count fails before pytest runs),
+# and a benchmark smoke step. Extra args are forwarded to pytest (e.g.
+# scripts/check.sh -k agg).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 python scripts/check_docs.py
+TEST_FLOOR=209  # PR 2 collected count; raise, never lower
+collected=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest --collect-only -q 2>/dev/null | grep -c '::' || true)
+if [ "$collected" -lt "$TEST_FLOOR" ]; then
+  echo "FAIL: collected $collected tests < floor $TEST_FLOOR (lost tests?)" >&2
+  exit 1
+fi
+echo "test-count floor OK ($collected >= $TEST_FLOOR)"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke >/dev/null
 echo "benchmark smoke OK"

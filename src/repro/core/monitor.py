@@ -22,7 +22,7 @@ def sparkline(values: Sequence[float], width: int = 32) -> str:
     return "".join(_SPARK[int((v - lo) / span * (len(_SPARK) - 1))] for v in vals)
 
 
-def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: float = 0.0) -> str:
+def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: float = 0.0, eval_history=None) -> str:
     if not history:
         return f"[{task_id}] no rounds yet"
     losses = [r.loss for r in history]
@@ -33,6 +33,14 @@ def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: f
         f"  loss     {losses[0]:.4f} → {losses[-1]:.4f}   {sparkline(losses)}",
         f"  clients  {parts}/{n_clients} participating   round wall {last.seconds:.2f}s",
     ]
+    if eval_history:
+        # per-round detection quality (server.evaluate_round trajectory)
+        maps = [e.map50 for e in eval_history]
+        spread = max(eval_history[-1].per_client_map) - min(eval_history[-1].per_client_map)
+        lines.append(
+            f"  mAP@0.5  {maps[0]:.3f} → {maps[-1]:.3f}   {sparkline(maps)}"
+            f"   client spread {spread:.3f}"
+        )
     if upload_bytes_per_round:
         lines.append(
             f"  upload   {upload_bytes_per_round / 1e6:.2f} MB/client/round "
@@ -41,14 +49,18 @@ def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: f
     return "\n".join(lines)
 
 
-def export_json(task_id: str, history, n_clients: int) -> str:
-    return json.dumps(
-        {
-            "task": task_id,
-            "rounds": [
-                {"round": r.round_idx, "loss": r.loss, "participants": sum(1 for w in r.weights if w > 0), "seconds": r.seconds}
-                for r in history
-            ],
-            "n_clients": n_clients,
-        }
-    )
+def export_json(task_id: str, history, n_clients: int, eval_history=None) -> str:
+    out = {
+        "task": task_id,
+        "rounds": [
+            {"round": r.round_idx, "loss": r.loss, "participants": sum(1 for w in r.weights if w > 0), "seconds": r.seconds}
+            for r in history
+        ],
+        "n_clients": n_clients,
+    }
+    if eval_history:
+        out["eval"] = [
+            {"round": e.round_idx, "map50": e.map50, "per_client_map": e.per_client_map}
+            for e in eval_history
+        ]
+    return json.dumps(out)

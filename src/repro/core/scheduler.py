@@ -36,8 +36,9 @@ class TaskScheduler:
     def __init__(self, n_clients: int, config: SchedulerConfig | None = None):
         self.cfg = config or SchedulerConfig()
         self.n = n_clients
-        self.quality = np.zeros(n_clients)  # EMA of loss improvement
+        self.quality = np.zeros(n_clients)  # EMA of loss/eval improvement
         self.last_loss = np.full(n_clients, np.nan)
+        self.last_eval = np.full(n_clients, np.nan)
         self.idle_rounds = np.zeros(n_clients, int)
 
     def report_quality(self, client: int, loss: float) -> None:
@@ -46,6 +47,19 @@ class TaskScheduler:
         e = self.cfg.quality_ema
         self.quality[client] = e * self.quality[client] + (1 - e) * improvement
         self.last_loss[client] = loss
+
+    def report_eval(self, client: int, score: float) -> None:
+        """Task-metric quality signal, higher-is-better (e.g. the client's
+        mAP@0.5 from `server.evaluate_round`). Mirrors report_quality: the
+        quality EMA tracks the *improvement* of the score, so a client
+        whose detection quality is climbing outranks one that plateaued —
+        loss- and eval-derived signals share one EMA and are comparable.
+        """
+        prev = self.last_eval[client]
+        improvement = 0.0 if np.isnan(prev) else score - prev
+        e = self.cfg.quality_ema
+        self.quality[client] = e * self.quality[client] + (1 - e) * improvement
+        self.last_eval[client] = score
 
     def participation(self, loads: np.ndarray, k_static: int | None = None) -> dict[str, np.ndarray]:
         """One round of selection. loads: (n,) in [0,1] from the Explorer.

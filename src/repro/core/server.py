@@ -45,6 +45,15 @@ class RoundRecord:
     loads: list[float] = dataclasses.field(default_factory=list)
 
 
+@dataclasses.dataclass
+class EvalRecord:
+    """One `evaluate_round` outcome: global + per-client mAP@0.5."""
+
+    round_idx: int
+    map50: float
+    per_client_map: list[float]
+
+
 class FLServer:
     def __init__(
         self,
@@ -78,6 +87,8 @@ class FLServer:
         self.state = rounds.make_state(cfg, fed, optimizer, jax.random.key(seed), dtype)
         self._fed_round = jax.jit(rounds.build_fed_round(cfg, fed, optimizer, mesh, rules))
         self.history: list[RoundRecord] = []
+        self.eval_history: list[EvalRecord] = []
+        self._evaluator = None  # (max_detections, jitted fn), built lazily
 
     @property
     def aggregation_modes(self) -> tuple[str, ...]:
@@ -113,6 +124,40 @@ class FLServer:
         self.history.append(rec)
         if self.store and self.checkpoint_every and rec.round_idx % self.checkpoint_every == 0:
             self.store.put_model(self.task_id, rec.round_idx, self.global_params(), {"loss": loss})
+        return rec
+
+    def evaluate_round(
+        self,
+        eval_batch: PyTree,
+        *,
+        max_detections: int = 64,
+        feed_scheduler: bool = True,
+    ) -> EvalRecord:
+        """Detection-quality checkpoint: global model vs each client's eval
+        slice (DESIGN.md §10).
+
+        eval_batch: {"images" (C, B, H, W, 3), "gt_boxes"/"gt_cls"/
+        "gt_valid" (C, B, G, ...)} — e.g. `data.pipeline.detection_suite`'s
+        holdout. One jitted call returns the pooled global mAP@0.5 and the
+        per-client vector; the latter feeds the Task Scheduler's quality
+        EMA (`report_eval`), so selection tracks *detection* quality, not
+        just training loss — the signal the paper's load-balancing
+        scheduler is supposed to maximize.
+        """
+        from repro.core import detection  # lazy: only detection tasks pay the import
+
+        if self._evaluator is None or self._evaluator[0] != max_detections:
+            self._evaluator = (
+                max_detections,
+                detection.build_evaluator(self.cfg, max_detections=max_detections),
+            )
+        out = self._evaluator[1](self.global_params(), jax.tree.map(jnp.asarray, eval_batch))
+        per_client = [float(x) for x in np.asarray(out["per_client_map"], np.float64)]
+        if feed_scheduler:
+            for c, m in enumerate(per_client):
+                self.scheduler.report_eval(c, m)
+        rec = EvalRecord(max(len(self.history) - 1, 0), float(out["map"]), per_client)
+        self.eval_history.append(rec)
         return rec
 
     def fit(self, batches: Iterator[PyTree], n_rounds: int, log: Callable[[str], None] = lambda m: print(m, flush=True)) -> list[RoundRecord]:

@@ -114,6 +114,28 @@ def make_scenario(
     raise ValueError(f"unknown partition scenario {name!r}; known: {SCENARIOS}")
 
 
+def scale_skew_stats(parts: list[np.ndarray], gt_boxes: np.ndarray, gt_valid: np.ndarray) -> dict:
+    """Box-scale skew of a partitioned detection scene pool.
+
+    The detection suite ties box scale to the dominant class
+    (`data.synthetic.detection_scene_pool`), so a label-skewed
+    `make_scenario` split also skews object sizes per client — this is the
+    measurement. gt_boxes (P, G, 4) center-format, gt_valid (P, G) 0/1.
+    Returns per-client mean sqrt-box-area plus a spread ratio (max/min of
+    the client means; 1.0 == no scale skew).
+    """
+    scale = np.sqrt(np.maximum(gt_boxes[..., 2] * gt_boxes[..., 3], 0.0))  # (P, G)
+    means = []
+    for p in parts:
+        v = gt_valid[p]
+        means.append(float((scale[p] * v).sum() / max(v.sum(), 1.0)))
+    means_arr = np.asarray(means)
+    return {
+        "mean_scale": means_arr,
+        "spread": float(means_arr.max() / max(means_arr.min(), 1e-9)),
+    }
+
+
 def partition_stats(parts: list[np.ndarray], labels: np.ndarray) -> dict:
     n_classes = int(labels.max()) + 1
     hist = np.stack([np.bincount(labels[p], minlength=n_classes) for p in parts])

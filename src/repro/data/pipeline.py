@@ -14,7 +14,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.rounds import FedConfig
 from repro.data import darknet, partition, synthetic
-from repro.models.yolov3 import ANCHORS
+from repro.models.yolov3 import ANCHORS, grid_sizes
 
 
 def partitioned_token_batches(
@@ -53,13 +53,106 @@ def partitioned_token_batches(
         yield {"tokens": seqs[idx].astype(np.int32)}  # (C, E, b, S)
 
 
+def _scene_targets(pool: dict, idx: np.ndarray, grids: list[int], cfg: ArchConfig):
+    """Sampled scene indices (C, E, b) -> (images, per-scale grid targets)."""
+    C, E, b = idx.shape
+    ims = pool["images"][idx]  # (C, E, b, S, S, 3)
+    acc = [
+        [darknet.build_targets([pool["bboxes"][i] for i in idx[c, e]], grids, cfg.n_heads, cfg.vocab_size, ANCHORS) for e in range(E)]
+        for c in range(C)
+    ]
+    targets = [
+        {
+            k: np.stack([np.stack([acc[c][e][s][k] for e in range(E)]) for c in range(C)])
+            for k in ("obj", "box", "cls")
+        }
+        for s in range(len(grids))
+    ]
+    return ims, targets
+
+
+def detection_suite(
+    cfg: ArchConfig,
+    fed: FedConfig,
+    batch: int,
+    img_size: int = 64,
+    scenario: str = "dirichlet",
+    seed: int = 0,
+    *,
+    alpha: float = 0.5,
+    pool_scenes: int = 96,
+    eval_per_client: int = 4,
+    max_boxes: int = 3,
+):
+    """Partitioned detection data: (train_batches, eval_batch, stats).
+
+    A pool of labeled synthetic scenes (`detection_scene_pool`: dominant
+    class + class-tied box scale) is split across clients by the SAME
+    `make_scenario` suite the token path uses, so detection gets identical
+    non-IID treatment (label skew also skews box scale). ``train_batches``
+    yields the {"images", "targets"} structure `core.rounds` consumes;
+    ``eval_batch`` is a fixed per-client holdout in the padded-array form
+    `core.detection.build_evaluator` takes ((C, Be, ...) leaves), drawn
+    once so per-round mAP curves are comparable across rounds.
+    """
+    C, E = fed.n_clients, fed.local_steps
+    pool = synthetic.detection_scene_pool(
+        pool_scenes, img_size, cfg.vocab_size, np.random.default_rng(seed), max_boxes=max_boxes
+    )
+    parts = partition.make_scenario(
+        scenario, pool["labels"], C, np.random.default_rng(seed + 1), alpha=alpha
+    )
+    grids = grid_sizes(cfg, img_size)
+    eval_rng = np.random.default_rng(seed + 2)
+    # a real holdout: eval scenes leave the client's training pool. Only a
+    # pathologically small partition (<= eval_per_client scenes) keeps its
+    # pool intact and evals with replacement — leakage beats an empty pool.
+    eval_rows, train_parts = [], []
+    for c in range(C):
+        p = parts[c]
+        if len(p) > eval_per_client:
+            sel = eval_rng.choice(p, size=eval_per_client, replace=False)
+            train_parts.append(np.setdiff1d(p, sel))
+        else:
+            sel = eval_rng.choice(p, size=eval_per_client, replace=True)
+            train_parts.append(p)
+        eval_rows.append(sel)
+    eval_idx = np.stack(eval_rows)
+    eval_batch = {
+        "images": pool["images"][eval_idx],
+        "gt_boxes": pool["gt_boxes"][eval_idx],
+        "gt_cls": pool["gt_cls"][eval_idx],
+        "gt_valid": pool["gt_valid"][eval_idx],
+    }
+    stats = {
+        "parts": parts,
+        "label": partition.partition_stats(parts, pool["labels"]),
+        "scale": partition.scale_skew_stats(parts, pool["gt_boxes"], pool["gt_valid"]),
+    }
+
+    def train_batches():
+        draw = np.random.default_rng(seed + 3)
+        while True:
+            idx = np.stack([draw.choice(train_parts[c], size=(E, batch)) for c in range(C)])
+            ims, targets = _scene_targets(pool, idx, grids, cfg)
+            yield {"images": ims, "targets": targets}
+
+    return train_batches(), eval_batch, stats
+
+
 def fed_batches(cfg: ArchConfig, fed: FedConfig, batch: int, seq: int, seed: int = 0, img_size: int = 96, partition_name: str = "stream", alpha: float = 0.5):
     C, E = fed.n_clients, fed.local_steps
     if partition_name != "stream":
+        if cfg.family == "yolo":
+            gen, _, _ = detection_suite(
+                cfg, fed, batch, img_size, partition_name, seed, alpha=alpha
+            )
+            yield from gen
+            return
         if cfg.modality != "text":
             raise ValueError(
-                f"partition scenarios only apply to text archs (got modality="
-                f"{cfg.modality!r}); use the default 'stream'"
+                f"partition scenarios only apply to text and yolo archs (got "
+                f"modality={cfg.modality!r}); use the default 'stream'"
             )
         yield from partitioned_token_batches(
             cfg.vocab_size, C, E, batch, seq, partition_name, seed, alpha=alpha
@@ -75,7 +168,7 @@ def fed_batches(cfg: ArchConfig, fed: FedConfig, batch: int, seq: int, seed: int
             yield {"tokens": tb["tokens"], "images": imgs}
     elif cfg.family == "yolo":
         rng = np.random.default_rng(seed)
-        grids = [img_size // 8, img_size // 16, img_size // 32]
+        grids = grid_sizes(cfg, img_size)
         while True:
             ims = np.empty((C, E, batch, img_size, img_size, 3), np.float32)
             tgts = None

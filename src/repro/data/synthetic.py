@@ -59,20 +59,35 @@ def audio_batches(d_model: int, vocab: int, n_clients: int, local_steps: int, ba
         yield {"frames": frames.astype(np.float32), "labels": labels.astype(np.int32), "mask": mask}
 
 
-def scene_images(rng: np.random.Generator, batch: int, size: int, n_classes: int, max_boxes: int = 3):
+def scene_images(
+    rng: np.random.Generator,
+    batch: int,
+    size: int,
+    n_classes: int,
+    max_boxes: int = 3,
+    class_probs=None,
+    scale_range: tuple[float, float] = (0.15, 0.5),
+):
     """Procedural detection scenes: bright rectangles = objects.
 
     Returns (images (B,size,size,3) f32, boxes list[list[BBox]]).
+    ``class_probs`` (n_classes,) skews the object-class distribution and
+    ``scale_range`` the box sizes — the per-client non-IID knobs the
+    detection scenario suite turns (label skew + box-scale skew).
     """
     imgs = rng.normal(0.0, 0.05, size=(batch, size, size, 3)).astype(np.float32)
+    lo, hi = scale_range
     all_boxes: list[list[BBox]] = []
     for b in range(batch):
         boxes = []
         for _ in range(int(rng.integers(1, max_boxes + 1))):
-            w, h = rng.uniform(0.15, 0.5, 2)
+            w, h = rng.uniform(lo, hi, 2)
             x = rng.uniform(w / 2, 1 - w / 2)
             y = rng.uniform(h / 2, 1 - h / 2)
-            label = int(rng.integers(0, n_classes))
+            if class_probs is None:
+                label = int(rng.integers(0, n_classes))
+            else:
+                label = int(rng.choice(n_classes, p=class_probs))
             x0, y0 = int((x - w / 2) * size), int((y - h / 2) * size)
             x1, y1 = int((x + w / 2) * size), int((y + h / 2) * size)
             color = np.zeros(3, np.float32)
@@ -81,3 +96,68 @@ def scene_images(rng: np.random.Generator, batch: int, size: int, n_classes: int
             boxes.append(BBox(label, x, y, w, h))
         all_boxes.append(boxes)
     return imgs, all_boxes
+
+
+def boxes_to_arrays(all_boxes: list[list[BBox]], max_boxes: int):
+    """Pad BBox lists to the fixed-shape GT arrays the jitted evaluator
+    takes: (B, G, 4) center-format f32, (B, G) int32 labels, (B, G) 0/1
+    validity. Boxes beyond ``max_boxes`` are dropped (shape stability wins
+    over the tail of a synthetic scene)."""
+    B = len(all_boxes)
+    boxes = np.zeros((B, max_boxes, 4), np.float32)
+    cls = np.zeros((B, max_boxes), np.int32)
+    valid = np.zeros((B, max_boxes), np.float32)
+    for b, bs in enumerate(all_boxes):
+        for g, bb in enumerate(bs[:max_boxes]):
+            boxes[b, g] = [bb.x, bb.y, bb.w, bb.h]
+            cls[b, g] = bb.label
+            valid[b, g] = 1.0
+    return boxes, cls, valid
+
+
+def detection_scene_pool(
+    n_scenes: int,
+    size: int,
+    n_classes: int,
+    rng: np.random.Generator,
+    *,
+    max_boxes: int = 3,
+    dominance: float = 0.8,
+    scale_spread: float = 0.25,
+):
+    """Labeled scene pool for `data.partition.make_scenario` splits.
+
+    Scene i has a *dominant class* (its partition label): objects draw
+    that class with probability ``dominance`` and a box-scale band tied to
+    it (class c's boxes live around ``0.12 + scale_spread * c / (K-1)``).
+    Partitioning the pool by label therefore induces BOTH class skew and
+    box-scale skew per client — the detection analogue of the token
+    path's dirichlet/shards/quantity scenarios.
+
+    Returns {"images" (P,S,S,3), "bboxes" list[list[BBox]], "gt_boxes"
+    (P,G,4), "gt_cls" (P,G), "gt_valid" (P,G), "labels" (P,)}.
+    """
+    images = np.empty((n_scenes, size, size, 3), np.float32)
+    bboxes: list[list[BBox]] = []
+    labels = np.empty(n_scenes, np.int64)
+    for i in range(n_scenes):
+        dom = int(rng.integers(0, n_classes))
+        probs = np.full(n_classes, (1.0 - dominance) / max(n_classes - 1, 1))
+        probs[dom] = dominance if n_classes > 1 else 1.0
+        base = 0.12 + scale_spread * dom / max(n_classes - 1, 1)
+        im, bs = scene_images(
+            rng, 1, size, n_classes, max_boxes,
+            class_probs=probs, scale_range=(base, base + 0.2),
+        )
+        images[i] = im[0]
+        bboxes.append(bs[0])
+        labels[i] = dom
+    gt_boxes, gt_cls, gt_valid = boxes_to_arrays(bboxes, max_boxes)
+    return {
+        "images": images,
+        "bboxes": bboxes,
+        "gt_boxes": gt_boxes,
+        "gt_cls": gt_cls,
+        "gt_valid": gt_valid,
+        "labels": labels,
+    }

@@ -12,6 +12,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import detect as _detect
 from repro.kernels import fedavg as _fedavg
 from repro.kernels import flash_attention as _flash
 from repro.kernels import pack as _pack
@@ -22,6 +23,8 @@ from repro.kernels import ssd_scan as _ssd
 PyTree = Any
 
 fedavg_masked_mean = _fedavg.fedavg_masked_mean
+pairwise_iou = _detect.pairwise_iou
+nms = _detect.nms
 packed_bucket_reduce = _pack.packed_bucket_reduce
 quantize_rows = _pack.quantize_rows
 dequantize_rows = _pack.dequantize_rows

@@ -1,5 +1,14 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+The detection oracles (`pairwise_iou_np`, `nms_np`) are pure NumPy and run
+entirely host-side: every op is a plain IEEE add/sub/mul/div/min/max in
+float32, mirroring the kernel bodies in `kernels.detect` op for op, so the
+golden tests pin the Pallas outputs against them *bit-for-bit* in
+interpret mode — not merely allclose.
+"""
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +56,81 @@ def quantize_blocks(x: jax.Array, block: int) -> tuple[jax.Array, jax.Array]:
 def dequantize_blocks(q: jax.Array, scales: jax.Array, block: int, dtype=jnp.float32) -> jax.Array:
     qb = q.reshape(-1, block).astype(jnp.float32)
     return (qb * scales[:, None]).reshape(-1).astype(dtype)
+
+
+_IOU_EPS = np.float32(1e-9)
+
+
+def _corners_np(boxes: np.ndarray):
+    """(..., 4) center-format float32 -> x1, y1, x2, y2, area (all f32)."""
+    boxes = np.asarray(boxes, np.float32)
+    x1 = boxes[..., 0] - boxes[..., 2] * np.float32(0.5)
+    y1 = boxes[..., 1] - boxes[..., 3] * np.float32(0.5)
+    x2 = boxes[..., 0] + boxes[..., 2] * np.float32(0.5)
+    y2 = boxes[..., 1] + boxes[..., 3] * np.float32(0.5)
+    area = np.maximum((x2 - x1) * (y2 - y1), np.float32(0.0))
+    return x1, y1, x2, y2, area
+
+
+def pairwise_iou_np(boxes_a: np.ndarray, boxes_b: np.ndarray, giou: bool = False) -> np.ndarray:
+    """NumPy oracle for kernels.detect.pairwise_iou (bit-for-bit).
+
+    boxes_a (B?, N, 4), boxes_b (B?, M, 4) center-format -> (B?, N, M) f32.
+    Zero-area boxes score IoU 0 against everything (eps floor, no NaN).
+    """
+    ax1, ay1, ax2, ay2, aa = _corners_np(boxes_a)
+    bx1, by1, bx2, by2, ba = _corners_np(boxes_b)
+    ix = np.maximum(np.minimum(ax2[..., :, None], bx2[..., None, :]) - np.maximum(ax1[..., :, None], bx1[..., None, :]), np.float32(0.0))
+    iy = np.maximum(np.minimum(ay2[..., :, None], by2[..., None, :]) - np.maximum(ay1[..., :, None], by1[..., None, :]), np.float32(0.0))
+    inter = np.maximum(ix * iy, np.float32(0.0))
+    union = aa[..., :, None] + ba[..., None, :] - inter
+    iou = inter / np.maximum(union, _IOU_EPS)
+    if not giou:
+        return iou
+    cx = np.maximum(ax2[..., :, None], bx2[..., None, :]) - np.minimum(ax1[..., :, None], bx1[..., None, :])
+    cy = np.maximum(ay2[..., :, None], by2[..., None, :]) - np.minimum(ay1[..., :, None], by1[..., None, :])
+    carea = np.maximum(cx * cy, np.float32(0.0))
+    return iou - (carea - union) / np.maximum(carea, _IOU_EPS)
+
+
+def nms_np(
+    boxes: np.ndarray,
+    scores: np.ndarray,
+    iou_thresh: float = 0.5,
+    score_thresh: float = 0.0,
+    max_keep: int = 0,
+) -> np.ndarray:
+    """NumPy oracle for kernels.detect.nms (bit-for-bit).
+
+    Same contract: stable descending-score sort (ties keep original order),
+    sequential suppression over the sorted list, 0/1 keep mask returned in
+    the ORIGINAL box order; ``max_keep > 0`` caps survivors to the top
+    max_keep by score.
+    """
+    boxes = np.asarray(boxes, np.float32)
+    scores = np.asarray(scores, np.float32)
+    squeeze = boxes.ndim == 2
+    if squeeze:
+        boxes, scores = boxes[None], scores[None]
+    B, N = scores.shape
+    keep = np.zeros((B, N), np.float32)
+    for b in range(B):
+        order = np.argsort(-scores[b], kind="stable")
+        bs = boxes[b][order]
+        x1, y1, x2, y2, area = _corners_np(bs)
+        k = (scores[b][order] > np.float32(score_thresh)).astype(np.float32)
+        for i in range(N):
+            if k[i] <= 0:
+                continue
+            ix = np.maximum(np.minimum(x2[i], x2) - np.maximum(x1[i], x1), np.float32(0.0))
+            iy = np.maximum(np.minimum(y2[i], y2) - np.maximum(y1[i], y1), np.float32(0.0))
+            inter = np.maximum(ix * iy, np.float32(0.0))
+            iou = inter / np.maximum(area[i] + area - inter, _IOU_EPS)
+            k[(np.arange(N) > i) & (iou > np.float32(iou_thresh))] = 0.0
+        if max_keep:
+            k = k * (np.cumsum(k) <= max_keep).astype(np.float32)
+        keep[b][order] = k
+    return keep[0] if squeeze else keep
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True, window: int = 0) -> jax.Array:

@@ -4,6 +4,13 @@ CPU-runnable at reduced size; the production-mesh serve plans (32k decode,
 500k long-context) are exercised via launch.dryrun.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --new-tokens 16
+  PYTHONPATH=src python -m repro.launch.serve --arch fedyolov3 --store /tmp/cos
+
+yolo-family archs serve *detections*: forward + decode + the same Pallas
+NMS/IoU path the evaluator uses (core.detection.decode_predictions), i.e.
+the paper's "model dispatch to visual serving" leg. --store/--task-id
+restore the federated global model from the COS object store that
+`launch.train` / `examples/fed_yolo.py` checkpointed into.
 """
 from __future__ import annotations
 
@@ -16,10 +23,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import ObjectStore
 from repro.configs import get_arch
 from repro.models import params as P
 from repro.models import serving as S
 from repro.models import transformer as T
+from repro.models import yolov3
 
 
 def generate(cfg, params, prompts: jax.Array, new_tokens: int, images=None, temperature: float = 0.0, seed: int = 0):
@@ -45,6 +54,43 @@ def generate(cfg, params, prompts: jax.Array, new_tokens: int, images=None, temp
     return jnp.concatenate(out, axis=1)
 
 
+def serve_detection(cfg, args) -> None:
+    """Detection serving: images -> decode + Pallas NMS -> box list JSON."""
+    from repro.core import detection
+    from repro.data import synthetic
+
+    params = P.init_params(yolov3.template(cfg), jax.random.key(0), jnp.float32)
+    if args.store:
+        store = ObjectStore(args.store)
+        params = store.restore_into(args.task_id, params)
+    rng = np.random.default_rng(7)
+    imgs, _ = synthetic.scene_images(rng, args.batch, args.img_size, cfg.vocab_size)
+    t0 = time.time()
+    pred = detection.decode_predictions(
+        cfg, params, jnp.asarray(imgs), max_detections=args.max_detections
+    )
+    jax.block_until_ready(pred)
+    dt = time.time() - t0
+    valid, cls, scores, boxes = (np.asarray(pred[k]) for k in ("valid", "cls", "scores", "boxes"))
+    detections = [
+        [
+            {
+                "label": int(cls[b, k]),
+                "score": round(float(scores[b, k]), 4),
+                "box": [round(float(v), 4) for v in boxes[b, k]],
+            }
+            for k in np.nonzero(valid[b])[0]
+        ]
+        for b in range(args.batch)
+    ]
+    print(json.dumps({
+        "arch": cfg.name,
+        "restored": bool(args.store),
+        "detections": detections,
+        "images_per_s": round(args.batch / dt, 2),
+    }))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -52,9 +98,20 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--img-size", type=int, default=64, help="yolo: served image size")
+    ap.add_argument("--max-detections", type=int, default=16, help="yolo: NMS output slots")
+    ap.add_argument("--store", default="", help="COS dir to restore the federated model from")
+    ap.add_argument("--task-id", default="fedyolo", help="COS task id (with --store)")
+    ap.add_argument("--full-size", action="store_true",
+                    help="use the full config (must match how the stored model was trained)")
     args = ap.parse_args()
 
-    cfg = get_arch(args.arch).reduced()
+    cfg = get_arch(args.arch)
+    if not args.full_size:
+        cfg = cfg.reduced()
+    if cfg.family == "yolo":
+        serve_detection(cfg, args)
+        return
     if not cfg.has_decode:
         raise SystemExit(f"{args.arch} is encoder-only: no decode step (DESIGN.md)")
     params = P.init_params(T.template(cfg), jax.random.key(0), jnp.float32)

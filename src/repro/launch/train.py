@@ -9,7 +9,13 @@ or emits the production-mesh launch configuration with --print-plan.
       --agg quant8 --clients 8 --local-steps 2
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --rounds 20 \
       --participation compact --max-participants 2 --partition dirichlet
+  PYTHONPATH=src python -m repro.launch.train --task detection --eval-every 1
   PYTHONPATH=src python -m repro.launch.train --arch grok-1-314b --print-plan
+
+--task detection runs the paper's actual workload: federated YOLOv3 over a
+partitioned synthetic scene pool, with per-round global + per-client
+mAP@0.5 from `server.evaluate_round` (--eval-every N) feeding the Task
+Scheduler's quality EMA (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -23,10 +29,11 @@ from repro.checkpoint import ObjectStore
 from repro.configs import get_arch
 from repro.core import aggregators
 from repro.core.rounds import FedConfig
+from repro.core import monitor
 from repro.core.scheduler import SchedulerConfig, TaskScheduler
 from repro.core.server import FLServer
 from repro.data import partition
-from repro.data.pipeline import fed_batches
+from repro.data.pipeline import detection_suite, fed_batches
 from repro.launch import specs
 from repro.optim import adamw, sgd
 
@@ -44,7 +51,15 @@ def print_plan(arch_name: str) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="architecture name; optional with --task detection (defaults to fedyolov3)")
+    ap.add_argument("--task", default="auto", choices=["auto", "lm", "detection"],
+                    help="workload: lm (token batches) or detection (partitioned scene "
+                    "pool + per-round mAP); auto picks detection for yolo-family archs")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="detection: run server.evaluate_round every N rounds "
+                    "(global + per-client mAP@0.5 into the scheduler quality EMA)")
+    ap.add_argument("--img-size", type=int, default=64, help="detection scene size")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--local-steps", type=int, default=1)
@@ -75,11 +90,20 @@ def main() -> None:
     ap.add_argument("--print-plan", action="store_true")
     args = ap.parse_args()
 
+    if args.task == "detection" and args.arch is None:
+        args.arch = "fedyolov3"  # the paper's own model
+    if args.arch is None:
+        ap.error("--arch is required (or pass --task detection)")
     if args.print_plan:
         print_plan(args.arch)
         return
 
     cfg = get_arch(args.arch)
+    task = args.task
+    if task == "auto":
+        task = "detection" if cfg.family == "yolo" else "lm"
+    if task == "detection" and cfg.family != "yolo":
+        ap.error(f"--task detection needs a yolo-family arch (got {args.arch})")
     if not args.full_size:
         cfg = cfg.reduced()
     budget = args.max_participants or max(2, args.clients // 2)
@@ -111,19 +135,46 @@ def main() -> None:
             checkpoint_every=5 if store else 0,
             task_id=args.arch,
         )
-        batches = (
-            jax.tree.map(jnp.asarray, b)
-            for b in fed_batches(cfg, fed, batch=args.batch, seq=args.seq,
-                                 partition_name=args.partition, alpha=args.alpha)
-        )
-        history = server.fit(batches, args.rounds)
+        eval_batch = None
+        if task == "detection":
+            # "stream" has no meaning for the pooled detection suite: the
+            # IID split is the control scenario
+            scenario = "iid" if args.partition == "stream" else args.partition
+            gen, eval_batch, _ = detection_suite(
+                cfg, fed, batch=args.batch, img_size=args.img_size,
+                scenario=scenario, alpha=args.alpha,
+            )
+            batches = (jax.tree.map(jnp.asarray, b) for b in gen)
+        else:
+            batches = (
+                jax.tree.map(jnp.asarray, b)
+                for b in fed_batches(cfg, fed, batch=args.batch, seq=args.seq,
+                                     partition_name=args.partition, alpha=args.alpha)
+            )
+        if eval_batch is not None and args.eval_every:
+            for r in range(args.rounds):
+                rec = server.run_round(next(batches))
+                if r % args.eval_every == 0 or r == args.rounds - 1:
+                    ev = server.evaluate_round(eval_batch)
+                    per = " ".join(f"{m:.3f}" for m in ev.per_client_map)
+                    print(f"round {rec.round_idx:4d}  loss {rec.loss:.4f}  "
+                          f"mAP@0.5 {ev.map50:.3f}  per-client [{per}]", flush=True)
+            history = server.history
+        else:
+            history = server.fit(batches, args.rounds)
     mean_participants = sum(len(r.participants) for r in history) / len(history)
-    print(json.dumps({
+    summary = {
         "final_loss": history[-1].loss,
         "rounds": len(history),
         "participation": args.participation,
         "mean_participants": mean_participants,
-    }))
+    }
+    if server.eval_history:
+        print(monitor.render_task(args.arch, history, fed.n_clients,
+                                  eval_history=server.eval_history))
+        summary["final_map"] = server.eval_history[-1].map50
+        summary["per_client_map"] = server.eval_history[-1].per_client_map
+    print(json.dumps(summary))
 
 
 if __name__ == "__main__":

@@ -58,6 +58,19 @@ def template(cfg):
     return t
 
 
+def grid_sizes(cfg, img_size: int) -> list[int]:
+    """Detection-head grid sizes for an image size, largest scale first.
+
+    Each darknet stage halves the resolution and heads sit on the last
+    three stages, so with n stages the strides are 2^(n-2), 2^(n-1), 2^n
+    (the classic 8/16/32 at the full 5-stage config). Target builders must
+    use this rather than hardcoding //8 //16 //32, or reduced configs
+    (fewer stages) silently mis-shape the loss targets.
+    """
+    n = max(cfg.n_layers, 3)  # template forces >= 3 stages
+    return [img_size // (1 << (n - 2)), img_size // (1 << (n - 1)), img_size // (1 << n)]
+
+
 def _conv(x, w, stride=1):
     return jax.lax.conv_general_dilated(
         x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
@@ -95,16 +108,37 @@ def decode_boxes(raw, anchors):
 
 
 def iou(box_a, box_b):
-    """Element-wise IOU of (x,y,w,h) center-format boxes."""
-    ax1, ay1 = box_a[..., 0] - box_a[..., 2] / 2, box_a[..., 1] - box_a[..., 3] / 2
-    ax2, ay2 = box_a[..., 0] + box_a[..., 2] / 2, box_a[..., 1] + box_a[..., 3] / 2
-    bx1, by1 = box_b[..., 0] - box_b[..., 2] / 2, box_b[..., 1] - box_b[..., 3] / 2
-    bx2, by2 = box_b[..., 0] + box_b[..., 2] / 2, box_b[..., 1] + box_b[..., 3] / 2
-    ix = jnp.maximum(jnp.minimum(ax2, bx2) - jnp.maximum(ax1, bx1), 0)
-    iy = jnp.maximum(jnp.minimum(ay2, by2) - jnp.maximum(ay1, by1), 0)
-    inter = ix * iy
-    union = (ax2 - ax1) * (ay2 - ay1) + (bx2 - bx1) * (by2 - by1) - inter
+    """Broadcasting IOU of (..., 4) center-format (x, y, w, h) boxes.
+
+    Leading dims broadcast like any jnp op — same-shape arrays give the
+    element-wise IOU the Eq. 4 loss needs; (..., N, 1, 4) against
+    (..., 1, M, 4) gives the (..., N, M) pairwise matrix (see
+    :func:`pairwise_iou`). Zero/negative-area degenerate boxes score 0
+    against everything. This is the one IOU definition in the repo: the
+    loss, the eval engine (core.detection), and the Pallas kernels
+    (kernels.detect / kernels.ref) all share its corner math.
+    """
+    ax1, ay1 = box_a[..., 0] - box_a[..., 2] * 0.5, box_a[..., 1] - box_a[..., 3] * 0.5
+    ax2, ay2 = box_a[..., 0] + box_a[..., 2] * 0.5, box_a[..., 1] + box_a[..., 3] * 0.5
+    bx1, by1 = box_b[..., 0] - box_b[..., 2] * 0.5, box_b[..., 1] - box_b[..., 3] * 0.5
+    bx2, by2 = box_b[..., 0] + box_b[..., 2] * 0.5, box_b[..., 1] + box_b[..., 3] * 0.5
+    ix = jnp.maximum(jnp.minimum(ax2, bx2) - jnp.maximum(ax1, bx1), 0.0)
+    iy = jnp.maximum(jnp.minimum(ay2, by2) - jnp.maximum(ay1, by1), 0.0)
+    inter = jnp.maximum(ix * iy, 0.0)
+    area_a = jnp.maximum((ax2 - ax1) * (ay2 - ay1), 0.0)
+    area_b = jnp.maximum((bx2 - bx1) * (by2 - by1), 0.0)
+    union = area_a + area_b - inter
     return inter / jnp.maximum(union, 1e-9)
+
+
+def pairwise_iou(boxes_a, boxes_b):
+    """(..., N, 4) x (..., M, 4) -> (..., N, M) via the shared :func:`iou`.
+
+    The jnp formulation of kernels.detect.pairwise_iou — small-shape
+    call sites (loss-side anchor matching, tests) that don't warrant a
+    kernel launch use this one.
+    """
+    return iou(boxes_a[..., :, None, :], boxes_b[..., None, :, :])
 
 
 def yolo_loss(params, batch, cfg):

@@ -1,11 +1,13 @@
 """Packed aggregation engine: registry surface, packed-vs-legacy numerical
-equivalence on the four seed modes, Pallas packed kernels vs oracles, and
+equivalence on the four seed modes, Pallas packed kernels vs oracles,
 convergence smoke tests for the new modes (fedavgm / fedadam /
-trimmed_mean)."""
+trimmed_mean), and hypothesis properties of the PR 2 participation-mask
+operand (all-ones == None; masked-out rows can hold anything)."""
 import dataclasses
 
 import numpy as np
 import pytest
+from _hyp import given, settings, st
 
 import jax
 import jax.numpy as jnp
@@ -215,6 +217,91 @@ def test_agg_impl_pallas_matches_ref_in_round(mode, tol):
             state, _ = fr(state, {"tokens": toks}, R.uniform_weights(4))
         outs[impl] = state["params"]
     assert _maxdiff(outs["ref"], outs["pallas"]) < tol
+
+
+# -------------- participation-mask properties (all aggregators) -------------
+
+# tiny synthetic spec: the mask contract is shape-independent, so the
+# property sweep runs on a 4-bucket 64-element buffer instead of a model
+_PROP_C, _PROP_N, _PROP_B = 4, 64, 4
+_PROP_SPEC = packing.PackSpec(
+    _PROP_N, _PROP_B,
+    tuple(
+        packing.LeafSlot(f"leaf{i}", (_PROP_N // _PROP_B,), i * (_PROP_N // _PROP_B), _PROP_N // _PROP_B, i, 1)
+        for i in range(_PROP_B)
+    ),
+)
+_PROP_KW = {"trimmed_mean": {"trim_ratio": 0.25}}
+
+
+def _prop_agg(name):
+    fed = _fed(name, topn=2, **_PROP_KW.get(name, {}))
+    ctx = aggregators.AggContext(cfg=CFG, fed=fed, template=TPL, spec=_PROP_SPEC, mesh=None)
+    return aggregators.get(name)(ctx)
+
+
+def _prop_inputs(rng, weights):
+    packed = jnp.asarray(rng.normal(size=(_PROP_C, _PROP_N)), jnp.float32)
+    base = jnp.asarray(rng.normal(size=(_PROP_C, _PROP_N)) * 0.1, jnp.float32)
+    w = np.asarray(weights, np.float64)
+    w = jnp.asarray(w / w.sum(), jnp.float32)
+    return packed, base, w
+
+
+def test_fedsgd_has_no_mask_surface():
+    """The one non-stacked mode: a single shared copy, nothing to mask."""
+    cls = aggregators.get("fedsgd")
+    assert not cls.stacked
+    with pytest.raises(RuntimeError, match="shared model"):
+        cls(aggregators.AggContext(cfg=CFG, fed=_fed("fedsgd"), template=TPL, spec=_PROP_SPEC)).aggregate(None, None, {})
+
+
+@given(st.lists(st.floats(0.05, 1.0), min_size=_PROP_C, max_size=_PROP_C), st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_mask_all_ones_equals_none(wlist, seed):
+    """Contract (aggregators/base.py): aggregate(mask=all-ones) must be
+    numerically identical to aggregate(mask=None), for EVERY stacked mode."""
+    for name in aggregators.names():
+        if not aggregators.get(name).stacked:
+            continue
+        agg = _prop_agg(name)
+        packed, base, w = _prop_inputs(np.random.default_rng(seed), wlist)
+        st0 = agg.init_state(base)
+        out_none, _ = agg.aggregate(packed, w, st0)
+        out_ones, _ = agg.aggregate(packed, w, st0, jnp.ones((_PROP_C,), jnp.float32))
+        np.testing.assert_allclose(
+            np.asarray(out_ones), np.asarray(out_none), rtol=1e-6, atol=1e-7,
+            err_msg=f"mode={name}",
+        )
+
+
+@given(
+    st.integers(1, 2 ** _PROP_C - 2),  # >=1 participant AND >=1 masked-out
+    st.floats(1.0, 1e4),
+)
+@settings(max_examples=8, deadline=None)
+def test_masked_rows_cannot_influence_participants(mask_bits, junk_scale):
+    """Mask-0 rows are clients that did not train: whatever garbage their
+    buffer rows hold (scaled up to 1e4 — a Byzantine straggler), every
+    participant's output row is unchanged, for every stacked mode."""
+    mask_np = np.asarray([(mask_bits >> c) & 1 for c in range(_PROP_C)], np.float32)
+    mask = jnp.asarray(mask_np)
+    part = mask_np[:, None]
+    for name in aggregators.names():
+        if not aggregators.get(name).stacked:
+            continue
+        agg = _prop_agg(name)
+        rng = np.random.default_rng(mask_bits * 31 + int(junk_scale))
+        packed, base, w = _prop_inputs(rng, [0.4, 0.3, 0.2, 0.1])
+        st0 = agg.init_state(base)
+        out_clean, _ = agg.aggregate(packed, w, st0, mask)
+        junk = jnp.asarray(rng.normal(size=(_PROP_C, _PROP_N)) * junk_scale, jnp.float32)
+        packed_junk = jnp.where(mask[:, None] > 0, packed, junk)
+        out_junk, _ = agg.aggregate(packed_junk, w, st0, mask)
+        np.testing.assert_allclose(
+            np.asarray(out_junk) * part, np.asarray(out_clean) * part,
+            rtol=1e-6, atol=1e-7, err_msg=f"mode={name}",
+        )
 
 
 # ------------------ new modes: convergence smoke tests ----------------------

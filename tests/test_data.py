@@ -134,8 +134,13 @@ def test_partitioned_token_batches_shapes_and_scenarios():
     batch = next(it)
     assert batch["tokens"].shape == (3, 2, 2, 24)
     assert batch["tokens"].dtype == np.int32
+    # yolo archs route partition scenarios through the detection suite (PR 3)
+    det = next(fed_batches(get_arch("fedyolov3").reduced(), fed, batch=2, seq=0,
+                           img_size=32, partition_name="dirichlet"))
+    assert det["images"].shape[:3] == (3, 2, 2) and len(det["targets"]) == 3
+    # other modalities still reject scenario splits
     with pytest.raises(ValueError, match="text"):
-        next(fed_batches(get_arch("fedyolov3").reduced(), fed, batch=2, seq=0,
+        next(fed_batches(get_arch("hubert-xlarge").reduced(), fed, batch=2, seq=8,
                          partition_name="dirichlet"))
 
 

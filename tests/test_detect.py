@@ -1,0 +1,236 @@
+"""Detection evaluation engine (DESIGN.md §10): Pallas IoU/NMS kernels
+pinned bit-for-bit against the NumPy oracles in interpret mode, greedy
+matching + mAP on hand-computed fixtures, and the jitted federated
+evaluator's per-client/global wiring."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import detection
+from repro.kernels import ops, ref
+from repro.models import yolov3
+
+RNG = np.random.default_rng(11)
+CFG = get_arch("fedyolov3").reduced()
+
+
+def _boxes(*shape, lo=0.02, hi=0.5):
+    xy = RNG.uniform(0.1, 0.9, shape + (2,)).astype(np.float32)
+    wh = RNG.uniform(lo, hi, shape + (2,)).astype(np.float32)
+    return np.concatenate([xy, wh], -1)
+
+
+# ------------------------- pairwise IoU goldens -----------------------------
+
+@pytest.mark.parametrize("B,N,M", [(1, 5, 7), (3, 130, 70), (2, 64, 9)])
+@pytest.mark.parametrize("giou", [False, True])
+def test_pairwise_iou_bit_for_bit(B, N, M, giou):
+    """Tiled kernel == NumPy oracle bitwise, padding and batching included."""
+    a, b = _boxes(B, N), _boxes(B, M)
+    k = ops.pairwise_iou(jnp.asarray(a), jnp.asarray(b), giou=giou, block_n=64, block_m=64)
+    np.testing.assert_array_equal(np.asarray(k), ref.pairwise_iou_np(a, b, giou=giou))
+
+
+def test_pairwise_iou_degenerate_bit_for_bit():
+    """Zero-area and negative-w/h boxes score 0 against everything — in the
+    kernel AND the oracle, bitwise."""
+    a = _boxes(6)
+    a[0, 2:] = 0.0  # zero area
+    a[1, 2] = -0.2  # negative width (collapses to zero area)
+    k = np.asarray(ops.pairwise_iou(jnp.asarray(a), jnp.asarray(a)))
+    r = ref.pairwise_iou_np(a, a)
+    np.testing.assert_array_equal(k, r)
+    assert k[0, 0] == 0.0 and k[1, 1] == 0.0  # degenerate self-IoU is 0
+    np.testing.assert_allclose(np.diag(k)[2:], 1.0)  # proper boxes: identity
+    assert (k[0] == 0.0).all() and (k[1] == 0.0).all()
+
+
+def test_pairwise_iou_matches_model_iou():
+    """kernels.detect and models.yolov3 share one IoU definition: the loss
+    path's broadcasting iou gives the same matrix as the kernel."""
+    a, b = _boxes(24), _boxes(17)
+    k = np.asarray(ops.pairwise_iou(jnp.asarray(a), jnp.asarray(b)))
+    m = np.asarray(yolov3.pairwise_iou(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(k, m, rtol=1e-6, atol=1e-7)
+
+
+def test_model_iou_broadcasts_batched():
+    """The satellite fix: iou broadcasts over batched box arrays."""
+    a, b = _boxes(4, 8), _boxes(4, 8)
+    elem = np.asarray(yolov3.iou(jnp.asarray(a), jnp.asarray(b)))
+    assert elem.shape == (4, 8)
+    pair = np.asarray(yolov3.pairwise_iou(jnp.asarray(a), jnp.asarray(b)))
+    assert pair.shape == (4, 8, 8)
+    # the pairwise diagonal is the element-wise result
+    np.testing.assert_allclose(np.diagonal(pair, axis1=1, axis2=2), elem, rtol=1e-6)
+
+
+def test_giou_bounds_and_bit_for_bit():
+    a, b = _boxes(40), _boxes(40)
+    gi = np.asarray(ops.pairwise_iou(jnp.asarray(a), jnp.asarray(b), giou=True))
+    io = np.asarray(ops.pairwise_iou(jnp.asarray(a), jnp.asarray(b)))
+    assert (gi <= io + 1e-6).all() and (gi >= -1.0 - 1e-6).all()
+    np.testing.assert_array_equal(gi, ref.pairwise_iou_np(a, b, giou=True))
+
+
+# ------------------------------ NMS goldens ---------------------------------
+
+@pytest.mark.parametrize("B,N", [(1, 16), (2, 64), (3, 200)])
+def test_nms_bit_for_bit_random(B, N):
+    bx = _boxes(B, N)
+    sc = RNG.uniform(0, 1, (B, N)).astype(np.float32)
+    for mk in (0, 8):
+        k = ops.nms(jnp.asarray(bx), jnp.asarray(sc), iou_thresh=0.4, score_thresh=0.1, max_keep=mk)
+        np.testing.assert_array_equal(np.asarray(k), ref.nms_np(bx, sc, 0.4, 0.1, mk))
+
+
+def test_nms_score_ties_stable():
+    """Equal scores break by original index (stable sort) — deterministic
+    in kernel and oracle alike: of N identical tied boxes, index 0 wins."""
+    bx = np.tile(np.asarray([[0.5, 0.5, 0.2, 0.2]], np.float32), (6, 1))
+    sc = np.full(6, 0.9, np.float32)
+    k = np.asarray(ops.nms(jnp.asarray(bx), jnp.asarray(sc), iou_thresh=0.5))
+    np.testing.assert_array_equal(k, ref.nms_np(bx, sc, 0.5))
+    np.testing.assert_array_equal(k, [1, 0, 0, 0, 0, 0])
+
+
+def test_nms_all_suppressed():
+    """One cluster of near-identical boxes -> single survivor; a score
+    threshold above every score -> empty keep mask."""
+    base = np.asarray([0.5, 0.5, 0.3, 0.3], np.float32)
+    bx = base[None] + RNG.uniform(-0.01, 0.01, (8, 4)).astype(np.float32)
+    sc = RNG.uniform(0.5, 0.9, 8).astype(np.float32)
+    k = np.asarray(ops.nms(jnp.asarray(bx), jnp.asarray(sc), iou_thresh=0.5))
+    np.testing.assert_array_equal(k, ref.nms_np(bx, sc, 0.5))
+    assert k.sum() == 1.0 and k[np.argmax(sc)] == 1.0
+    none = np.asarray(ops.nms(jnp.asarray(bx), jnp.asarray(sc), score_thresh=0.95))
+    np.testing.assert_array_equal(none, np.zeros(8, np.float32))
+    np.testing.assert_array_equal(none, ref.nms_np(bx, sc, 0.5, 0.95))
+
+
+def test_nms_more_survivors_than_max_keep():
+    """> max_keep disjoint boxes: exactly max_keep survive, highest scores
+    first, shapes unchanged (fixed-size contract — masked, never sliced)."""
+    n, mk = 12, 5
+    bx = np.stack([
+        np.linspace(0.05, 0.95, n), np.full(n, 0.5), np.full(n, 0.04), np.full(n, 0.04),
+    ], -1).astype(np.float32)  # pairwise-disjoint strip
+    sc = RNG.permutation(np.linspace(0.2, 0.9, n)).astype(np.float32)
+    k = np.asarray(ops.nms(jnp.asarray(bx), jnp.asarray(sc), iou_thresh=0.5, max_keep=mk))
+    np.testing.assert_array_equal(k, ref.nms_np(bx, sc, 0.5, 0.0, mk))
+    assert k.shape == (n,) and k.sum() == mk
+    assert set(np.nonzero(k)[0]) == set(np.argsort(-sc)[:mk])  # top-mk by score
+
+
+def test_nms_kept_boxes_are_an_antichain():
+    """No two kept boxes overlap above the threshold, and every dropped
+    valid box overlaps some kept, higher-ranked box."""
+    bx = _boxes(64)
+    sc = RNG.uniform(0.2, 1.0, 64).astype(np.float32)
+    thresh = 0.4
+    k = np.asarray(ops.nms(jnp.asarray(bx), jnp.asarray(sc), iou_thresh=thresh))
+    iou = ref.pairwise_iou_np(bx, bx)
+    kept = np.nonzero(k)[0]
+    for i in kept:
+        for j in kept:
+            assert i == j or iou[i, j] <= thresh
+    order = np.argsort(-sc, kind="stable")
+    rank = {int(b): r for r, b in enumerate(order)}
+    for d in np.nonzero(1 - k)[0]:
+        assert any(iou[d, j] > thresh and rank[int(j)] < rank[int(d)] for j in kept)
+
+
+# ------------------------- matching + AP fixtures ---------------------------
+
+def _pred(boxes, scores, cls=None, valid=None):
+    boxes = jnp.asarray(boxes, jnp.float32)
+    B, K = boxes.shape[:2]
+    return {
+        "boxes": boxes,
+        "scores": jnp.asarray(scores, jnp.float32),
+        "cls": jnp.zeros((B, K), jnp.int32) if cls is None else jnp.asarray(cls, jnp.int32),
+        "valid": jnp.ones((B, K), jnp.float32) if valid is None else jnp.asarray(valid, jnp.float32),
+    }
+
+
+def test_match_greedy_one_gt_one_tp():
+    """Two detections on one GT: only the higher-scored one is a TP."""
+    gt = jnp.asarray([[[0.3, 0.3, 0.2, 0.2]]], jnp.float32)
+    pred = _pred([[[0.3, 0.3, 0.2, 0.2], [0.31, 0.3, 0.2, 0.2]]], [[0.9, 0.8]])
+    tp = detection.match_detections(pred, gt, jnp.zeros((1, 1), jnp.int32), jnp.ones((1, 1), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(tp), [[1.0, 0.0]])
+
+
+def test_match_is_class_aware():
+    gt = jnp.asarray([[[0.3, 0.3, 0.2, 0.2]]], jnp.float32)
+    pred = _pred([[[0.3, 0.3, 0.2, 0.2]]], [[0.9]], cls=[[1]])  # wrong class
+    tp = detection.match_detections(pred, gt, jnp.zeros((1, 1), jnp.int32), jnp.ones((1, 1), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(tp), [[0.0]])
+
+
+def test_map_hand_computed_fixture():
+    """2 GTs, dets TP(.9) / duplicate-FP(.8) / TP(.7):
+    PR points (.5, 1), (.5, .5), (1, 2/3) -> all-point AP = 5/6."""
+    gt_boxes = jnp.asarray([[[0.2, 0.2, 0.1, 0.1], [0.7, 0.7, 0.1, 0.1]]], jnp.float32)
+    gt_cls = jnp.zeros((1, 2), jnp.int32)
+    gt_valid = jnp.ones((1, 2), jnp.float32)
+    pred = _pred(
+        [[[0.2, 0.2, 0.1, 0.1], [0.2, 0.2, 0.1, 0.1], [0.7, 0.7, 0.1, 0.1]]],
+        [[0.9, 0.8, 0.7]],
+    )
+    out = detection.evaluate_detections(pred, gt_boxes, gt_cls, gt_valid, n_classes=1)
+    np.testing.assert_allclose(float(out["map"]), 5.0 / 6.0, rtol=1e-6)
+    # NMS-invalidated duplicate no longer counts as FP -> perfect AP
+    pred["valid"] = jnp.asarray([[1.0, 0.0, 1.0]], jnp.float32)
+    out2 = detection.evaluate_detections(pred, gt_boxes, gt_cls, gt_valid, n_classes=1)
+    np.testing.assert_allclose(float(out2["map"]), 1.0, rtol=1e-6)
+
+
+def test_map_averages_only_present_classes():
+    """A class with zero GT anywhere contributes nothing to mAP (no fake 0)."""
+    gt_boxes = jnp.asarray([[[0.2, 0.2, 0.1, 0.1]]], jnp.float32)
+    gt_cls = jnp.zeros((1, 1), jnp.int32)
+    gt_valid = jnp.ones((1, 1), jnp.float32)
+    pred = _pred([[[0.2, 0.2, 0.1, 0.1]]], [[0.9]])
+    out = detection.evaluate_detections(pred, gt_boxes, gt_cls, gt_valid, n_classes=3)
+    np.testing.assert_allclose(float(out["map"]), 1.0, rtol=1e-6)
+
+
+def test_evaluator_per_client_and_global():
+    """build_evaluator: ONE jitted call -> per-client vector + pooled
+    global, shapes fixed by (C, B) alone, everything in [0, 1]."""
+    from repro.models import params as P
+
+    params = P.init_params(yolov3.template(CFG), jax.random.key(0), jnp.float32)
+    C, B = 2, 2
+    imgs = jnp.asarray(RNG.normal(0, 0.05, (C, B, 32, 32, 3)), jnp.float32)
+    batch = {
+        "images": imgs,
+        "gt_boxes": jnp.asarray(_boxes(C, B, 3), jnp.float32),
+        "gt_cls": jnp.zeros((C, B, 3), jnp.int32),
+        "gt_valid": jnp.ones((C, B, 3), jnp.float32),
+    }
+    ev = detection.build_evaluator(CFG, max_detections=16)
+    out = ev(params, batch)
+    assert out["per_client_map"].shape == (C,)
+    assert out["per_client_ap"].shape == (C, CFG.vocab_size)
+    for v in [float(out["map"]), *map(float, out["per_client_map"])]:
+        assert np.isfinite(v) and 0.0 <= v <= 1.0
+
+
+def test_decode_predictions_fixed_shapes():
+    """Fixed K detection slots with a validity mask; scores descending."""
+    from repro.models import params as P
+
+    params = P.init_params(yolov3.template(CFG), jax.random.key(1), jnp.float32)
+    imgs = jnp.asarray(RNG.normal(0, 0.05, (2, 32, 32, 3)), jnp.float32)
+    pred = detection.decode_predictions(CFG, params, imgs, max_detections=24)
+    assert pred["boxes"].shape == (2, 24, 4)
+    assert pred["scores"].shape == pred["cls"].shape == pred["valid"].shape == (2, 24)
+    s = np.asarray(pred["scores"])
+    assert (np.diff(s, axis=1) <= 1e-6).all()  # top-k order preserved
+    v = np.asarray(pred["valid"])
+    assert set(np.unique(v)).issubset({0.0, 1.0})

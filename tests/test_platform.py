@@ -54,6 +54,55 @@ def test_scheduler_invariants(n, k):
         assert (w >= 0).all()
 
 
+def test_scheduler_fairness_floor_identical_quality():
+    """Degenerate quality signal (every EMA identical): the fairness floor
+    must still rotate starved clients in — ties cannot starve anyone."""
+    n = 5
+    s = TaskScheduler(n, SchedulerConfig(max_participants=2, fairness_rounds=3))
+    # identical quality EMAs (all zero) and identical loads every round
+    seen = np.zeros(n, int)
+    for _ in range(12):
+        sel = s.participation(np.zeros(n))
+        seen += (sel["mask"] > 0).astype(int)
+        assert abs(sel["weights"].sum() - 1.0) < 1e-9
+        assert s.idle_rounds.max() <= s.cfg.fairness_rounds  # floor honored
+    assert (seen > 0).all()  # every client participated at least once
+
+
+def test_scheduler_eval_quality_feeds_ema():
+    """report_eval (per-client mAP from server.evaluate_round) moves the
+    same quality EMA report_quality does — improving clients rank higher."""
+    s = TaskScheduler(2, SchedulerConfig(max_participants=1, beta=0.0, fairness_rounds=100))
+    s.report_eval(0, 0.10); s.report_eval(0, 0.50)   # climbing mAP
+    s.report_eval(1, 0.40); s.report_eval(1, 0.40)   # plateaued
+    assert s.quality[0] > s.quality[1]
+    w = s.select(np.zeros(2))
+    assert w[0] == 1.0 and abs(w.sum() - 1.0) < 1e-9
+
+
+@pytest.mark.parametrize("k_static", [1, 4])  # K == 1 and K == C
+def test_scheduler_static_k_extremes(k_static):
+    """Compact-mode contract at the edges: exactly K indices every round,
+    weights sum to 1 over exactly K participants, and the mask matches idx."""
+    n = 4
+    s = TaskScheduler(n, SchedulerConfig(max_participants=k_static, fairness_rounds=2))
+    rng = np.random.default_rng(3)
+    seen = np.zeros(n, int)
+    for _ in range(10):
+        sel = s.participation(rng.random(n), k_static=k_static)
+        assert sel["idx"].shape == (k_static,)
+        assert len(set(sel["idx"].tolist())) == k_static  # no duplicate slots
+        assert sel["mask"].sum() == k_static
+        np.testing.assert_array_equal(np.nonzero(sel["mask"])[0], np.sort(sel["idx"]))
+        assert abs(sel["weights"].sum() - 1.0) < 1e-9
+        assert (sel["weights"][sel["idx"]] > 0).all()
+        seen += (sel["mask"] > 0).astype(int)
+    if k_static == n:
+        assert (seen == 10).all()  # K == C: everyone, every round
+    else:
+        assert (seen > 0).all()  # K == 1: fairness floor still rotates all
+
+
 # ----------------------------- explorer ------------------------------------
 
 def test_explorer_monitor_reads_proc():
