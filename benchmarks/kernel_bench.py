@@ -2,16 +2,24 @@
 (interpret-mode Pallas timing is not meaningful) plus derived bytes/FLOPs
 per call for the roofline narrative.
 
-`agg_rows` benchmarks the packed aggregation transport against the legacy
+`agg_rows` benchmarks the packed aggregation engine against the legacy
 per-leaf tree path (dense / eq6 / quant8 at three sizes): wall time, kernel
 launches per round (packed = 1 vs one per leaf), and collective payload
-bytes (quant8's int8 operand moves 4x fewer bytes than dense f32 at equal
-shapes; the per-block f32 scale sideband is reported separately).
+bytes. The packed columns time the flat engine's actual entry points —
+merged-run fused chains (`packing.masked_bucket_mean` / `weighted_mean`)
+and the fused quant8 encode->reduce (`packing.quant8_mean_ref`). The
+`agg/pack_*` rows survive as EDGE costs only (make_state / checkpoint /
+serve): the flat round engine (DESIGN.md §11) carries the packed buffer as
+its state, so no pack/unpack copy appears in the per-round path — the
+`agg/unpack_view` row pins that (reading the buffer through all slot views
+costs the same as reading it flat).
 
-`participation_rows` sweeps the participation fraction C_active/C of the
-compact round engine (DESIGN.md §8): local training gathers only the K
-selected clients, so per-round wall time drops with the fraction while the
-aggregation still spans the full (C, N_total) buffer.
+`round_sweep_rows` sweeps the participation fraction C_active/C of the
+compact round engine with PAIRED samples: the PR 3 tree layout
+(`fed/round_participation_*`, the "before" column, DESIGN.md §8) and the
+flat engine with the donated round jit (`fed/round_flat_*`, DESIGN.md §11)
+alternate inside one timing loop. `flat_round_rows` is the flat-only sweep
+the CI smoke uses.
 
 Running this module as a script appends one timestamped record to
 ``BENCH_kernel_bench.json`` at the repo root — the cross-PR trajectory of
@@ -36,14 +44,38 @@ BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_kernel_bench.json"
 
 
 def _timeit(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
-    t0 = time.time()
+    """Median of `iters` timed runs, AFTER one untimed warmup call: compile
+    and first-dispatch cost never lands in the row, and the median resists
+    the 2x run-to-run swings this shared-CPU container produces. Rows record
+    the iteration count in their info string (";iters=N")."""
+    jax.block_until_ready(fn(*args))  # warmup: compile + first dispatch
+    ts = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / iters * 1e6  # us
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6  # us
 
 
-def rows():
+def _timeit_paired(fn_a, args_a, fn_b, args_b, iters=7):
+    """PAIRED medians for an A-vs-B row: samples alternate A,B,A,B,... so
+    both sides see the same machine state (this container's effective core
+    count drifts, which otherwise flips A-vs-B orderings between rows that
+    were measured minutes apart). Both get an untimed warmup first."""
+    jax.block_until_ready(fn_a(*args_a))
+    jax.block_until_ready(fn_b(*args_b))
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(*args_a))
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(*args_b))
+        tb.append(time.perf_counter() - t0)
+    return float(np.median(ta)) * 1e6, float(np.median(tb)) * 1e6
+
+
+def rows(iters: int = 5):
     out = []
     rng = np.random.default_rng(0)
     # fedavg: C=8 clients x 4M params
@@ -52,27 +84,27 @@ def rows():
     w = jnp.full((C,), 1 / C, jnp.float32)
     m = jnp.ones((C,), jnp.float32)
     f = jax.jit(ref.fedavg_masked_mean)
-    us = _timeit(lambda a, b, c: (f(a, b, c),), x, w, m)
-    out.append(("kernel/fedavg_8x4M", us, f"bytes={C*N*4/1e6:.0f}MB"))
+    us = _timeit(lambda a, b, c: (f(a, b, c),), x, w, m, iters=iters)
+    out.append(("kernel/fedavg_8x4M", us, f"bytes={C*N*4/1e6:.0f}MB;iters={iters}"))
     # quant roundtrip
     v = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
     g = jax.jit(lambda v: ref.dequantize_blocks(*ref.quantize_blocks(v, 1024), 1024))
-    us = _timeit(lambda a: (g(a),), v)
-    out.append(("kernel/quant_roundtrip_4M", us, f"compression=4x"))
+    us = _timeit(lambda a: (g(a),), v, iters=iters)
+    out.append(("kernel/quant_roundtrip_4M", us, f"compression=4x;iters={iters}"))
     # attention: 1x8 heads x 1k x 64
     q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)), jnp.bfloat16)
     k = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)), jnp.bfloat16)
     fa = jax.jit(lambda q, k, v: ref.flash_attention(q, k, v, causal=True))
-    us = _timeit(lambda a, b, c: (fa(a, b, c),), q, k, k)
+    us = _timeit(lambda a, b, c: (fa(a, b, c),), q, k, k, iters=iters)
     flops = 4 * 1 * 8 * 1024 * 1024 * 64 / 2
-    out.append(("kernel/attention_1k", us, f"gflops_per_call={flops/1e9:.2f}"))
+    out.append(("kernel/attention_1k", us, f"gflops_per_call={flops/1e9:.2f};iters={iters}"))
     # ssd: B1 S1024 H8 P64 N64
     xdt = jnp.asarray(rng.normal(size=(1, 1024, 8, 64)) * 0.1, jnp.float32)
     dA = -jnp.abs(jnp.asarray(rng.normal(size=(1, 1024, 8)) * 0.1, jnp.float32))
     Bm = jnp.asarray(rng.normal(size=(1, 1024, 64)), jnp.float32)
     ss = jax.jit(lambda a, b, c, d: ssd_chunked(a, b, c, d, 128))
-    us = _timeit(lambda a, b, c, d: ss(a, b, c, d), xdt, dA, Bm, Bm)
-    out.append(("kernel/ssd_1k", us, "chunk=128"))
+    us = _timeit(lambda a, b, c, d: ss(a, b, c, d), xdt, dA, Bm, Bm, iters=iters)
+    out.append(("kernel/ssd_1k", us, f"chunk=128;iters={iters}"))
     return out
 
 
@@ -129,63 +161,84 @@ def _tree_of(C: int, N: int, n_leaves: int) -> dict:
     return {f"leaf{i:02d}": jnp.asarray(rng.normal(size=(C, per)), jnp.float32) for i in range(n_leaves)}
 
 
-def agg_rows():
+def _bench_spec(C: int, N: int, n_leaves: int):
+    per = N // n_leaves
+    # one score bucket per leaf, like scan-stacked layers
+    return packing.PackSpec(
+        N, n_leaves,
+        tuple(
+            packing.LeafSlot(f"leaf{i}", (per,), i * per, per, i, 1)
+            for i in range(n_leaves)
+        ),
+    )
+
+
+def _eq6_pair(C, N, n_leaves, tree, packed, spec, w, iters):
+    """(tree us, packed us) for the eq6-style masked mean at one size —
+    PAIRED samples (interleaved), so the comparison is apples-to-apples."""
+    masks = {k: jnp.asarray(np.random.default_rng(i).integers(0, 2, C), jnp.float32) for i, k in enumerate(tree)}
+    wmask = jnp.stack([masks[k] for k in tree], axis=1) * w[:, None]  # (C, B)
+    tree_fn6 = jax.jit(lambda t: [ref.fedavg_masked_mean(x, w, masks[k]) for k, x in t.items()])
+    packed_fn6 = jax.jit(lambda p: packing.masked_bucket_mean(p, wmask, spec))
+    return _timeit_paired(
+        lambda t: tree_fn6(t), (tree,), lambda p: packed_fn6(p), (packed,), iters=iters
+    )
+
+
+def agg_rows(iters: int = 7):
     """Packed-vs-tree aggregation: dense / eq6-style masked / quant8.
 
-    The packed side times the actual engine entry point
-    (`packing.masked_bucket_mean` over a real PackSpec) — one fused
-    reduction per round — against the seed's per-leaf tree walk.
+    The packed side times the flat engine's actual entry points — the
+    merged-run fused chains and the fused quant8 encode->reduce — against
+    the seed's per-leaf tree walk. `agg/pack_*` is reported as an EDGE cost
+    (make_state/checkpoint/serve); it is no longer on the per-round path,
+    which `agg/unpack_view` pins: one pass over the buffer through all slot
+    views costs what one flat pass costs (slices fuse, nothing copies).
     """
     out = []
     C, n_leaves, block = 8, 32, 1024
     w = jnp.full((C,), 1 / C, jnp.float32)
     for N in (262_144, 1_048_576, 4_194_304):
         tree = _tree_of(C, N, n_leaves)
-        per = N // n_leaves
-        # one score bucket per leaf, like scan-stacked layers
-        spec = packing.PackSpec(
-            N, n_leaves,
-            tuple(
-                packing.LeafSlot(f"leaf{i}", (per,), i * per, per, i, 1)
-                for i in range(n_leaves)
-            ),
-        )
+        spec = _bench_spec(C, N, n_leaves)
         packed = packing.pack(spec, tree)
         nb = N // block
         bytes_dense = C * N * 4
         bytes_q_payload = C * N  # int8 operand: exactly 4x fewer than f32
         bytes_q_scales = C * nb * 4
-        wmask = jnp.asarray(np.random.default_rng(0).integers(0, 2, (C, n_leaves)), jnp.float32) * w[:, None]
         ones = jnp.ones((C,), jnp.float32)
 
-        # pack itself (once per round on the packed path, absent on tree's)
+        # pack: an edge cost (init/checkpoint/serve) — the flat round state
+        # IS the packed buffer, so no round pays this
         pack_fn = jax.jit(lambda t: packing.pack(spec, t))
-        out.append((f"agg/pack_{C}x{N>>10}k", _timeit(lambda t: pack_fn(t), tree), f"bytes={bytes_dense/1e6:.1f}MB"))
+        out.append((
+            f"agg/pack_{C}x{N>>10}k", _timeit(lambda t: pack_fn(t), tree, iters=iters),
+            f"bytes={bytes_dense/1e6:.1f}MB;edge=make_state/checkpoint/serve;not_in_round_path;iters={iters}",
+        ))
 
-        # dense
+        # dense (tree and packed interleaved: same machine state per row)
         tree_fn = jax.jit(lambda t: [ref.fedavg_masked_mean(x, w, ones) for x in t.values()])
-        us_tree = _timeit(lambda t: tree_fn(t), tree)
         packed_fn = jax.jit(lambda p: packing.weighted_mean(p, w))
-        us_packed = _timeit(lambda p: packed_fn(p), packed)
+        us_tree, us_packed = _timeit_paired(
+            lambda t: tree_fn(t), (tree,), lambda p: packed_fn(p), (packed,), iters=iters
+        )
         out.append((
             f"agg/dense_{C}x{N>>10}k_tree", us_tree,
-            f"launches={n_leaves};bytes={bytes_dense/1e6:.1f}MB",
+            f"launches={n_leaves};bytes={bytes_dense/1e6:.1f}MB;iters={iters}",
         ))
         out.append((
             f"agg/dense_{C}x{N>>10}k_packed", us_packed,
-            f"launches=1;bytes={bytes_dense/1e6:.1f}MB",
+            f"launches=1;bytes={bytes_dense/1e6:.1f}MB;iters={iters}",
         ))
 
         # eq6-style masked mean (per-bucket weight mask)
-        masks = {k: jnp.asarray(np.random.default_rng(i).integers(0, 2, C), jnp.float32) for i, k in enumerate(tree)}
-        tree_fn6 = jax.jit(lambda t: [ref.fedavg_masked_mean(x, w, masks[k]) for k, x in t.items()])
-        us_tree = _timeit(lambda t: tree_fn6(t), tree)
-        packed_fn6 = jax.jit(lambda p: packing.masked_bucket_mean(p, wmask, spec))
-        us_packed = _timeit(lambda p: packed_fn6(p), packed)
-        out.append((f"agg/eq6_{C}x{N>>10}k_tree", us_tree, f"launches={n_leaves}"))
-        out.append((f"agg/eq6_{C}x{N>>10}k_packed", us_packed, "launches=1"))
+        us_tree, us_packed = _eq6_pair(C, N, n_leaves, tree, packed, spec, w, iters)
+        out.append((f"agg/eq6_{C}x{N>>10}k_tree", us_tree, f"launches={n_leaves};iters={iters}"))
+        out.append((f"agg/eq6_{C}x{N>>10}k_packed", us_packed, f"launches=1;fused_chain=merged_runs;iters={iters}"))
 
-        # quant8 transport (quantize + dequantize + reduce)
+        # quant8 transport: tree = per-leaf encode->decode->reduce; packed =
+        # the fused engine path (encode+reduce in one pass, no int8
+        # materialization — the collective-free transport of quant8)
         def tree_q(t):
             outs = []
             for x in t.values():
@@ -194,60 +247,149 @@ def agg_rows():
                 outs.append(jnp.einsum("c,cn->n", w, d))
             return outs
 
-        def packed_q(p):
-            q, s = packing.quantize_rows_ref(p, block)
-            d = packing.dequantize_rows_ref(q, s, block)
-            return jnp.einsum("c,cn->n", w, d)
-
-        tree_qj, packed_qj = jax.jit(tree_q), jax.jit(packed_q)
-        us_tree = _timeit(lambda t: tree_qj(t), tree)
-        us_packed = _timeit(lambda p: (packed_qj(p),), packed)
+        tree_qj = jax.jit(tree_q)
+        packed_qj = jax.jit(lambda p: packing.quant8_mean_ref(p, w, block))
+        us_tree, us_packed = _timeit_paired(
+            lambda t: tree_qj(t), (tree,), lambda p: (packed_qj(p),), (packed,), iters=iters
+        )
         ratio = bytes_dense / bytes_q_payload
         out.append((
             f"agg/quant8_{C}x{N>>10}k_tree", us_tree,
-            f"launches={2*n_leaves};payload={bytes_q_payload/1e6:.1f}MB",
+            f"launches={2*n_leaves};payload={bytes_q_payload/1e6:.1f}MB;iters={iters}",
         ))
         out.append((
             f"agg/quant8_{C}x{N>>10}k_packed", us_packed,
-            f"launches=2;payload={bytes_q_payload/1e6:.1f}MB;scales={bytes_q_scales/1e6:.2f}MB;payload_ratio_vs_dense={ratio:.1f}x",
+            f"launches=1;fused=encode+reduce;payload={bytes_q_payload/1e6:.1f}MB;scales={bytes_q_scales/1e6:.2f}MB;payload_ratio_vs_dense={ratio:.1f}x;iters={iters}",
         ))
+
+        if N == 4_194_304:
+            # copy-free slot views, proved structurally: the reconstruction
+            # lowers to slice+reshape ONLY — the row's value is the count of
+            # data-moving primitives in its jaxpr (0), vs pack's concatenate.
+            # The wall-clock effect of dropping the boundary copies is the
+            # fed/round_flat_* vs fed/round_participation_* sweep below.
+            tpl = {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype) for k, v in tree.items()}
+            abs_p = jax.ShapeDtypeStruct((C, N), jnp.float32)
+            jaxpr = jax.make_jaxpr(lambda p: packing.unpack_views(spec, p, tpl))(abs_p)
+            prims = sorted({e.primitive.name for e in jaxpr.jaxpr.eqns})
+            moving = [q for q in prims if q not in ("slice", "reshape", "squeeze")]
+            pack_jaxpr = jax.make_jaxpr(lambda t: packing.pack(spec, t))(tree)
+            pack_prims = sorted({e.primitive.name for e in pack_jaxpr.jaxpr.eqns})
+            out.append((
+                f"agg/unpack_view_{C}x{N>>10}k", float(len(moving)),
+                f"data_moving_ops_in_jaxpr;view_prims={'+'.join(prims)};pack_prims={'+'.join(pack_prims)};copies=0",
+            ))
     return out
 
 
-def participation_rows(iters: int = 3):
-    """Per-round wall time vs participation fraction (compact engine).
+def eq6_guard_rows(iters: int = 9):
+    """CI guard (benchmarks/run.py --smoke): packed eq6 must beat the tree
+    path at the 256k size — a cheap tripwire against re-introducing the
+    mis-tiled reducers this bench caught at PR 3 (packed 2-4x slower)."""
+    C, n_leaves, N = 8, 32, 262_144
+    w = jnp.full((C,), 1 / C, jnp.float32)
+    tree = _tree_of(C, N, n_leaves)
+    spec = _bench_spec(C, N, n_leaves)
+    packed = packing.pack(spec, tree)
+    us_tree, us_packed = _eq6_pair(C, N, n_leaves, tree, packed, spec, w, iters)
+    if us_packed > us_tree:
+        raise RuntimeError(
+            f"packed eq6 regressed: {us_packed:.0f}us > tree {us_tree:.0f}us "
+            f"at 8x256k (median of {iters}) — the packed reducer must win"
+        )
+    return [(
+        "agg/eq6_guard_256k", us_packed,
+        f"tree={us_tree:.0f}us;packed_must_win;iters={iters}",
+    )]
 
-    C_active/C in {0.25, 0.5, 1.0} on the reduced qwen3 arch: K of 8
-    clients train per round, the rest keep their rows; aggregation weights/
-    mask flow in as traced inputs (one compile per static K only).
-    """
+
+def _round_sweep_setup(K: int, C: int = 8):
     from repro.configs import get_arch
     from repro.core import rounds as R
     from repro.optim import sgd
 
     cfg = get_arch("qwen3-1.7b").reduced()
-    C = 8
-    opt = sgd(lr=0.05)
     rng = np.random.default_rng(0)
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (C, 1, 2, 32)), jnp.int32)
+    mask = np.zeros(C, np.float32)
+    mask[:K] = 1.0
+    return cfg, R, sgd(lr=0.05), {"tokens": toks}, mask
+
+
+def flat_round_rows(iters: int = 3):
+    """The flat engine's round sweep (DESIGN.md §11): packed (C, N_total)
+    round state, slot-view training, in-place write-back, donated jit — no
+    per-round pack/unpack copy. Timed by THREADING the state (each call
+    consumes the donated previous state), exactly how FLServer drives it.
+    """
+    C = 8
     out = []
     for K in (2, 4, 8):
+        cfg, R, opt, batch, mask = _round_sweep_setup(K, C)
         fed = R.FedConfig(
             n_clients=C, local_steps=1, aggregation="dense", client_axis="data",
             data_axis=None, participation="compact", max_participants=K,
         )
         state = R.make_state(cfg, fed, opt, jax.random.key(0))
-        fr = jax.jit(R.build_fed_round(cfg, fed, opt))
-        mask = np.zeros(C, np.float32)
-        mask[:K] = 1.0
+        fr = R.jit_fed_round(R.build_fed_round(cfg, fed, opt))
         part = R.participation_input(fed, mask, mask / K, np.arange(K))
-        batch = {"tokens": toks}
-        us = _timeit(lambda s: fr(s, batch, part)[1]["loss"], state, iters=iters)
+        state, _ = fr(state, batch, part)  # warmup: compile + first dispatch
+        jax.block_until_ready(state)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            state, m = fr(state, batch, part)
+            jax.block_until_ready((state["params"], m["loss"]))
+            ts.append(time.perf_counter() - t0)
         out.append((
-            f"fed/round_participation_{K}of{C}", us,
-            f"frac={K / C:.2f};mode=compact;train_work=K/C",
+            f"fed/round_flat_{K}of{C}", float(np.median(ts)) * 1e6,
+            f"frac={K / C:.2f};mode=compact;layout=flat;donated=1;no_round_pack=1;iters={iters}",
         ))
     return out
+
+
+def round_sweep_rows(iters: int = 3):
+    """Before/after round sweep with PAIRED samples: at each fraction the
+    tree round (PR 3 engine) and the flat round (DESIGN.md §11) alternate
+    within one timing loop, so both see the same machine state. The flat
+    engine threads its donated state; the tree engine replays one state
+    (donation would invalidate the replayed buffer)."""
+    C = 8
+    out_tree, out_flat = [], []
+    for K in (2, 4, 8):
+        cfg, R, opt, batch, mask = _round_sweep_setup(K, C)
+        base = dict(
+            n_clients=C, local_steps=1, aggregation="dense", client_axis="data",
+            data_axis=None, participation="compact", max_participants=K,
+        )
+        fed_t = R.FedConfig(**base, state_layout="tree")
+        fed_f = R.FedConfig(**base)
+        st_t = R.make_state(cfg, fed_t, opt, jax.random.key(0))
+        fr_t = jax.jit(R.build_fed_round(cfg, fed_t, opt))
+        st_f = R.make_state(cfg, fed_f, opt, jax.random.key(0))
+        fr_f = R.jit_fed_round(R.build_fed_round(cfg, fed_f, opt))
+        part = R.participation_input(fed_t, mask, mask / K, np.arange(K))
+        jax.block_until_ready(fr_t(st_t, batch, part)[1]["loss"])  # warmups
+        st_f, m = fr_f(st_f, batch, part)
+        jax.block_until_ready((st_f["params"], m["loss"]))
+        tt, tf = [], []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fr_t(st_t, batch, part)[1]["loss"])
+            tt.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            st_f, m = fr_f(st_f, batch, part)
+            jax.block_until_ready((st_f["params"], m["loss"]))
+            tf.append(time.perf_counter() - t0)
+        out_tree.append((
+            f"fed/round_participation_{K}of{C}", float(np.median(tt)) * 1e6,
+            f"frac={K / C:.2f};mode=compact;layout=tree;train_work=K/C;iters={iters};paired=1",
+        ))
+        out_flat.append((
+            f"fed/round_flat_{K}of{C}", float(np.median(tf)) * 1e6,
+            f"frac={K / C:.2f};mode=compact;layout=flat;donated=1;no_round_pack=1;iters={iters};paired=1",
+        ))
+    return out_tree + out_flat
 
 
 def emit_trajectory(all_rows) -> None:
@@ -263,7 +405,7 @@ def emit_trajectory(all_rows) -> None:
 
 
 if __name__ == "__main__":
-    all_rows = rows() + detect_rows() + agg_rows() + participation_rows()
+    all_rows = rows() + detect_rows() + agg_rows() + round_sweep_rows()
     for name, val, extra in all_rows:
         print(f"{name},{val:.1f},{extra}")
     emit_trajectory(all_rows)

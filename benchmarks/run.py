@@ -7,12 +7,17 @@ Prints ``name,value,derived`` CSV. Modules:
   kernel_bench     — kernel reference micro-benchmarks
   kernel_bench_detect — detection IoU/NMS: Pallas vs NumPy oracle
   kernel_bench_agg — packed-vs-tree aggregation transport
-  participation    — per-round work vs participation fraction (DESIGN.md §8)
+  round_sweep      — per-round work vs participation fraction, tree (PR 3,
+                     DESIGN.md §8) and flat (DESIGN.md §11) engines timed
+                     with paired samples
+  eq6_guard        — packed eq6 must beat tree eq6 at 256k (regression gate)
   roofline_table   — per (arch x shape x mesh) roofline from the dry-run
 
-``--smoke`` runs the cheap analytic tables plus a 1-iteration participation
-sweep — the CI gate (scripts/check.sh) that proves the harness imports and
-the round engine runs, in well under a minute of compute.
+``--smoke`` runs the cheap analytic tables, a 1-iteration flat-round sweep,
+and the eq6 tiling guard (packed eq6 must beat the tree path at 256k — the
+module FAILS if the packed reducer regresses) — the CI gate
+(scripts/check.sh) that proves the harness imports, the round engine runs,
+and the re-tiled reducers still win, in about a minute of compute.
 """
 from __future__ import annotations
 
@@ -33,7 +38,8 @@ def main() -> None:
         modules = [
             ("upload_time", upload_time.rows),
             ("bandwidth_model", bandwidth_model.rows),
-            ("participation", lambda: kernel_bench.participation_rows(iters=1)),
+            ("flat_round", lambda: kernel_bench.flat_round_rows(iters=1)),
+            ("eq6_guard", kernel_bench.eq6_guard_rows),
         ]
     else:
         modules = [
@@ -43,7 +49,8 @@ def main() -> None:
             ("kernel_bench", kernel_bench.rows),
             ("kernel_bench_detect", kernel_bench.detect_rows),
             ("kernel_bench_agg", kernel_bench.agg_rows),
-            ("participation", kernel_bench.participation_rows),
+            ("round_sweep", kernel_bench.round_sweep_rows),
+            ("eq6_guard", kernel_bench.eq6_guard_rows),
             ("roofline_table", roofline_table.rows),
         ]
     failed = 0

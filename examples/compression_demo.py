@@ -52,20 +52,22 @@ def main() -> None:
     print(f"  int8 delta      : {n/1e6:8.2f} MB (+{nb*4} B scales)")
     print(f"  Eq.6 + int8     : {n*comp.compression_ratio(CFG, fed.topn)/1e6:8.2f} MB")
 
-    # packed aggregation engine: the whole tree as ONE buffer, one launch
+    # flat round engine: state["params"] IS the packed (C, N_total) buffer —
+    # no per-round pack; the unpack below is the checkpoint/serve edge copy
     w = R.uniform_weights(3)
     spec = packing.build_pack_spec(CFG, tpl)
-    packed = packing.pack(spec, state["params"])
+    packed = state["params"]
+    stacked = R.unpacked_params(CFG, fed, state)
     wmask = jax.vmap(lambda s: comp.topn_mask(s, fed.topn))(scores).astype(jnp.float32) * w[:, None]
     num, den = ops.packed_bucket_reduce(packed, wmask, jnp.asarray(packing.bucket_ids(spec)))
-    n_leaves = len(jax.tree.leaves(state["params"]))
-    print(f"\npacked engine: {n_leaves} tensors -> one ({packed.shape[0]}, {packed.shape[1]}) "
-          f"buffer, 1 Pallas launch (legacy tree path: {n_leaves} launches); "
+    n_leaves = len(jax.tree.leaves(stacked))
+    print(f"\nflat engine: {n_leaves} tensors live as one ({packed.shape[0]}, {packed.shape[1]}) "
+          f"round-state buffer, 1 Pallas launch (legacy tree path: {n_leaves} launches); "
           f"{int(jnp.sum(den > 0))}/{spec.n_total} elements uploaded this round")
 
     # legacy per-leaf kernel path, kept as the reference
-    flat_mask = jax.tree.map(lambda _: jnp.ones(3), state["params"])  # per-leaf demo mask
-    agg = ops.fedavg_tree(state["params"], w, flat_mask)
+    flat_mask = jax.tree.map(lambda _: jnp.ones(3), stacked)  # per-leaf demo mask
+    agg = ops.fedavg_tree(stacked, w, flat_mask)
     print(f"legacy fedavg_tree aggregated {len(jax.tree.leaves(agg))} tensors "
           f"({sum(x.size for x in jax.tree.leaves(agg))/1e6:.1f}M values)")
 

@@ -68,7 +68,11 @@ def main() -> None:
         print(monitor.render_task("yolo", yolo_server.history, fed_yolo.n_clients, upload_bytes_per_round=48e6))
 
         # secure aggregation sidebar: server only ever sees masked sums
-        ups = [jax.tree.map(lambda x: x[i], lm_server.state["params"]) for i in range(3)]
+        # (unpacked_params = the flat round state's checkpoint/serve edge)
+        from repro.core import rounds as R
+
+        lm_stacked = R.unpacked_params(lm_server.cfg, lm_server.fed, lm_server.state)
+        ups = [jax.tree.map(lambda x: x[i], lm_stacked) for i in range(3)]
         sec = secure_agg.secure_fedavg(ups, round_idx=0)
         plain = jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs) / 3, *ups)
         err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(jax.tree.leaves(sec), jax.tree.leaves(plain)))

@@ -5,7 +5,12 @@ An :class:`Aggregator` is the server-side policy for one federated round:
 the quant8 base model, server-optimizer moments) and ``aggregate`` maps the
 packed client-stacked update buffer to the packed post-round buffer. All
 modes operate on the single ``(C, N_total)`` buffer from `core.packing`, so
-the hot loop is one masked/weighted reduction regardless of mode.
+the hot loop is one masked/weighted reduction regardless of mode. Under the
+flat engine (DESIGN.md §11) that buffer IS ``state["params"]``: aggregate's
+input arrives as the just-trained round state (written in place through the
+donated jit) and its output becomes next round's state directly — an
+aggregator must therefore never assume a private copy it may scribble on
+beyond returning ``packed'``.
 
 `core.rounds` and `core.server` dispatch purely through :func:`get` — adding
 an aggregation mode is one `@register`-decorated subclass, and
@@ -124,7 +129,9 @@ class Aggregator:
     def _mean(
         self, packed: jax.Array, wmask: jax.Array, mask: jax.Array | None = None
     ) -> tuple[jax.Array, jax.Array]:
-        """One masked bucket-weighted reduction (ref jnp or Pallas kernel).
+        """One masked bucket-weighted reduction (ref jnp or Pallas kernel)
+        -> (global (N,), den (B,) per-BUCKET denominator — expand with
+        packing.expand_bucket_vec, it fuses into the consumer).
 
         The participation mask rides as its own kernel operand so selection
         changes per round without retracing."""

@@ -42,9 +42,12 @@ class StaticTopN(Aggregator):
         self._bucket_mask = mask
 
     def aggregate(self, packed, weights, agg_state, mask=None):
+        from repro.core import packing
+
         wmask = weights.astype(jnp.float32)[:, None] * jnp.asarray(self._bucket_mask)[None, :]
-        g, den = self._mean(packed, wmask, mask)
-        out = jnp.where((den > 0)[None, :], self._broadcast(g, packed), packed)
+        g, den_b = self._mean(packed, wmask, mask)  # den_b: per-bucket (B,)
+        up = packing.expand_bucket_vec(self.ctx.spec, den_b > 0)
+        out = jnp.where(up[None, :], self._broadcast(g, packed), packed)
         return out, agg_state
 
 

@@ -34,6 +34,7 @@ class Eq6(Aggregator):
         v = comp.contribution_scores(agg_state["prev_sums"], new_sums)
         upload = jax.vmap(lambda s: comp.topn_mask(s, self.ctx.fed.topn))(v)
         wmask = upload.astype(jnp.float32) * weights.astype(jnp.float32)[:, None]
-        g, den = self._mean(packed, wmask, mask)
-        out = jnp.where((den > 0)[None, :], self._broadcast(g, packed), packed)
+        g, den_b = self._mean(packed, wmask, mask)  # den_b: per-bucket (B,)
+        up = packing.expand_bucket_vec(self.ctx.spec, den_b > 0)
+        out = jnp.where(up[None, :], self._broadcast(g, packed), packed)
         return out, {"prev_sums": new_sums}

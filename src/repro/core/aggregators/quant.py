@@ -1,15 +1,16 @@
 """quant8: int8-quantized delta upload over the packed buffer.
 
-global = base + wmean_c(dequant(quant(new_c - base))). The transport is an
-explicit int8 all_gather over the client mesh axis inside shard_map, so the
+global = base + wmean_c(dequant(quant(new_c - base))). With a client mesh
+axis the transport is an explicit int8 all_gather inside shard_map, so the
 HLO moves 1-byte operands — ~4x fewer collective bytes than f32 — and it is
-ONE collective over the packed buffer instead of one per leaf. Scale
+ONE collective over the packed buffer instead of one per leaf; the gathered
+payload then feeds a fused decode->reduce (no (C, N) dequant buffer).
+Without a mesh there is no wire to put int8 bytes on, so encode, decode and
+reduction fuse into a single pass (`packing.quant8_mean_ref`, or ONE
+`kernels/pack.quant8_reduce` launch under agg_impl="pallas") —
+clip(round(x/s)) in f32 is bit-identical to the int8 round-trip. Scale
 granularity is one f32 per `FedConfig.quant_block` elements per client row
 (0.4% overhead at the default 1024).
-
-`FedConfig.agg_impl="pallas"` routes the quantize/dequantize through the
-packed row-block kernels (`kernels/pack.quantize_rows`); the default "ref"
-impl uses the numerically identical jnp formulation.
 """
 from __future__ import annotations
 
@@ -40,11 +41,16 @@ class Quant8(Aggregator):
                 )
 
     def init_state(self, packed0):
-        # the dispatched base model each client diffs against next round
-        return {"base": packed0}
+        # the dispatched base model each client diffs against next round —
+        # ONE (N,) row, not (C, N): every client starts from the same
+        # dispatch, and a (C, N) base would alias the flat round state
+        # (aggregate returns the dispatch as both), which the donated jit
+        # rejects as a double-donated buffer
+        return {"base": packed0[0]}
 
     def state_pspecs(self):
-        return {"base": packing.packed_pspec(self.ctx.spec, self.ctx.fed.client_axis, self.ctx.mesh)}
+        ps = packing.packed_pspec(self.ctx.spec, self.ctx.fed.client_axis, self.ctx.mesh)
+        return {"base": P(*ps[1:])}  # the dispatched row: no client dim
 
     def _quant(self, delta, block):
         if self.ctx.fed.agg_impl == "pallas":
@@ -53,38 +59,44 @@ class Quant8(Aggregator):
             return _pk.quantize_rows(delta, block=block)
         return packing.quantize_rows_ref(delta, block)
 
-    def _dequant(self, q, scales, block):
+    def _quant_reduce(self, delta, w, block):
+        """Collective-free transport: encode -> decode -> reduce in one
+        fused pass/launch; the int8 payload never materializes."""
         if self.ctx.fed.agg_impl == "pallas":
             from repro.kernels import pack as _pk
 
-            return _pk.dequantize_rows(q, scales, block=block)
-        return packing.dequantize_rows_ref(q, scales, block)
+            return _pk.quant8_reduce(delta, w, block=block)
+        return packing.quant8_mean_ref(delta, w, block)
 
     def aggregate(self, packed, weights, agg_state, mask=None):
-        base = agg_state["base"]
+        base = agg_state["base"]  # (N,) dispatched global, see init_state
         block = self.ctx.fed.quant_block
         axis = self.ctx.fed.client_axis
         w_eff = self._masked_weights(weights, mask)
 
         def body(new, base_, w):
-            delta = new.astype(jnp.float32) - base_.astype(jnp.float32)  # (C_loc, N)
-            q, scales = self._quant(delta, block)
-            if self.ctx.mesh is not None:
-                q = jax.lax.all_gather(q, axis, axis=0, tiled=True)  # int8 (C, N)
-                scales = jax.lax.all_gather(scales, axis, axis=0, tiled=True)
-            d = self._dequant(q, scales, block)  # (C, N) f32
-            gd = jnp.einsum("c,cn->n", w, d)
-            return (base_.astype(jnp.float32) + gd[None, :]).astype(new.dtype)
+            delta = new.astype(jnp.float32) - base_.astype(jnp.float32)[None, :]
+            q, scales = self._quant(delta, block)  # (C_loc, N) int8
+            q = jax.lax.all_gather(q, axis, axis=0, tiled=True)  # int8 (C, N)
+            scales = jax.lax.all_gather(scales, axis, axis=0, tiled=True)
+            gd = packing.dequant_reduce_ref(q, scales, w, block)
+            g = (base_.astype(jnp.float32) + gd).astype(new.dtype)  # (N_loc,)
+            return jnp.broadcast_to(g[None, :], new.shape)
 
         if self.ctx.mesh is None:
-            out = body(packed, base, w_eff)
+            delta = packed.astype(jnp.float32) - base.astype(jnp.float32)[None, :]
+            gd = self._quant_reduce(delta, w_eff, block)
+            g = (base.astype(jnp.float32) + gd).astype(packed.dtype)
+            out = jnp.broadcast_to(g[None, :], packed.shape)
         else:
             spec = packing.packed_pspec(self.ctx.spec, axis, self.ctx.mesh)
             out = jax.shard_map(
                 body,
                 mesh=self.ctx.mesh,
-                in_specs=(spec, spec, P()),
+                in_specs=(spec, P(*spec[1:]), P()),
                 out_specs=spec,
                 check_vma=False,
             )(packed, base, w_eff)
-        return out, {"base": out}
+        # next round's dispatch: row 0 (a fresh slice — never an alias of
+        # the params buffer, so the donated round stays donate-able)
+        return out, {"base": out[0]}

@@ -1,12 +1,12 @@
-"""Packed-buffer transport for the aggregation engine (DESIGN.md §7).
+"""Packed-buffer transport for the aggregation engine (DESIGN.md §7, §11).
 
-The server's hot loop used to aggregate a client-stacked param *pytree*:
-every mode walked the tree with `tree_map`, launching one (padded) reduction
-per leaf. This module packs the whole tree once per round into a single
-contiguous ``(C, N_total)`` buffer with a precomputed layer-bucket map, so
-every aggregation mode becomes one masked/weighted reduction over one flat
-buffer — a single tiled kernel launch — and the int8 transport quantizes one
-buffer instead of per-leaf fragments.
+The packed ``(C, N_total)`` buffer is the *canonical round state* of the
+flat engine (DESIGN.md §11): ``state["params"]`` IS this buffer, clients
+train on per-leaf views reconstructed from the :class:`PackSpec` slots
+(`unpack_views` — reshape-of-slice, fused into consumers under jit), and
+trained leaves are written back in place with `write_slots` (donated-buffer
+dynamic-update-slices). ``pack`` / ``unpack`` survive only at the edges:
+``make_state``, checkpoint PUT, and model dispatch to serving.
 
 Layer buckets reuse `compression.leaf_layer_ids`: each slot of the buffer
 spans a contiguous range of Eq. 6 score buckets (scan-stacked layers map to
@@ -15,6 +15,14 @@ The bucket structure is kept *slot-wise* (offset + bucket count per leaf)
 rather than as a materialized per-element id vector, so building a
 ``PackSpec`` for a 314B-param arch costs nothing; the explicit ``(N,)`` id
 vector is only materialized for the Pallas kernel path and benchmarks.
+
+Reduction tiling (the CPU-reference side of the §11 re-tile): XLA CPU runs
+ONE whole-buffer elementwise fusion multi-threaded, but serializes a
+concat of many small per-slot fusions, and batched/sliced dot_generals
+transpose-copy their operands. The reducers below therefore lower to a
+small number of fused multiply-add chains over *maximal merged runs* of
+slots (`merged_runs`), with the 1/den division folded into the per-bucket
+weights so no (C, N) weight or intermediate buffer ever materializes.
 """
 from __future__ import annotations
 
@@ -133,18 +141,90 @@ def unpack(spec: PackSpec, packed: jax.Array, like: PyTree) -> PyTree:
     return jax.tree.unflatten(treedef, out)
 
 
+def unpack_views(spec: PackSpec, packed: jax.Array, like: PyTree) -> PyTree:
+    """Per-leaf *views* of the packed round state: reshape-of-slice only.
+
+    The flat engine's replacement for `unpack` inside the jitted round: each
+    leaf is ``packed[:, off:off+size].reshape((C,) + shape)`` in the buffer's
+    own dtype, so XLA fuses the slice into whatever consumes the leaf — no
+    (C, N_total) copy materializes on the round boundary. `like` supplies
+    only the tree structure (a ParamInfo template or any matching pytree);
+    dtype-converting reconstruction is `unpack`'s job and stays at the edges.
+    """
+    from repro.models.params import is_info
+
+    treedef = jax.tree.structure(like, is_leaf=is_info)
+    C = packed.shape[0]
+    out = [
+        jax.lax.slice_in_dim(packed, s.offset, s.offset + s.size, axis=1).reshape((C,) + s.shape)
+        for s in spec.slots
+    ]
+    return jax.tree.unflatten(treedef, out)
+
+
+def write_slots(spec: PackSpec, packed: jax.Array, stacked: PyTree) -> jax.Array:
+    """Write trained leaves back into the packed buffer (unpack_views'
+    inverse). One dynamic-update-slice per slot; under the donated round jit
+    XLA aliases these into the incoming buffer, so the write-back is the
+    only data movement on the round boundary — there is no pack concat."""
+    C = packed.shape[0]
+    for s, leaf in zip(spec.slots, jax.tree.leaves(stacked)):
+        packed = jax.lax.dynamic_update_slice(
+            packed, leaf.reshape(C, s.size).astype(packed.dtype), (0, s.offset)
+        )
+    return packed
+
+
+# ---------------------------------------------------------------------------
+# reduction tiling: maximal merged runs of uniform-width buckets
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=16)
+def merged_runs(spec: PackSpec) -> tuple[tuple[int, int, int, int], ...]:
+    """Maximal contiguous (column, bucket) runs with one per-bucket width.
+
+    Each run ``(col0, bucket0, n_buckets, per)`` satisfies
+    ``bucket(col0 + i) == bucket0 + i // per``: adjacent slots merge when
+    both their columns and their bucket ranges continue the run (scan-stacked
+    leaves of one tensor; same-shape misc tensors do NOT merge — they share
+    one bucket). The fused reducers iterate runs, not slots, so a uniform
+    32-leaf buffer is ONE multiply-add chain XLA can thread across.
+    """
+    runs: list[tuple[int, int, int, int]] = []
+    for s in spec.slots:
+        if runs:
+            col0, b0, nb, per = runs[-1]
+            if (
+                per == s.per_bucket
+                and s.offset == col0 + nb * per
+                and s.bucket_off == b0 + nb
+            ):
+                runs[-1] = (col0, b0, nb + s.n_buckets, per)
+                continue
+        runs.append((s.offset, s.bucket_off, s.n_buckets, s.per_bucket))
+    return tuple(runs)
+
+
+# clients beyond this fall back to contraction ops: the fused chains unroll
+# one multiply-add per client, which only beats the dot engine for small C
+CHAIN_MAX_CLIENTS = 32
+
+
 # ---------------------------------------------------------------------------
 # bucket <-> element maps (no N-sized constants: slot-wise broadcasts)
 # ---------------------------------------------------------------------------
 
 def expand_bucket_vec(spec: PackSpec, vec: jax.Array) -> jax.Array:
-    """(..., n_buckets) bucket vector -> (..., N_total) per-element vector."""
+    """(..., n_buckets) bucket vector -> (..., N_total) per-element vector.
+
+    Iterates `merged_runs`, not slots: a uniform buffer expands as ONE
+    broadcast instead of one slice/broadcast/concat triple per leaf."""
     parts = []
-    for s in spec.slots:
-        v = jax.lax.slice_in_dim(vec, s.bucket_off, s.bucket_off + s.n_buckets, axis=-1)
-        v = jnp.broadcast_to(v[..., None], v.shape + (s.per_bucket,))
-        parts.append(v.reshape(v.shape[:-2] + (s.size,)))
-    return jnp.concatenate(parts, axis=-1)
+    for (_, b0, nb, per) in merged_runs(spec):
+        v = jax.lax.slice_in_dim(vec, b0, b0 + nb, axis=-1)
+        v = jnp.broadcast_to(v[..., None], v.shape + (per,))
+        parts.append(v.reshape(v.shape[:-2] + (nb * per,)))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=-1)
 
 
 def bucket_sums(spec: PackSpec, packed: jax.Array) -> jax.Array:
@@ -170,15 +250,24 @@ def weighted_mean(packed: jax.Array, weights: jax.Array, mask: jax.Array | None 
     """Unmasked Eq. 5 over the flat buffer: (C, N), (C,) -> (N,) f32.
 
     The fast path for modes whose upload mask is uniform across buckets
-    (dense, server-optimizer): one flat contraction, no bucket machinery.
-    `mask` is the optional (C,) 0/1 participation vector from the scheduler
-    — masked-out client rows drop from both numerator and denominator.
+    (dense, server-optimizer). `mask` is the optional (C,) 0/1 participation
+    vector from the scheduler — masked-out client rows drop from both
+    numerator and denominator. The 1/sum(w) normalization is folded into the
+    per-client weights, so the reduction is a single whole-buffer fused
+    multiply-add chain (one threaded XLA fusion; see module docstring) for
+    small C, or one contraction beyond CHAIN_MAX_CLIENTS.
     """
+    C = packed.shape[0]
     w = weights.astype(jnp.float32)
     if mask is not None:
         w = w * mask.astype(jnp.float32)
-    num = jnp.einsum("c,cn->n", w, packed.astype(jnp.float32))
-    return num / jnp.maximum(jnp.sum(w), 1e-12)
+    wn = w / jnp.maximum(jnp.sum(w), 1e-12)
+    if C > CHAIN_MAX_CLIENTS:
+        return jnp.einsum("c,cn->n", wn, packed.astype(jnp.float32))
+    acc = packed[0].astype(jnp.float32) * wn[0]
+    for c in range(1, C):
+        acc = acc + packed[c].astype(jnp.float32) * wn[c]
+    return acc
 
 
 def masked_bucket_mean(
@@ -194,32 +283,73 @@ def masked_bucket_mean(
 
     packed: (C, N); wmask: (C, B) — participation weight times the 0/1
     upload mask per score bucket; mask: optional (C,) 0/1 participation
-    vector (None -> everyone). Returns (global (N,) f32, den (N,) f32):
-    ``global[n] = sum_c mask[c] wmask[c, bucket(n)] x[c, n] / den[n]`` with
-    ``den[n] = sum_c mask[c] wmask[c, bucket(n)]`` (0 where nobody uploaded).
+    vector (None -> everyone). Returns (global (N,) f32, den (B,) f32):
+    ``global[n] = sum_c mask[c] wmask[c, b(n)] x[c, n] / den[b(n)]`` with
+    ``den[b] = sum_c mask[c] wmask[c, b]`` (0 where nobody uploaded). den is
+    the per-BUCKET denominator — expand with `expand_bucket_vec` (consumers
+    fuse the expansion into their own passes; a materialized (N,) den would
+    cost the reduction an extra write pass for pure bookkeeping).
+
+    The ref impl folds 1/den into the per-bucket weights and runs one fused
+    multiply-add chain per `merged_runs` tile — no (C, N) weight expansion,
+    no per-slot dot_generals (XLA CPU transpose-copies their operands), and
+    the division costs no extra pass over the buffer.
     """
+    C = packed.shape[0]
+    wm = wmask.astype(jnp.float32)
+    if mask is not None:
+        wm = wm * mask.astype(jnp.float32)[:, None]
+    den_b = jnp.sum(wm, axis=0)  # (B,)
     if impl == "pallas":
         from repro.kernels import pack as _pk  # deferred: kernels are optional here
 
         ids = jnp.asarray(bucket_ids(spec))
-        num, den = _pk.packed_bucket_reduce(packed, wmask, ids, mask, interpret=interpret)
+        # the tile bound MUST be computed for the kernel's actual N-block
+        # width — a wider block spans more buckets than a narrower bound
+        # and the out-of-window ids would silently one-hot to zero
+        num, den = _pk.packed_bucket_reduce(
+            packed, wmask, ids, mask,
+            interpret=interpret, bucket_tile=bucket_tile_bound(spec, _pk.BLOCK_N),
+        )
+        return num / jnp.maximum(den, 1e-12), den_b
+    wn = wm / jnp.maximum(den_b, 1e-12)[None, :]
+    runs = merged_runs(spec)
+    if C > CHAIN_MAX_CLIENTS:
+        parts = [
+            jnp.einsum(
+                "cb,cbp->bp",
+                jax.lax.slice_in_dim(wn, b0, b0 + nb, axis=1),
+                packed[:, col0 : col0 + nb * per].astype(jnp.float32).reshape(C, nb, per),
+            ).reshape(nb * per)
+            for (col0, b0, nb, per) in runs
+        ]
     else:
-        # slot-wise einsum: reads `packed` once and never materializes a
-        # (C, N) weight buffer — each slot's buckets are contiguous, so the
-        # per-bucket weights contract directly against (C, nb, per) views
-        C = packed.shape[0]
-        wm = wmask.astype(jnp.float32)
-        if mask is not None:
-            wm = wm * mask.astype(jnp.float32)[:, None]
         parts = []
-        for s in spec.slots:
-            x = packed[:, s.offset : s.offset + s.size].astype(jnp.float32)
-            x = x.reshape(C, s.n_buckets, s.per_bucket)
-            w = jax.lax.slice_in_dim(wm, s.bucket_off, s.bucket_off + s.n_buckets, axis=1)
-            parts.append(jnp.einsum("cb,cbp->bp", w, x).reshape(s.size))
-        num = jnp.concatenate(parts)
-        den = expand_bucket_vec(spec, jnp.sum(wm, axis=0))
-    return num / jnp.maximum(den, 1e-12), den
+        for (col0, b0, nb, per) in runs:
+            xs = jax.lax.slice_in_dim(packed, col0, col0 + nb * per, axis=1)
+            xs = xs.astype(jnp.float32).reshape(C, nb, per)
+            wt = jax.lax.slice_in_dim(wn, b0, b0 + nb, axis=1)  # (C, nb)
+            acc = xs[0] * wt[0][:, None]
+            for c in range(1, C):
+                acc = acc + xs[c] * wt[c][:, None]
+            parts.append(acc.reshape(nb * per))
+    g = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return g, den_b
+
+
+@functools.lru_cache(maxsize=16)
+def bucket_tile_bound(spec: PackSpec, block_n: int = 1024) -> int:
+    """Max distinct buckets any block_n-aligned window of the packed buffer
+    touches (padding id B included) — the Pallas kernel's bucket-tile width.
+    Host-side and cached: derived from slot metadata via the id vector."""
+    ids = bucket_ids(spec)
+    pad = (-len(ids)) % block_n
+    if pad:
+        ids = np.concatenate([ids, np.full(pad, spec.n_buckets, np.int32)])
+    win = ids.reshape(-1, block_n)
+    # ids need not be monotonic across slot boundaries (a later slot can
+    # restart at bucket 0), so the span is max - min per window
+    return int((win.max(axis=1) - win.min(axis=1)).max()) + 1
 
 
 # ---------------------------------------------------------------------------
@@ -242,3 +372,54 @@ def dequantize_rows_ref(q: jax.Array, scales: jax.Array, block: int, dtype=jnp.f
     pad = (-N) % block
     qb = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, pad))).reshape(C, -1, block)
     return (qb * scales[..., None]).reshape(C, -1)[:, :N].astype(dtype)
+
+
+def quant8_mean_ref(delta: jax.Array, weights: jax.Array, block: int) -> jax.Array:
+    """Fused quant8 encode -> reduce: (C, N), (C,) -> (N,) f32 weighted sum
+    of dequant(quant(delta)) with NO materialized int8 payload or (C, N)
+    dequant buffer. ``clip(round(x/s), -127, 127)`` in f32 is bit-identical
+    to the int8 round-trip (|q| <= 127 is exact in f32), so this is the
+    collective-free transport path: per-client dequantized rows feed one
+    fused multiply-add chain. Weights are used as-is (the scheduler
+    normalizes them); fold the participation mask in before calling.
+    """
+    C, N = delta.shape
+    pad = (-N) % block
+    x = jnp.pad(delta.astype(jnp.float32), ((0, 0), (0, pad)))
+    w = weights.astype(jnp.float32)
+
+    def dq(row):  # (N+pad,) -> dequantized (N+pad,) f32
+        xb = row.reshape(-1, block)
+        amax = jnp.max(jnp.abs(xb), axis=-1)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127)
+        return (q * scale[:, None]).reshape(-1)
+
+    if C > CHAIN_MAX_CLIENTS:
+        acc = jnp.einsum("c,cn->n", w, jax.vmap(dq)(x))
+    else:
+        acc = dq(x[0]) * w[0]
+        for c in range(1, C):
+            acc = acc + dq(x[c]) * w[c]
+    return acc[:N] if pad else acc
+
+
+def dequant_reduce_ref(q: jax.Array, scales: jax.Array, weights: jax.Array, block: int) -> jax.Array:
+    """Fused decode -> reduce for the gathered int8 transport: (C, N) int8 +
+    (C, ceil(N/block)) scales + (C,) weights -> (N,) f32 weighted sum,
+    without materializing the (C, N) f32 dequant buffer."""
+    C, N = q.shape
+    pad = (-N) % block
+    qp = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, pad)))
+    w = weights.astype(jnp.float32)
+
+    def dq(row, s):
+        return (row.reshape(-1, block) * s[:, None]).reshape(-1)
+
+    if C > CHAIN_MAX_CLIENTS:
+        acc = jnp.einsum("c,cn->n", w, jax.vmap(dq)(qp, scales))
+    else:
+        acc = dq(qp[0], scales[0]) * w[0]
+        for c in range(1, C):
+            acc = acc + dq(qp[c], scales[c]) * w[c]
+    return acc[:N] if pad else acc

@@ -1,13 +1,28 @@
 """fed_round: one federated round as a single jit-able SPMD program.
 
-Structure (DESIGN.md §4, §8):
-  1. `vmap` of the local trainer over the client-stacked state — each mesh
-     slice along the client axis trains its own divergent model copy for
-     E local steps (lax.scan), with *no* cross-client collectives;
-  2. aggregation: the client-stacked param tree is packed once into a single
-     (C, N_total) buffer (core.packing) and handed to the configured
-     :mod:`repro.core.aggregators` strategy — one masked/weighted reduction
-     per round regardless of mode (DESIGN.md §7).
+Flat-state engine (DESIGN.md §11): for every client-stacked aggregator the
+canonical round state ``state["params"]`` IS the packed ``(C, N_total)``
+buffer from `core.packing`. One round:
+  1. per-leaf *views* of the buffer are reconstructed from the PackSpec
+     slots (`packing.unpack_views` — reshape-of-slice, fused into the
+     training consumers, no copy);
+  2. `vmap` of the local trainer over the views — each mesh slice along the
+     client axis trains its own divergent model copy for E local steps
+     (lax.scan), with *no* cross-client collectives;
+  3. trained leaves are written back in place (`packing.write_slots`) and
+     the buffer goes STRAIGHT to the configured
+     :mod:`repro.core.aggregators` strategy — no pack concat, no unpack
+     copy on the round boundary; pack/unpack survive only at the
+     `make_state` / checkpoint / serving edges.
+Jit the round with :func:`jit_fed_round` so the state (and with it the
+packed operand chain) is donated — XLA aliases the round's buffers in
+place instead of double-buffering the model state.
+
+``FedConfig.state_layout="tree"`` keeps the PR 3 engine (param pytree state,
+pack -> aggregate -> unpack each round) as the numerical reference:
+tests/test_flat_engine.py pins the flat engine against it bit-for-bit under
+full participation (1-2 ulp under masked/compact, where the surrounding
+program shape changes the compiler's FMA contraction choices).
 
 Partial participation (DESIGN.md §8): the Task Scheduler's selection enters
 the jitted round as a *traced* participation pytree (`participation_input`),
@@ -21,7 +36,8 @@ picks the round body:
   - ``compact``— a static budget K = max_participants gathers the selected
                  client rows into a compact (K, ...) axis, trains only
                  those, and scatters back — per-round local-training work is
-                 K/C of full participation.
+                 K/C of full participation (on the flat state the gather is
+                 K rows of the packed buffer).
 
 There is no mode-specific branching here: `FedConfig.aggregation` names any
 registered aggregator, whose cross-round state lives under ``state["agg"]``.
@@ -32,6 +48,8 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +83,7 @@ class FedConfig:
     trim_ratio: float = 0.25  # trimmed_mean: fraction trimmed per side (>=1 client)
     participation: str = "full"  # full | masked | compact (DESIGN.md §8)
     max_participants: int = 0  # compact: static per-round budget K (0 -> C)
+    state_layout: str = "flat"  # flat (packed (C,N) round state) | tree (PR 3 reference)
 
 
 def loss_for(cfg: ArchConfig) -> Callable:
@@ -107,6 +126,14 @@ def batch_pspecs(batch_template: PyTree, fed: FedConfig) -> PyTree:
 # State
 # ---------------------------------------------------------------------------
 
+def _layout(fed: FedConfig) -> str:
+    if fed.state_layout not in ("flat", "tree"):
+        raise ValueError(
+            f"unknown state_layout {fed.state_layout!r}; expected flat|tree"
+        )
+    return fed.state_layout
+
+
 def state_template(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, dtype) -> PyTree:
     """Abstract FedState (ShapeDtypeStructs) for dry-run lowering."""
     agg = make_aggregator(cfg, fed)
@@ -120,8 +147,12 @@ def state_template(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, dtype)
         )
     opt_abs = jax.eval_shape(optimizer.init, pabs)
     packed_abs = jax.ShapeDtypeStruct((fed.n_clients, agg.ctx.spec.n_total), dtype)
+    if agg.stacked and _layout(fed) == "flat":
+        params_abs = packed_abs  # the packed buffer IS the round state
+    else:
+        params_abs = stack(pabs)
     return {
-        "params": stack(pabs),
+        "params": params_abs,
         "opt": stack(opt_abs),
         "agg": jax.eval_shape(agg.init_state, packed_abs) if agg.stacked else {},
         "round": jax.ShapeDtypeStruct((), jnp.int32),
@@ -139,8 +170,18 @@ def make_state(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, rng, dtype
     # clients start from the same global model (server dispatch)
     params = jax.tree.map(lambda x: jnp.broadcast_to(x[:1], x.shape), params)
     opt = jax.vmap(optimizer.init)(params)
-    # pack the initial params only for aggregators that keep packed state —
-    # eval_shape first so stateless modes skip the O(C*N) concat entirely
+    if _layout(fed) == "flat":
+        # the ONE pack of the flat engine: init is an edge, not the round
+        packed = packing.pack(agg.ctx.spec, params, dtype)
+        return {
+            "params": packed,
+            "opt": opt,
+            "agg": agg.init_state(packed),
+            "round": jnp.int32(0),
+        }
+    # tree layout: pack the initial params only for aggregators that keep
+    # packed state — eval_shape first so stateless modes skip the O(C*N)
+    # concat entirely
     packed_abs = jax.ShapeDtypeStruct((fed.n_clients, agg.ctx.spec.n_total), dtype)
     agg_abs = jax.eval_shape(agg.init_state, packed_abs)
     agg_state = (
@@ -156,6 +197,20 @@ def make_state(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, rng, dtype
     }
 
 
+def unpacked_params(cfg: ArchConfig, fed: FedConfig, state: PyTree, dtype=jnp.float32) -> PyTree:
+    """Edge helper: the client-stacked param *pytree* from a FedState,
+    whatever the layout — flat states unpack (one copy, edge cost), tree and
+    fedsgd states pass through."""
+    params = state["params"]
+    if not isinstance(params, jax.Array):
+        return params
+    tpl = make_template(cfg)
+    spec = packing.build_pack_spec(cfg, tpl)
+    like = jax.tree.map(lambda i: jax.ShapeDtypeStruct(i.shape, dtype), tpl,
+                        is_leaf=mp.is_info)
+    return packing.unpack(spec, params, like)
+
+
 def state_pspecs(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, rules: dict | None = None, opt_rules: dict | None = None) -> PyTree:
     """opt_rules: optional separate sharding rules for optimizer moments —
     ZeRO-1 style (moments sharded over data while params stay TP-only)."""
@@ -165,8 +220,13 @@ def state_pspecs(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, rules: d
         pspec = mp.pspecs(tpl, rules)
         mspec = mp.pspecs(tpl, opt_rules) if opt_rules else pspec
     else:
-        pspec = stacked_pspecs(tpl, fed.client_axis, rules)
-        mspec = stacked_pspecs(tpl, fed.client_axis, opt_rules) if opt_rules else pspec
+        tree_pspec = stacked_pspecs(tpl, fed.client_axis, rules)
+        pspec = (
+            packing.packed_pspec(agg.ctx.spec, fed.client_axis)
+            if _layout(fed) == "flat"
+            else tree_pspec
+        )
+        mspec = stacked_pspecs(tpl, fed.client_axis, opt_rules) if opt_rules else tree_pspec
     opt_shape = jax.eval_shape(optimizer.init, mp.abstract(tpl, jnp.float32))
     ospec = {k: (mspec if k in ("mu", "m", "v") else P()) for k in opt_shape}
     return {
@@ -207,6 +267,14 @@ def participation_input(fed: FedConfig, mask, weights, idx=None) -> dict:
                 f"compact idx has shape {idx.shape}; the static budget is "
                 f"({static_budget(fed)},) — the scheduler must emit exactly K indices"
             )
+        if len(np.unique(np.asarray(idx))) != idx.shape[0]:
+            # the engines rely on distinctness: gather/scatter by idx must
+            # be invertible (and the K == C flat fast path treats idx as a
+            # permutation) — a duplicate would silently train a client twice
+            raise ValueError(
+                f"compact idx {np.asarray(idx).tolist()} has duplicate "
+                "client indices; the scheduler must select K distinct clients"
+            )
         part["idx"] = idx
     return part
 
@@ -235,13 +303,16 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
     the `participation_input` pytree {mask, weights[, idx]} from the
     scheduler. metrics: {"loss": participant mean, "client_loss": (C,)}.
 
+    `FedConfig.state_layout` picks the engine: "flat" trains on slot views
+    of the packed (C, N_total) round state and writes back in place (jit via
+    `jit_fed_round` to donate the state); "tree" is the PR 3 reference
+    (param pytree state, pack -> aggregate -> unpack every round).
+
     `rules` shapes the per-leaf training-state shardings (consumed via
     state_pspecs by the launcher); the packed aggregation operand itself
     shards (client_axis, "model") when divisible — packing.packed_pspec.
     """
     agg = make_aggregator(cfg, fed, mesh)
-    loss_fn = loss_for(cfg)
-    spec = agg.ctx.spec
     if fed.participation not in ("full", "masked", "compact"):
         raise ValueError(
             f"unknown participation {fed.participation!r}; expected full|masked|compact"
@@ -258,6 +329,27 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
                 f"compact participation: max_participants={fed.max_participants} "
                 f"must be in [1, n_clients={fed.n_clients}]"
             )
+    if _layout(fed) == "tree":
+        return _build_tree_round(cfg, fed, optimizer, agg)
+    return _build_flat_round(cfg, fed, optimizer, agg)
+
+
+def jit_fed_round(round_fn: Callable) -> Callable:
+    """Jit a fed_round with the state donated (DESIGN.md §11 donation
+    contract): the incoming FedState's buffers — including the packed
+    (C, N_total) params of the flat engine — are reused in place by XLA, so
+    the round holds ONE copy of the model state instead of two. Callers must
+    drop the old state (``state, m = fr(state, ...)``); timing loops that
+    replay one state must use plain `jax.jit`."""
+    return jax.jit(round_fn, donate_argnums=(0,))
+
+
+def _local_training(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer):
+    """The shared per-client training kernels: (local_train,
+    gated_local_train) over param/opt pytrees — identical computation in
+    both state layouts (the flat engine feeds slot views instead of
+    materialized leaves)."""
+    loss_fn = loss_for(cfg)
 
     def grads_of(params, step_batch):
         """Gradients for one local step, with microbatch accumulation.
@@ -305,9 +397,66 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
             params, opt, client_batch,
         )
 
-    def train_clients(state, batch, mask, idx):
-        """Dispatch on the participation mode; returns (new_p, new_o,
-        client_loss (C,))."""
+    return local_train, gated_local_train
+
+
+def _train_clients_fn(fed: FedConfig, local_train, gated_local_train):
+    """full/masked dispatch over materialized-or-view param trees; compact's
+    gather/scatter stays with each engine (it moves state rows)."""
+
+    def train_clients(params, opt, batch, mask):
+        if fed.participation == "masked":
+            on = jnp.ones((fed.n_clients,), jnp.float32) if mask is None else mask
+            return jax.vmap(gated_local_train, spmd_axis_name=fed.client_axis)(
+                on, params, opt, batch
+            )
+        return jax.vmap(local_train, spmd_axis_name=fed.client_axis)(params, opt, batch)
+
+    return train_clients
+
+
+def _round_metrics(fed: FedConfig, loss, mask):
+    if mask is None:
+        mean_loss = jnp.mean(loss)
+    else:
+        mean_loss = jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return {"loss": mean_loss, "client_loss": loss}
+
+
+def _check_compact_idx(fed: FedConfig, idx):
+    if fed.participation == "compact" and idx is None:
+        raise ValueError(
+            "compact participation: pass participation_input(fed, mask, "
+            "weights, idx), not a bare weight vector"
+        )
+
+
+def _fedsgd_round(fed: FedConfig, local_train, state, batch):
+    # FedSGD-equivalent: clients = data-parallel shards, E=1,
+    # param-averaging == gradient-averaging (DESIGN.md §5). One
+    # shared model copy, so FSDP-style rules fit huge archs.
+    p, o, loss = local_train(state["params"], state["opt"], batch)
+    return (
+        {**state, "params": p, "opt": o, "round": state["round"] + 1},
+        {"loss": loss, "client_loss": jnp.full((fed.n_clients,), loss)},
+    )
+
+
+def _build_tree_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, agg) -> Callable:
+    """The PR 3 engine: pytree state, pack -> aggregate -> unpack per round.
+
+    Kept verbatim as the numerical reference for the flat engine — the
+    equivalence suite demands bit-for-bit agreement, so the computation here
+    must not drift."""
+    spec = agg.ctx.spec
+    local_train, gated = _local_training(cfg, fed, optimizer)
+    train_clients = _train_clients_fn(fed, local_train, gated)
+
+    def fed_round(state, batch, part):
+        weights, mask, idx = _parse_participation(fed, part)
+        if not agg.stacked:
+            return _fedsgd_round(fed, local_train, state, batch)
+        _check_compact_idx(fed, idx)
         if fed.participation == "compact":
             # gather the K selected client rows into a compact axis: local
             # training runs K clients' worth of work, not C (DESIGN.md §8).
@@ -317,33 +466,9 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
             )
             put = lambda full, upd: jax.tree.map(lambda x, u: x.at[idx].set(u), full, upd)
             loss = jnp.zeros((fed.n_clients,), jnp.float32).at[idx].set(loss_k)
-            return put(state["params"], p_k), put(state["opt"], o_k), loss
-        if fed.participation == "masked":
-            on = jnp.ones((fed.n_clients,), jnp.float32) if mask is None else mask
-            return jax.vmap(gated_local_train, spmd_axis_name=fed.client_axis)(
-                on, state["params"], state["opt"], batch
-            )
-        return jax.vmap(local_train, spmd_axis_name=fed.client_axis)(
-            state["params"], state["opt"], batch
-        )
-
-    def fed_round(state, batch, part):
-        weights, mask, idx = _parse_participation(fed, part)
-        if not agg.stacked:
-            # FedSGD-equivalent: clients = data-parallel shards, E=1,
-            # param-averaging == gradient-averaging (DESIGN.md §5). One
-            # shared model copy, so FSDP-style rules fit huge archs.
-            p, o, loss = local_train(state["params"], state["opt"], batch)
-            return (
-                {**state, "params": p, "opt": o, "round": state["round"] + 1},
-                {"loss": loss, "client_loss": jnp.full((fed.n_clients,), loss)},
-            )
-        if fed.participation == "compact" and idx is None:
-            raise ValueError(
-                "compact participation: pass participation_input(fed, mask, "
-                "weights, idx), not a bare weight vector"
-            )
-        new_p, new_o, loss = train_clients(state, batch, mask, idx)
+            new_p, new_o = put(state["params"], p_k), put(state["opt"], o_k)
+        else:
+            new_p, new_o, loss = train_clients(state["params"], state["opt"], batch, mask)
         packed = packing.pack(spec, new_p)
         packed_out, agg_state = agg.aggregate(packed, weights, state["agg"], mask)
         out = {
@@ -353,11 +478,66 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
             "agg": agg_state,
             "round": state["round"] + 1,
         }
-        if mask is None:
-            mean_loss = jnp.mean(loss)
+        return out, _round_metrics(fed, loss, mask)
+
+    return fed_round
+
+
+def _build_flat_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, agg) -> Callable:
+    """The flat-state engine (DESIGN.md §11): state["params"] is the packed
+    (C, N_total) buffer. Training consumes slot views (reshape-of-slice) and
+    writes trained leaves back in place; the aggregator reads the buffer
+    directly — the per-round pack/unpack copies of the tree engine are gone,
+    and under `jit_fed_round`'s donation XLA reuses the state buffers."""
+    spec = agg.ctx.spec
+    tpl = agg.ctx.template
+    local_train, gated = _local_training(cfg, fed, optimizer)
+    train_clients = _train_clients_fn(fed, local_train, gated)
+
+    def fed_round(state, batch, part):
+        weights, mask, idx = _parse_participation(fed, part)
+        if not agg.stacked:
+            return _fedsgd_round(fed, local_train, state, batch)
+        _check_compact_idx(fed, idx)
+        packed = state["params"]
+        if fed.participation == "compact" and static_budget(fed) == fed.n_clients:
+            # K == C: the scheduler's idx is a permutation, so gathering
+            # rows by idx and scattering them back is an identity — train
+            # the views directly and skip two (C, N) row moves. No loss
+            # scatter either: the vmap output is already in client order
+            # (gather-then-scatter by the same permutation would restore
+            # exactly this ordering).
+            p_k, o_k, loss = jax.vmap(local_train)(
+                packing.unpack_views(spec, packed, tpl), state["opt"], batch
+            )
+            packed_new = packing.write_slots(spec, packed, p_k)
+            new_o = o_k
+        elif fed.participation == "compact":
+            # K rows of the packed buffer gather into the compact axis; the
+            # trained rows scatter straight back — row moves, not tree walks
+            take = lambda t: jax.tree.map(lambda x: jnp.take(x, idx, axis=0), t)
+            sub = jnp.take(packed, idx, axis=0)  # (K, N)
+            p_k, o_k, loss_k = jax.vmap(local_train)(
+                packing.unpack_views(spec, sub, tpl), take(state["opt"]), take(batch)
+            )
+            put = lambda full, upd: jax.tree.map(lambda x, u: x.at[idx].set(u), full, upd)
+            loss = jnp.zeros((fed.n_clients,), jnp.float32).at[idx].set(loss_k)
+            packed_new = packed.at[idx].set(packing.write_slots(spec, sub, p_k))
+            new_o = put(state["opt"], o_k)
         else:
-            mean_loss = jnp.sum(loss * mask) / jnp.maximum(jnp.sum(mask), 1.0)
-        return out, {"loss": mean_loss, "client_loss": loss}
+            new_p, new_o, loss = train_clients(
+                packing.unpack_views(spec, packed, tpl), state["opt"], batch, mask
+            )
+            packed_new = packing.write_slots(spec, packed, new_p)
+        packed_out, agg_state = agg.aggregate(packed_new, weights, state["agg"], mask)
+        out = {
+            **state,
+            "params": packed_out,
+            "opt": new_o,
+            "agg": agg_state,
+            "round": state["round"] + 1,
+        }
+        return out, _round_metrics(fed, loss, mask)
 
     return fed_round
 

