@@ -1,0 +1,198 @@
+"""Async-vs-sync convergence on the simulated wall clock (DESIGN.md §12).
+
+The paper's deployment regime: camera-edge clients whose upload times and
+load spikes — not FLOPs — set the round period. The sync engine waits for
+the slowest selected client every round, so time-to-loss degrades with the
+straggler fraction; the buffered async engine flushes after ``buffer_size``
+landed updates and discounts stale ones, so its flush period tracks the
+*fast* clients. `async_sweep_rows` measures both engines' simulated
+time-to-target-loss under the same `ClientLoadModel` + bandwidth terms at
+straggler fractions {0.125, 0.25, 0.5}; async must win at 0.25 (the row
+carries the speedup and the bench FAILS otherwise, like the eq6 guard).
+
+`equivalence_rows` is the cheap CI tripwire (`benchmarks/run.py --smoke`):
+async with ``buffer_size == C``, a zero-variance load model, and alpha=0
+must reproduce the flat sync round BIT-FOR-BIT after two rounds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import packing
+from repro.core import rounds as R
+from repro.core.async_engine import (
+    BufferedAsyncEngine,
+    TimingModel,
+    default_upload_terms,
+    sync_round_seconds,
+)
+from repro.core.explorer import ClientLoadModel, LoadModelConfig
+from repro.core.rounds import FedConfig
+from repro.core.simclock import SimClock
+from repro.data.pipeline import fed_batches
+from repro.optim import sgd
+
+CFG = get_arch("qwen3-1.7b").reduced()
+CLIENTS = 8
+BATCH = 4
+SEQ = 32
+LR = 0.05
+SYNC_ROUNDS = 8
+ASYNC_BUDGET = 4 * SYNC_ROUNDS  # flushes; sim time, not flush count, is the metric
+BUFFER = CLIENTS // 2
+ALPHA = 0.5
+# straggler compute dominates: healthy round ~ tens of seconds, a spiked or
+# chronically hot client ~ minutes — the paper's camera-edge regime
+TIMING = TimingModel(base_compute_s=20.0, uplink_spread=0.3)
+
+
+def _fed(mode: str, **kw) -> FedConfig:
+    return FedConfig(
+        n_clients=CLIENTS, local_steps=1, aggregation="dense",
+        client_axis="data", data_axis=None, mode=mode, **kw,
+    )
+
+
+def _load_model(frac: float, seed: int) -> ClientLoadModel:
+    return ClientLoadModel(
+        CLIENTS, seed=seed, config=LoadModelConfig(straggler_frac=frac)
+    )
+
+
+def _batches(fed: FedConfig, seed: int = 0):
+    return (
+        jax.tree.map(jnp.asarray, b)
+        for b in fed_batches(CFG, fed, batch=BATCH, seq=SEQ, seed=seed)
+    )
+
+
+def _run_sync(frac: float, seed: int = 0) -> list[tuple[float, float]]:
+    """(sim_time, loss) per round: the server waits for the slowest client."""
+    fed = _fed("sync")
+    opt = sgd(LR)
+    clock = SimClock()
+    lm = _load_model(frac, seed)
+    spec = packing.build_pack_spec(CFG, R.make_template(CFG))
+    # the ONE derivation the async engine uses too: same seed, same uplinks
+    upload = default_upload_terms(TIMING, CLIENTS, spec.n_total, seed)
+    state = R.make_state(CFG, fed, opt, jax.random.key(seed))
+    fr = R.jit_fed_round(R.build_fed_round(CFG, fed, opt))
+    w = R.uniform_weights(CLIENTS)
+    src = _batches(fed, seed)
+    trace = []
+    for _ in range(SYNC_ROUNDS):
+        dur = sync_round_seconds(TIMING, lm.loads, upload, fed.local_steps)
+        state, m = fr(state, next(src), w)
+        clock.advance(dur)
+        lm.step(dur)
+        trace.append((clock.now(), float(m["loss"])))
+    return trace
+
+
+def _run_async(frac: float, seed: int = 0) -> list[tuple[float, float]]:
+    """(sim_time, loss) per flush of the buffered engine."""
+    fed = _fed("async", buffer_size=BUFFER, staleness_alpha=ALPHA)
+    eng = BufferedAsyncEngine(
+        CFG, fed, sgd(LR), seed=seed,
+        load_model=_load_model(frac, seed), timing=TIMING,
+    )
+    src = _batches(fed, seed)
+    trace = []
+    for _ in range(ASYNC_BUDGET):
+        rec = eng.step_round(next(src))
+        trace.append((rec.sim_time, rec.loss))
+    return trace
+
+
+def _time_to(trace: list[tuple[float, float]], target: float) -> float:
+    for t, loss in trace:
+        if loss <= target:
+            return t
+    return float("inf")
+
+
+def async_sweep_rows(fracs=(0.125, 0.25, 0.5)):
+    """Time-to-target-loss, sync vs async, per straggler fraction.
+
+    The target is the sync trace's best loss, so the sync time is exactly
+    the simulated time sync needed to get there; the async engine must
+    reach the same loss sooner at the 0.25 fraction (the load model's
+    default regime) or the module fails.
+    """
+    out = []
+    for frac in fracs:
+        sync_trace = _run_sync(frac)
+        target = min(loss for _, loss in sync_trace)
+        t_sync = _time_to(sync_trace, target)
+        async_trace = _run_async(frac)
+        t_async = _time_to(async_trace, target)
+        speedup = t_sync / t_async if np.isfinite(t_async) else 0.0
+        out.append((
+            f"async/ttl_frac{frac}_sync_s", t_sync,
+            f"target_loss={target:.4f};rounds={SYNC_ROUNDS};wait_for_slowest",
+        ))
+        out.append((
+            f"async/ttl_frac{frac}_async_s", t_async,
+            f"target_loss={target:.4f};buffer={BUFFER};alpha={ALPHA};"
+            f"speedup_vs_sync={speedup:.2f}x;async_wins={t_async < t_sync}",
+        ))
+        if frac == 0.25 and not t_async < t_sync:
+            raise RuntimeError(
+                f"async lost at the 0.25-straggler regime: {t_async:.0f}s vs "
+                f"sync {t_sync:.0f}s to loss {target:.4f} — the buffered "
+                "engine must beat wait-for-slowest here"
+            )
+    return out
+
+
+def equivalence_rows():
+    """CI guard: full-buffer async == flat sync, bit for bit, 2 rounds."""
+    C = 4
+    fed_a = dataclasses.replace(
+        _fed("async", buffer_size=C, staleness_alpha=0.0), n_clients=C
+    )
+    zero_var = LoadModelConfig(
+        straggler_frac=0.0, base_spread=0.0, jitter=0.0, spike_prob=0.0
+    )
+    eng = BufferedAsyncEngine(
+        CFG, fed_a, sgd(LR), seed=0,
+        load_model=ClientLoadModel(C, seed=0, config=zero_var),
+        timing=TimingModel(),
+    )
+    fed_s = dataclasses.replace(fed_a, mode="sync")
+    opt = sgd(LR)
+    state = R.make_state(CFG, fed_s, opt, jax.random.key(0))
+    fr = R.jit_fed_round(R.build_fed_round(CFG, fed_s, opt))
+    src_a, src_s = _batches(fed_a, seed=7), _batches(fed_s, seed=7)
+    for _ in range(2):
+        rec = eng.step_round(next(src_a))
+        state, m = fr(state, next(src_s), R.uniform_weights(C))
+    if not np.array_equal(np.asarray(state["params"]), np.asarray(eng.state["params"])):
+        raise RuntimeError(
+            "async (buffer_size == C, zero variance, alpha=0) diverged from "
+            "the flat sync round — the sync-equivalence contract is broken"
+        )
+    if float(m["loss"]) != rec.loss:
+        raise RuntimeError(
+            f"async round loss {rec.loss} != sync round loss {float(m['loss'])}"
+        )
+    return [(
+        "async/sync_equiv_bitwise", 1.0,
+        f"buffer=C;alpha=0;zero_variance;rounds=2;staleness={rec.staleness}",
+    )]
+
+
+if __name__ == "__main__":
+    from benchmarks.kernel_bench import emit_trajectory
+
+    all_rows = equivalence_rows() + async_sweep_rows()
+    for name, val, extra in all_rows:
+        print(f"{name},{val:.1f},{extra}")
+    emit_trajectory(all_rows)
+    print("# trajectory appended to BENCH_kernel_bench.json")

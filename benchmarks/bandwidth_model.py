@@ -19,6 +19,33 @@ PER_CHANNEL_B_S = 512e3  # paper: 512 KB/s per channel
 ROUND_PERIOD_S = 600.0  # one federated round every 10 minutes
 
 
+def upload_seconds(payload_bytes: float, uplink_b_s: float = PER_CHANNEL_B_S) -> float:
+    """Seconds to push one model update over a client uplink.
+
+    The bandwidth term of the async engine's completion-time model
+    (core/async_engine.py, DESIGN.md §12): the paper's 512 KB/s camera-edge
+    uplink is the default, so upload time — not FLOPs — dominates round
+    latency for real payload sizes, exactly the regime FedVision targets.
+    """
+    return float(payload_bytes) / max(float(uplink_b_s), 1.0)
+
+
+def client_uplink_scales(n_clients: int, rng, spread: float = 0.5):
+    """Per-client uplink multipliers in [1-spread, 1+spread] (uniform).
+
+    Stable per-client heterogeneity: sampled once at engine build, not per
+    round — a camera on a bad link stays on a bad link. spread=0 gives the
+    homogeneous fleet the sync-equivalence contract needs.
+    """
+    import numpy as np
+
+    if not 0.0 <= spread < 1.0:
+        raise ValueError(f"uplink spread must be in [0, 1), got {spread}")
+    if spread == 0.0:
+        return np.ones(n_clients)
+    return rng.uniform(1.0 - spread, 1.0 + spread, n_clients)
+
+
 def rows():
     video = CHANNELS * PER_CHANNEL_B_S
     out = [("spic/video_upload_MB_s", video / 1e6, f"paper_claim>=50MB_s:{video >= 50e6}")]

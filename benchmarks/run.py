@@ -11,13 +11,19 @@ Prints ``name,value,derived`` CSV. Modules:
                      DESIGN.md §8) and flat (DESIGN.md §11) engines timed
                      with paired samples
   eq6_guard        — packed eq6 must beat tree eq6 at 256k (regression gate)
+  async_equiv      — full-buffer async == flat sync bit-for-bit (DESIGN.md §12)
+  async_sweep      — async vs sync time-to-loss on the simulated wall clock,
+                     straggler fractions {0.125, 0.25, 0.5} (async must win
+                     at 0.25 or the module fails)
   roofline_table   — per (arch x shape x mesh) roofline from the dry-run
 
 ``--smoke`` runs the cheap analytic tables, a 1-iteration flat-round sweep,
-and the eq6 tiling guard (packed eq6 must beat the tree path at 256k — the
-module FAILS if the packed reducer regresses) — the CI gate
-(scripts/check.sh) that proves the harness imports, the round engine runs,
-and the re-tiled reducers still win, in about a minute of compute.
+the eq6 tiling guard (packed eq6 must beat the tree path at 256k — the
+module FAILS if the packed reducer regresses), and the async-vs-sync
+equivalence guard (full-buffer async must reproduce the sync round
+bit-for-bit) — the CI gate (scripts/check.sh) that proves the harness
+imports, both round engines run, and the re-tiled reducers still win, in
+a couple of minutes of compute.
 """
 from __future__ import annotations
 
@@ -32,7 +38,7 @@ def main() -> None:
                     help="fast CI subset: analytic tables + tiny participation sweep")
     args = ap.parse_args()
 
-    from benchmarks import bandwidth_model, convergence, kernel_bench, roofline_table, upload_time
+    from benchmarks import async_bench, bandwidth_model, convergence, kernel_bench, roofline_table, upload_time
 
     if args.smoke:
         modules = [
@@ -40,6 +46,7 @@ def main() -> None:
             ("bandwidth_model", bandwidth_model.rows),
             ("flat_round", lambda: kernel_bench.flat_round_rows(iters=1)),
             ("eq6_guard", kernel_bench.eq6_guard_rows),
+            ("async_equiv", async_bench.equivalence_rows),
         ]
     else:
         modules = [
@@ -51,6 +58,8 @@ def main() -> None:
             ("kernel_bench_agg", kernel_bench.agg_rows),
             ("round_sweep", kernel_bench.round_sweep_rows),
             ("eq6_guard", kernel_bench.eq6_guard_rows),
+            ("async_equiv", async_bench.equivalence_rows),
+            ("async_sweep", async_bench.async_sweep_rows),
             ("roofline_table", roofline_table.rows),
         ]
     failed = 0

@@ -1,19 +1,57 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the exact command the roadmap pins, runnable from
 # anywhere, plus the docs check, a test-count floor (suites only grow —
-# a collection regression below the PR 2 count fails before pytest runs),
+# a collection regression below the PR 5 count fails before pytest runs),
 # and a benchmark smoke step. Extra args are forwarded to pytest (e.g.
 # scripts/check.sh -k agg).
+#
+# CI-friendly (.github/workflows/ci.yml runs this verbatim): every phase
+# emits a "[check] phase <name> took Ns" timing line so slow phases show
+# up in the job log, and a failed collection propagates pytest's own exit
+# code (with its log tail) instead of burying it in the floor arithmetic.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+phase_start=$SECONDS
+phase() { # phase <name>: report the wall time of the phase that just ended
+  echo "[check] phase ${1} took $(( SECONDS - phase_start ))s"
+  phase_start=$SECONDS
+}
+
 python scripts/check_docs.py
-TEST_FLOOR=239  # PR 3 collected count; raise, never lower
-collected=$(PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest --collect-only -q 2>/dev/null | grep -c '::' || true)
+phase docs
+
+TEST_FLOOR=303  # PR 5 collected count; raise, never lower
+collect_log=$(mktemp)
+collect_status=0
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest --collect-only -q \
+  >"$collect_log" 2>&1 || collect_status=$?
+if [ "$collect_status" -ne 0 ]; then
+  echo "FAIL: pytest collection failed (exit $collect_status)" >&2
+  tail -n 40 "$collect_log" >&2
+  rm -f "$collect_log"
+  exit "$collect_status"
+fi
+# prefer pytest's own "N tests collected" summary; fall back to counting
+# column-0 node ids (warning lines mentioning '::' are indented and must
+# not inflate the floor count)
+collected=$(grep -Eo '^[0-9]+ tests? collected' "$collect_log" | tail -1 | cut -d' ' -f1 || true)
+if [ -z "$collected" ]; then
+  collected=$(grep -c '^[^ ]*::' "$collect_log" || true)
+fi
+rm -f "$collect_log"
 if [ "$collected" -lt "$TEST_FLOOR" ]; then
   echo "FAIL: collected $collected tests < floor $TEST_FLOOR (lost tests?)" >&2
   exit 1
 fi
 echo "test-count floor OK ($collected >= $TEST_FLOOR)"
+phase collect
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke >/dev/null
-echo "benchmark smoke OK"
+phase pytest
+
+# the smoke rows land in a file so CI can upload THIS run's numbers as an
+# artifact next to the committed BENCH trajectory
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke > BENCH_smoke_rows.csv
+echo "benchmark smoke OK ($(wc -l < BENCH_smoke_rows.csv) rows in BENCH_smoke_rows.csv)"
+phase bench_smoke

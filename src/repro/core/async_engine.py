@@ -1,0 +1,412 @@
+"""Buffered asynchronous aggregation engine on a simulated wall clock
+(DESIGN.md §12).
+
+FedVision's clients are camera-edge devices whose *upload times*, not
+FLOPs, dominate round latency — the sync engine (core/rounds.py) waits for
+the slowest selected client every round, so one straggler sets the round
+period for the whole federation. This module is the second round-control
+plane over the same aggregator/packing substrate: a FedBuff-style buffered
+engine where clients run free, updates land whenever their simulated
+completion time arrives, and the server flushes a staleness-weighted
+aggregate every ``FedConfig.buffer_size`` landed updates.
+
+How it maps onto the flat packed state (DESIGN.md §11):
+
+- ``state["params"]`` row ``c`` holds the global version client ``c`` was
+  *dispatched* with. Local training is deferred to flush time: an update's
+  content is a pure function of (dispatch params, opt row, batch), so the
+  event queue only decides *when* it lands and against which global
+  version — the simulated clock never has to replay training.
+- A flush is ONE jitted, donated program: gated local training of the
+  staged rows (the masked trainer from core/rounds), in-place
+  ``packing.write_slots`` write-back, then the registered aggregator over
+  the packed buffer with the *staleness discount folded into the weights
+  operand* — ``w_c * (1 + s_c)^-alpha`` — so the PR 4 reduction tiling
+  (merged-run fused chains / `packed_bucket_reduce`) is reused verbatim;
+  the discounted weights need not sum to 1 because every reducer
+  normalizes by its own denominator. Staged rows leave the flush holding
+  the fresh global (their redispatch); in-flight rows keep their dispatch
+  version.
+- Sync-equivalence contract: with ``buffer_size == C`` every client must
+  complete before a flush, staleness is identically zero, and the flush
+  program IS `rounds.build_fed_round`'s full-participation sync round —
+  the same compiled program, so async reproduces the flat sync engine
+  bit-for-bit by construction (pinned in tests/test_async_engine.py).
+
+The host-side control plane is a deterministic discrete-event simulation:
+a heap of ``(completion_time, client)`` events (ties break by client id),
+a shared `core.simclock.SimClock`, and `explorer.ClientLoadModel.step(dt)`
+advanced by the *simulated* gap between events — spikes and AR(1) drift
+evolve in simulated seconds. Completion times are compute
+(load-dependent, straggler-aware) plus the paper's bandwidth term
+(`benchmarks/bandwidth_model.py`: payload / 512 KB/s camera uplink).
+Updates staler than ``max_staleness`` are dropped — counted, never
+silently lost — and the dropped client redispatches from the current
+global.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import explorer, packing
+from repro.core import rounds as R
+from repro.core.simclock import SimClock
+
+PyTree = Any
+
+
+def _default_uplink_b_s() -> float:
+    """The paper's per-camera uplink (benchmarks/bandwidth_model.py)."""
+    try:
+        from benchmarks.bandwidth_model import PER_CHANNEL_B_S
+
+        return float(PER_CHANNEL_B_S)
+    except ImportError:  # repro installed without the benchmarks tree
+        return 512e3
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingModel:
+    """Per-client completion-time model: compute + upload, in sim seconds.
+
+    ``compute`` scales the idle-client cost by the Explorer load (a client
+    at load L runs at (1 - L) effective speed, floored at min_headroom —
+    a spiked client is ~1/min_headroom slower, which is what makes the
+    sync engine's wait-for-slowest hurt). ``upload`` is payload bytes over
+    the paper's camera uplink, with optional stable per-client spread
+    (`bandwidth_model.client_uplink_scales`). Zero spread + a zero-variance
+    load model gives identical completion times for every client — the
+    sync-equivalence regime.
+    """
+
+    base_compute_s: float = 10.0  # one local step on an idle client
+    min_headroom: float = 0.05  # floor on (1 - load): max slowdown 20x
+    uplink_b_s: float | None = None  # None -> bandwidth_model.PER_CHANNEL_B_S
+    uplink_spread: float = 0.0  # per-client uplink spread in [0, 1)
+    payload_bytes: float | None = None  # None -> n_total * 4 (f32 rows)
+
+    def compute_seconds(self, load: float, local_steps: int = 1) -> float:
+        return self.base_compute_s * local_steps / max(1.0 - load, self.min_headroom)
+
+
+def default_upload_terms(timing: TimingModel, n_clients: int, n_total: int, seed: int) -> np.ndarray:
+    """The per-client upload-seconds vector both round control planes use:
+    payload (``timing.payload_bytes`` or f32 rows of the packed buffer)
+    over per-client uplinks drawn from ``seed``. Sync FLServers and the
+    async engine derive theirs through this ONE helper so the same seed
+    gives the same uplink draws — the shared-clock interleave compares
+    completion models, not sampling accidents."""
+    payload = (
+        timing.payload_bytes if timing.payload_bytes is not None else n_total * 4
+    )
+    return client_upload_seconds(
+        timing, n_clients, payload, np.random.default_rng(seed + 1)
+    )
+
+
+def client_upload_seconds(timing: TimingModel, n_clients: int, payload: float, rng) -> np.ndarray:
+    """Fixed per-client upload seconds (the bandwidth term) — shared by
+    the engine and the sync side of the async-vs-sync benches."""
+    base = timing.uplink_b_s if timing.uplink_b_s is not None else _default_uplink_b_s()
+    try:
+        from benchmarks import bandwidth_model as bw
+
+        scales = np.asarray(bw.client_uplink_scales(n_clients, rng, timing.uplink_spread))
+        return np.array([bw.upload_seconds(payload, base * s) for s in scales])
+    except ImportError:
+        scales = (
+            np.ones(n_clients)
+            if timing.uplink_spread == 0.0
+            else rng.uniform(1.0 - timing.uplink_spread, 1.0 + timing.uplink_spread, n_clients)
+        )
+        return payload / np.maximum(base * scales, 1.0)
+
+
+def sync_round_seconds(
+    timing: TimingModel,
+    loads: np.ndarray,
+    upload_s: np.ndarray,
+    local_steps: int = 1,
+    mask: np.ndarray | None = None,
+) -> float:
+    """Simulated duration of ONE synchronous round: the server waits for
+    the slowest participating client (compute under its load + upload).
+    The sync side of the async-vs-sync time-to-loss benches and of the
+    Task Manager's shared-clock interleaving."""
+    loads = np.asarray(loads, float)
+    per = np.array(
+        [timing.compute_seconds(l, local_steps) for l in loads]
+    ) + np.asarray(upload_s, float)
+    if mask is not None:
+        per = per[np.asarray(mask) > 0]
+    return float(per.max())
+
+
+@dataclasses.dataclass
+class AsyncRoundRecord:
+    """One flush of the buffered engine. Field names shared with
+    `server.RoundRecord` (round_idx/loss/weights/seconds/participants/
+    loads) so `core.monitor` renders either; the async-only fields are the
+    simulated wall-clock and the per-update staleness the monitor adds."""
+
+    round_idx: int
+    loss: float
+    weights: list[float]  # staleness-discounted, staged rows only
+    seconds: float  # host wall (the simulation's own cost)
+    participants: list[int]  # staged clients, completion order
+    loads: list[float]
+    version: int = 0  # global model version this flush produced
+    sim_time: float = 0.0  # simulated wall-clock at flush
+    staleness: list[int] = dataclasses.field(default_factory=list)
+    dropped: int = 0  # stale completions discarded while filling the buffer
+
+
+def _build_buffered_flush(cfg, fed: R.FedConfig, optimizer, agg):
+    """The K_buf < C flush: gated training of the staged rows + the
+    staleness-weighted aggregate, with in-flight rows carried through.
+
+    Identical training/aggregation kernels to the sync masked round — the
+    only async-specific steps are the discounted weights operand (computed
+    host-side, staleness never enters the trace) and the final select that
+    redispatches staged rows while in-flight rows keep their dispatch
+    version (the sync round instead broadcasts to everyone).
+    """
+    spec = agg.ctx.spec
+    tpl = agg.ctx.template
+    fed_m = dataclasses.replace(fed, participation="masked")
+    local_train, gated = R._local_training(cfg, fed_m, optimizer)
+    train_clients = R._train_clients_fn(fed_m, local_train, gated)
+
+    def flush(state, batch, part):
+        mask = part["mask"].astype(jnp.float32)
+        w_disc = part["weights"].astype(jnp.float32)  # w * (1+s)^-alpha
+        packed = state["params"]
+        new_p, new_o, loss = train_clients(
+            packing.unpack_views(spec, packed, tpl), state["opt"], batch, mask
+        )
+        packed_new = packing.write_slots(spec, packed, new_p)
+        packed_out, agg_state = agg.aggregate(packed_new, w_disc, state["agg"], mask)
+        # staged rows redispatch with the fresh global; in-flight rows keep
+        # the version they were dispatched with (sync broadcasts instead)
+        params = jnp.where(mask[:, None] > 0, packed_out, packed_new)
+        out = {
+            **state,
+            "params": params,
+            "opt": new_o,
+            "agg": agg_state,
+            "round": state["round"] + 1,
+        }
+        return out, R._round_metrics(fed_m, loss, mask)
+
+    return flush
+
+
+class BufferedAsyncEngine:
+    """Event-driven buffered-aggregation loop (FedBuff-style) over the flat
+    packed round state. One ``step_round(batch)`` = pop completion events
+    (advancing the shared SimClock and the load model in simulated time)
+    until ``buffer_size`` updates stage, then apply one donated flush."""
+
+    def __init__(
+        self,
+        cfg,
+        fed: R.FedConfig,
+        optimizer,
+        *,
+        mesh=None,
+        rules: dict | None = None,
+        seed: int = 0,
+        dtype=jnp.float32,
+        clock: SimClock | None = None,
+        load_model: explorer.ClientLoadModel | None = None,
+        timing: TimingModel | None = None,
+        scheduler=None,
+        aggregator=None,
+    ):
+        if fed.mode != "async":
+            raise ValueError(
+                f"BufferedAsyncEngine needs FedConfig(mode='async'), got {fed.mode!r}"
+            )
+        if fed.state_layout != "flat":
+            raise ValueError(
+                "the async engine runs on the flat packed round state "
+                f"(state_layout='flat'), got {fed.state_layout!r}"
+            )
+        if fed.participation != "full":
+            raise ValueError(
+                "async mode owns its own participation plane (the event "
+                f"queue); set participation='full', got {fed.participation!r}"
+            )
+        C = fed.n_clients
+        self.k_buf = fed.buffer_size or C
+        if not 1 <= self.k_buf <= C:
+            raise ValueError(
+                f"buffer_size={fed.buffer_size} must be in [1, n_clients={C}] (or 0 -> C)"
+            )
+        if fed.max_staleness < 0:
+            raise ValueError(f"max_staleness={fed.max_staleness} must be >= 0")
+        self.cfg, self.fed, self.optimizer = cfg, fed, optimizer
+        # a caller that already resolved the aggregator (FLServer) passes it
+        # in — make_aggregator walks the whole param template for the
+        # PackSpec, which need not run twice per construction
+        self.agg = aggregator or R.make_aggregator(cfg, fed, mesh)
+        if not self.agg.stacked:
+            raise ValueError(
+                f"async mode needs a client-stacked aggregator; {fed.aggregation!r} "
+                "runs one shared model copy (fedsgd topology)"
+            )
+        self.clock = clock or SimClock()
+        self.load_model = load_model or explorer.ClientLoadModel(C, seed=seed)
+        self.scheduler = scheduler
+        self.timing = timing or TimingModel()
+        self.upload_s = default_upload_terms(
+            self.timing, C, self.agg.ctx.spec.n_total, seed
+        )
+        self.state = R.make_state(cfg, fed, optimizer, jax.random.key(seed), dtype)
+        if self.k_buf == C:
+            # the sync-equivalence contract, by construction: a full buffer
+            # means every client completed (staleness == 0 everywhere), and
+            # the flush IS the sync full-participation round program
+            self._flush = R.jit_fed_round(
+                R.build_fed_round(cfg, dataclasses.replace(fed, mode="sync"), optimizer, mesh, rules)
+            )
+            self._full = True
+        else:
+            self._flush = jax.jit(
+                _build_buffered_flush(cfg, fed, optimizer, self.agg), donate_argnums=(0,)
+            )
+            self._full = False
+        self.version = 0
+        self.dispatch_version = np.zeros(C, np.int64)
+        self.completions = 0
+        self.dropped_total = 0
+        self.history: list[AsyncRoundRecord] = []
+        # everyone starts in flight against version 0 at t=0; the heap's
+        # (time, client) tuples make equal completion times pop in client-id
+        # order — the deterministic tie-break the tests pin
+        self._queue: list[tuple[float, int]] = []
+        self.global_row = 0  # the state row currently holding the global dispatch
+        for c in range(C):
+            self._push(c)
+
+    # -- event machinery -----------------------------------------------------
+
+    def _client_seconds(self, c: int) -> float:
+        load = float(self.load_model.loads[c])
+        return self.timing.compute_seconds(load, self.fed.local_steps) + float(
+            self.upload_s[c]
+        )
+
+    def _push(self, c: int) -> None:
+        heapq.heappush(self._queue, (self.clock.now() + self._client_seconds(c), c))
+
+    def next_completion_time(self) -> float | None:
+        """Earliest queued completion — the Task Manager's interleave key."""
+        return self._queue[0][0] if self._queue else None
+
+    def _apply_pending_redispatch(self, pending: set[int]) -> None:
+        """Write the current global row into every pending dropped client's
+        row in ONE batched copy (a per-drop `.at[c].set` would materialize a
+        fresh (C, N_total) buffer per dropped completion). Safe to defer
+        within a collection window: the version — and with it global_row's
+        contents — only changes at a flush, and no flush happens mid-window."""
+        if not pending:
+            return
+        p = self.state["params"]
+        idx = jnp.asarray(sorted(pending), jnp.int32)
+        self.state["params"] = p.at[idx].set(p[self.global_row])
+        pending.clear()
+
+    # -- one flush -----------------------------------------------------------
+
+    def step_round(self, batch: PyTree) -> AsyncRoundRecord:
+        """Collect ``buffer_size`` completions, flush once.
+
+        batch: the same (C, E, per-step...) pytree the sync round takes;
+        only staged rows are consumed (the gated trainer carries the rest
+        through untouched).
+        """
+        t_host = time.time()
+        C = self.fed.n_clients
+        staged: list[int] = []
+        stal: list[int] = []
+        pending_redispatch: set[int] = set()  # dropped rows awaiting the global copy
+        dropped = 0
+        while len(staged) < self.k_buf:
+            t, c = heapq.heappop(self._queue)
+            # a peer task on the shared clock may have advanced time past
+            # this queued completion while we weren't scheduled — the
+            # update then simply lands "now" (never move the clock back)
+            dt = self.clock.advance_to(max(t, self.clock.now()))
+            if dt > 0:
+                self.load_model.step(dt)  # loads evolve in simulated time
+            self.completions += 1
+            s = self.version - int(self.dispatch_version[c])
+            if self.fed.max_staleness and s > self.fed.max_staleness:
+                # dropped: counted, redispatched from the current global
+                # (its opt row persists — per-client optimizer memory is the
+                # client's own, exactly as in the sync flat engine); the row
+                # copy batches with other drops this window
+                dropped += 1
+                self.dropped_total += 1
+                self.dispatch_version[c] = self.version
+                pending_redispatch.add(c)
+                self._push(c)
+                continue
+            if c in pending_redispatch:
+                # a dropped client completed again before its deferred row
+                # copy landed — materialize the copies so it trains from
+                # the global it was redispatched with
+                self._apply_pending_redispatch(pending_redispatch)
+            staged.append(c)
+            stal.append(s)
+        self._apply_pending_redispatch(pending_redispatch)
+        mask = np.zeros(C, np.float32)
+        mask[staged] = 1.0
+        stal_vec = np.zeros(C, np.float32)
+        stal_vec[staged] = stal
+        # polynomial staleness discount folded into the weights operand —
+        # the packed reducers renormalize by their own denominator, so the
+        # discounted weights need not sum to 1. s == 0 gives exactly 1.0,
+        # so a fresh buffer reproduces the undiscounted weights bit-for-bit.
+        w = mask / np.float32(len(staged))
+        w_disc = (w * (1.0 + stal_vec) ** np.float32(-self.fed.staleness_alpha)).astype(
+            np.float32
+        )
+        if self._full:
+            part = jnp.asarray(w_disc)  # bare weights: the sync full path
+        else:
+            part = {"mask": jnp.asarray(mask), "weights": jnp.asarray(w_disc)}
+        self.state, metrics = self._flush(self.state, batch, part)
+        self.version += 1
+        if self.scheduler is not None:
+            # async completions feed the same quality EMA sync rounds do
+            client_loss = np.asarray(metrics["client_loss"], np.float32)
+            for c in staged:
+                self.scheduler.report_quality(c, float(client_loss[c]))
+        for c in staged:
+            self.dispatch_version[c] = self.version
+            self._push(c)
+        self.global_row = staged[0]  # its row now holds the fresh global
+        rec = AsyncRoundRecord(
+            round_idx=self.version - 1,
+            loss=float(metrics["loss"]),
+            weights=[float(x) for x in w_disc],
+            seconds=time.time() - t_host,
+            participants=[int(c) for c in staged],
+            loads=[float(x) for x in self.load_model.loads],
+            version=self.version,
+            sim_time=self.clock.now(),
+            staleness=[int(s) for s in stal],
+            dropped=dropped,
+        )
+        self.history.append(rec)
+        return rec

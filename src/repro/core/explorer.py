@@ -12,6 +12,7 @@ whose per-round reports feed the Task Scheduler (DESIGN.md §8).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 
 import numpy as np
@@ -63,10 +64,11 @@ class LoadModelConfig:
     straggler_load: float = 0.85  # their baseline load
     base_load: float = 0.25  # everyone else's baseline
     base_spread: float = 0.1  # per-client baseline spread
-    persistence: float = 0.8  # AR(1) pull toward the client baseline
-    jitter: float = 0.08  # AR(1) innovation scale
-    spike_prob: float = 0.05  # transient spike probability per client-round
+    persistence: float = 0.8  # AR(1) pull toward the baseline, per sim second
+    jitter: float = 0.08  # AR(1) innovation scale, per sqrt(sim second)
+    spike_prob: float = 0.05  # transient spike probability per sim second
     spike_load: float = 1.0  # spike level (device fully busy)
+    spike_duration_s: float = 1.0  # how long a spike pins the load, sim seconds
 
 
 class ClientLoadModel:
@@ -78,6 +80,16 @@ class ClientLoadModel:
     spike to `spike_load`. This is what makes the scheduler's load term do
     real work — a quality-only policy would keep picking stragglers.
     Deterministic under a fixed seed.
+
+    Time-based (DESIGN.md §12): ``step(dt)`` advances ``dt`` *simulated
+    seconds* on the platform's `core.simclock.SimClock` timeline, so the
+    async engine's variable inter-event gaps and the sync loop's fixed
+    one-step-per-round cadence drive the same process. The AR(1) pull and
+    innovation scale with dt (``persistence**dt``, ``jitter*sqrt(dt)``),
+    and a spike pins the load for ``spike_duration_s`` simulated seconds —
+    previously a spike lasted exactly one *step call*, which conflated
+    duration with the caller's step count. ``step()`` with the default
+    dt=1.0 reproduces the legacy per-round behavior exactly.
     """
 
     def __init__(self, n_clients: int, seed: int = 0, config: LoadModelConfig | None = None):
@@ -93,13 +105,48 @@ class ClientLoadModel:
         )
         self.baseline[self.stragglers] = self.cfg.straggler_load
         self.loads = self.baseline.copy()
+        self.t = 0.0  # simulated seconds of process time advanced so far
+        self._spike_until = np.full(n_clients, -np.inf)  # spike end times
 
-    def step(self) -> np.ndarray:
-        """Advance one round; returns the (n,) load report in [0, 1]."""
+    def step(self, dt: float = 1.0) -> np.ndarray:
+        """Advance `dt` simulated seconds; returns the (n,) load in [0, 1].
+
+        dt=1.0 (the default) is the legacy one-call-per-round cadence and
+        is bit-compatible with it under a fixed seed.
+        """
+        if dt < 0:
+            raise ValueError(f"load model cannot run backwards (dt={dt})")
         c = self.cfg
-        innov = c.jitter * self._rng.standard_normal(self.n)
-        self.loads = c.persistence * self.loads + (1 - c.persistence) * self.baseline + innov
-        spikes = self._rng.random(self.n) < c.spike_prob
-        self.loads = np.where(spikes, c.spike_load, self.loads)
+        self.t += dt
+        rho = c.persistence ** dt
+        # AR(1)-consistent innovation for a dt-second step: composing k
+        # steps of dt/k must give the same process variance as one step of
+        # dt, so the scale is jitter * sqrt((1 - rho1^2dt) / (1 - rho1^2))
+        # — NOT jitter * sqrt(dt), whose variance grows without bound and
+        # saturates sparsely-sampled loads at the clip walls. At dt=1 the
+        # ratio is exactly 1, keeping legacy seeds bit-compatible; the
+        # persistence -> 1 (random-walk) limit is sqrt(dt).
+        r2 = c.persistence ** 2
+        scale = c.jitter * (
+            math.sqrt(dt) if r2 >= 1.0 else math.sqrt((1.0 - r2 ** dt) / (1.0 - r2))
+        )
+        innov = scale * self._rng.standard_normal(self.n)
+        ar = rho * self.loads + (1 - rho) * self.baseline + innov
+        # spike arrivals: per-second rate. Only arrivals still *active* at
+        # the sampled instant matter, so the arrival window is capped at
+        # the spike duration — sampling sparsely (dt >> duration) must not
+        # stretch every spike in the window to the endpoint, and sampling
+        # densely accumulates activity through _spike_until instead; the
+        # stationary active fraction ~ rate * duration either way. A
+        # window of exactly 1 keeps the literal spike_prob so legacy
+        # per-round seeds reproduce bit-for-bit.
+        win = min(dt, c.spike_duration_s)
+        p = c.spike_prob if win == 1.0 else 1.0 - (1.0 - c.spike_prob) ** win
+        fired = self._rng.random(self.n) < p
+        self._spike_until = np.where(fired, self.t + c.spike_duration_s, self._spike_until)
+        # a spike pins the load for spike_duration_s of *simulated* time;
+        # once it ends, AR(1) decays from the spike level it left behind
+        active = fired | (self.t < self._spike_until)
+        self.loads = np.where(active, c.spike_load, ar)
         self.loads = np.clip(self.loads, 0.0, 1.0)
         return self.loads.copy()

@@ -33,6 +33,18 @@ def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: f
         f"  loss     {losses[0]:.4f} → {losses[-1]:.4f}   {sparkline(losses)}",
         f"  clients  {parts}/{n_clients} participating   round wall {last.seconds:.2f}s",
     ]
+    if getattr(last, "sim_time", None) is not None and hasattr(last, "staleness"):
+        # buffered-async rounds (DESIGN.md §12): simulated wall-clock,
+        # per-flush staleness trajectory, and dropped stale updates
+        stale = [
+            (sum(r.staleness) / len(r.staleness)) if r.staleness else 0.0
+            for r in history
+        ]
+        dropped = sum(getattr(r, "dropped", 0) for r in history)
+        lines.append(
+            f"  async    sim clock {last.sim_time:.0f}s   staleness "
+            f"{stale[-1]:.2f}   {sparkline(stale)}   dropped {dropped}"
+        )
     if eval_history:
         # per-round detection quality (server.evaluate_round trajectory)
         maps = [e.map50 for e in eval_history]
@@ -50,12 +62,15 @@ def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: f
 
 
 def export_json(task_id: str, history, n_clients: int, eval_history=None) -> str:
+    def row(r):
+        d = {"round": r.round_idx, "loss": r.loss, "participants": sum(1 for w in r.weights if w > 0), "seconds": r.seconds}
+        if getattr(r, "sim_time", None) is not None and hasattr(r, "staleness"):
+            d.update(sim_time=r.sim_time, staleness=list(r.staleness), dropped=r.dropped)
+        return d
+
     out = {
         "task": task_id,
-        "rounds": [
-            {"round": r.round_idx, "loss": r.loss, "participants": sum(1 for w in r.weights if w > 0), "seconds": r.seconds}
-            for r in history
-        ],
+        "rounds": [row(r) for r in history],
         "n_clients": n_clients,
     }
     if eval_history:

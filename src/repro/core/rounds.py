@@ -84,6 +84,10 @@ class FedConfig:
     participation: str = "full"  # full | masked | compact (DESIGN.md §8)
     max_participants: int = 0  # compact: static per-round budget K (0 -> C)
     state_layout: str = "flat"  # flat (packed (C,N) round state) | tree (PR 3 reference)
+    mode: str = "sync"  # sync | async (buffered FedBuff-style engine, DESIGN.md §12)
+    buffer_size: int = 0  # async: K_buf staged updates per flush (0 -> n_clients)
+    staleness_alpha: float = 0.5  # async: polynomial staleness discount (1+s)^-alpha
+    max_staleness: int = 0  # async: drop updates staler than this (0 -> keep all)
 
 
 def loss_for(cfg: ArchConfig) -> Callable:
@@ -313,6 +317,17 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
     shards (client_axis, "model") when divisible — packing.packed_pspec.
     """
     agg = make_aggregator(cfg, fed, mesh)
+    if fed.mode != "sync":
+        # this builder always emits the synchronous round — silently
+        # ignoring buffer_size/staleness_alpha here would masquerade as
+        # async. The buffered control plane lives in
+        # core/async_engine.BufferedAsyncEngine (which calls back into this
+        # builder with mode="sync" for its full-buffer flush).
+        raise ValueError(
+            f"build_fed_round builds the synchronous round (mode='sync'), got "
+            f"mode={fed.mode!r}; drive async mode through "
+            "core/async_engine.BufferedAsyncEngine or FLServer"
+        )
     if fed.participation not in ("full", "masked", "compact"):
         raise ValueError(
             f"unknown participation {fed.participation!r}; expected full|masked|compact"

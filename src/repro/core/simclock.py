@@ -1,0 +1,45 @@
+"""SimClock — the platform's shared simulated wall clock (DESIGN.md §12).
+
+One monotonic simulated-seconds counter shared by everything that models
+time: the async round engine's event queue (`core.async_engine`), the
+Explorer's load process (`explorer.ClientLoadModel.step(dt)` — AR(1) drift
+and spike *durations* are measured in simulated seconds, not step counts),
+and the Task Manager's shared-clock interleaving of concurrent tasks.
+
+The clock is deliberately dumb: it only moves forward, and it never reads
+host time. Everything observable about the async engine (event order,
+staleness, time-to-loss benches) is a deterministic function of the seeds
+and this counter, so simulations replay exactly.
+"""
+from __future__ import annotations
+
+
+class SimClock:
+    """Monotonic simulated wall clock, in seconds."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        """Move `dt` simulated seconds forward; returns the new time."""
+        if dt < 0:
+            raise ValueError(f"SimClock cannot go backwards (dt={dt})")
+        self._t += dt
+        return self._t
+
+    def advance_to(self, t: float) -> float:
+        """Jump to absolute simulated time `t` (>= now); returns elapsed dt."""
+        dt = t - self._t
+        if dt < -1e-12:
+            raise ValueError(
+                f"SimClock cannot go backwards (now={self._t}, target={t})"
+            )
+        dt = max(dt, 0.0)
+        self._t = t if dt else self._t
+        return dt
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"SimClock(t={self._t:.3f})"

@@ -10,6 +10,8 @@ or emits the production-mesh launch configuration with --print-plan.
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --rounds 20 \
       --participation compact --max-participants 2 --partition dirichlet
   PYTHONPATH=src python -m repro.launch.train --task detection --eval-every 1
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --rounds 20 \
+      --mode async --buffer-size 2 --staleness-alpha 0.5 --max-staleness 4
   PYTHONPATH=src python -m repro.launch.train --arch grok-1-314b --print-plan
 
 --task detection runs the paper's actual workload: federated YOLOv3 over a
@@ -68,6 +70,18 @@ def main() -> None:
     ap.add_argument("--server-lr", type=float, default=None,
                     help="fedavgm/fedadam server step (default: 1.0 for fedavgm, 0.02 for fedadam)")
     ap.add_argument("--topn", type=int, default=0)
+    ap.add_argument("--mode", default="sync", choices=["sync", "async"],
+                    help="round control plane: sync (wait for every selected client) or "
+                    "async (buffered staleness-weighted flushes on a simulated wall "
+                    "clock, DESIGN.md §12)")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="async: flush after this many landed updates (0 -> clients, "
+                    "which reproduces the sync round bit-for-bit)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="async: polynomial staleness discount (1+s)^-alpha")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="async: drop updates staler than this many versions "
+                    "(0 -> keep all; drops are counted, never silent)")
     ap.add_argument("--participation", default="full", choices=["full", "masked", "compact"],
                     help="round body: full (everyone trains), masked (cond-gated), "
                     "compact (static-K gather; see --max-participants)")
@@ -106,6 +120,9 @@ def main() -> None:
         ap.error(f"--task detection needs a yolo-family arch (got {args.arch})")
     if not args.full_size:
         cfg = cfg.reduced()
+    if args.mode == "async" and args.participation != "full":
+        ap.error("--mode async owns its own participation plane (the event queue); "
+                 "drop --participation")
     budget = args.max_participants or max(2, args.clients // 2)
     fed = FedConfig(
         n_clients=args.clients,
@@ -119,6 +136,10 @@ def main() -> None:
         server_lr=args.server_lr if args.server_lr is not None else (0.02 if args.agg == "fedadam" else 1.0),
         participation=args.participation,
         max_participants=budget if args.participation == "compact" else 0,
+        mode=args.mode,
+        buffer_size=args.buffer_size,
+        staleness_alpha=args.staleness_alpha,
+        max_staleness=args.max_staleness,
     )
     optimizer = adamw(args.lr) if args.optimizer == "adamw" else sgd(args.lr)
     mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
@@ -152,8 +173,9 @@ def main() -> None:
                                      partition_name=args.partition, alpha=args.alpha)
             )
         if eval_batch is not None and args.eval_every:
+            step = server.run_async if server.engine is not None else server.run_round
             for r in range(args.rounds):
-                rec = server.run_round(next(batches))
+                rec = step(next(batches))
                 if r % args.eval_every == 0 or r == args.rounds - 1:
                     ev = server.evaluate_round(eval_batch)
                     per = " ".join(f"{m:.3f}" for m in ev.per_client_map)
@@ -169,6 +191,14 @@ def main() -> None:
         "participation": args.participation,
         "mean_participants": mean_participants,
     }
+    if args.mode == "async":
+        stal = [s for r in history for s in r.staleness]
+        summary.update(
+            mode="async",
+            sim_seconds=history[-1].sim_time,
+            mean_staleness=(sum(stal) / len(stal)) if stal else 0.0,
+            dropped=server.engine.dropped_total,
+        )
     if server.eval_history:
         print(monitor.render_task(args.arch, history, fed.n_clients,
                                   eval_history=server.eval_history))

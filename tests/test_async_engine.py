@@ -1,0 +1,484 @@
+"""Buffered async round engine on the simulated wall clock (DESIGN.md §12).
+
+Pins the tentpole invariants:
+  - sync-equivalence contract: buffer_size == C + zero-variance load model
+    + alpha = 0 reproduces the flat sync round BIT-FOR-BIT (params, opt,
+    agg state, loss) — the full-buffer flush IS the sync round program;
+  - the event queue is deterministic: equal completion times pop in client
+    id order (heap tie-break), so replays are exact;
+  - max_staleness drops are *counted*, never silently lost (completions ==
+    staged + dropped), and the dropped client redispatches from the
+    current global;
+  - staleness weights fold into the packed reduce's weights operand and
+    need not sum to 1 — the reducer normalizes by its own denominator;
+  - the time-based Explorer fix: step(dt) advances simulated seconds,
+    spike durations outlive step calls, and the legacy one-call-per-round
+    cadence reproduces the old process bit-for-bit.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import aggregators, monitor, packing
+from repro.core import rounds as R
+from repro.core.async_engine import (
+    AsyncRoundRecord,
+    BufferedAsyncEngine,
+    TimingModel,
+    client_upload_seconds,
+    sync_round_seconds,
+)
+from repro.core.explorer import ClientLoadModel, LoadModelConfig
+from repro.core.rounds import FedConfig
+from repro.core.server import FLServer
+from repro.core.simclock import SimClock
+from repro.core.task_manager import FederatedTask, TaskManager
+from repro.optim import sgd
+
+CFG = get_arch("qwen3-1.7b").reduced()
+C = 4
+
+ZERO_VAR = dict(straggler_frac=0.0, base_spread=0.0, jitter=0.0, spike_prob=0.0)
+
+
+def _fed(mode="async", n=C, **kw):
+    base = dict(n_clients=n, local_steps=1, aggregation="dense",
+                client_axis="data", data_axis=None, mode=mode)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _toks(seed=1, n=C):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(0, CFG.vocab_size, (n, 1, 2, 16)), jnp.int32)}
+
+
+def _zero_var_lm(n=C, seed=0):
+    return ClientLoadModel(n, seed=seed, config=LoadModelConfig(**ZERO_VAR))
+
+
+def _engine(fed, seed=0, lm=None, timing=None):
+    return BufferedAsyncEngine(
+        CFG, fed, sgd(0.05), seed=seed,
+        load_model=lm or _zero_var_lm(fed.n_clients, seed),
+        timing=timing or TimingModel(),
+    )
+
+
+# ------------------------- simulated wall clock ------------------------------
+
+def test_simclock_monotonic():
+    c = SimClock()
+    assert c.now() == 0.0
+    c.advance(2.5)
+    assert c.advance_to(4.0) == 1.5
+    assert c.now() == 4.0
+    assert c.advance_to(4.0) == 0.0  # idempotent at the same instant
+    with pytest.raises(ValueError):
+        c.advance(-1.0)
+    with pytest.raises(ValueError):
+        c.advance_to(1.0)
+
+
+def test_load_model_legacy_step_is_bit_compatible():
+    """step() (dt=1) reproduces the pre-SimClock per-round process exactly:
+    async and sync platforms keep replaying the same load histories."""
+    cfg = LoadModelConfig()
+    m = ClientLoadModel(8, seed=3, config=cfg)
+    # the legacy recursion, draw order and all
+    rng = np.random.default_rng(3)
+    n_strag = int(round(cfg.straggler_frac * 8))
+    stragglers = rng.choice(8, size=n_strag, replace=False)
+    baseline = np.clip(cfg.base_load + cfg.base_spread * rng.standard_normal(8), 0.05, 0.6)
+    baseline[stragglers] = cfg.straggler_load
+    np.testing.assert_array_equal(m.stragglers, stragglers)
+    loads = baseline.copy()
+    for _ in range(6):
+        innov = cfg.jitter * rng.standard_normal(8)
+        loads = cfg.persistence * loads + (1 - cfg.persistence) * baseline + innov
+        spikes = rng.random(8) < cfg.spike_prob
+        loads = np.clip(np.where(spikes, cfg.spike_load, loads), 0.0, 1.0)
+        np.testing.assert_array_equal(m.step(), loads)
+
+
+def test_load_model_spike_duration_in_sim_seconds():
+    """A spike pins the load for spike_duration_s of *simulated* time, not
+    one step call — the conflation the SimClock extraction fixed."""
+    cfg = LoadModelConfig(**{**ZERO_VAR, "spike_prob": 1.0}, spike_duration_s=1.0)
+    m = ClientLoadModel(3, seed=0, config=cfg)
+    m.step(0.25)  # every client spikes at t=0.25; active until 1.25
+    assert (m.loads == cfg.spike_load).all()
+    m.cfg = LoadModelConfig(**ZERO_VAR, spike_duration_s=1.0)  # no new arrivals
+    m.step(0.25)  # t=0.5 < 1.25: still spiked, across a step boundary
+    assert (m.loads == cfg.spike_load).all()
+    m.step(2.0)  # t=2.5 > 1.25: spike over, AR decays off the spike level
+    assert (m.loads < cfg.spike_load).all()
+    assert m.t == pytest.approx(2.5)
+
+
+def test_load_model_rejects_negative_dt():
+    with pytest.raises(ValueError):
+        ClientLoadModel(2, seed=0).step(-0.5)
+
+
+# --------------------- sync-equivalence contract -----------------------------
+
+@pytest.mark.parametrize("mode", ["dense", "eq6"])
+def test_full_buffer_async_bitwise_equals_flat_sync(mode):
+    """buffer_size == C, zero load variance, alpha = 0: the async engine
+    reproduces the flat sync round bit-for-bit — params, opt moments, agg
+    state, and per-round loss."""
+    fed_a = _fed("async", aggregation=mode, topn=2, buffer_size=C, staleness_alpha=0.0)
+    eng = _engine(fed_a)
+    fed_s = _fed("sync", aggregation=mode, topn=2)
+    opt = sgd(0.05)
+    state = R.make_state(CFG, fed_s, opt, jax.random.key(0))
+    fr = R.jit_fed_round(R.build_fed_round(CFG, fed_s, opt))
+    for r in range(2):
+        rec = eng.step_round(_toks(r))
+        state, m = fr(state, _toks(r), R.uniform_weights(C))
+        assert rec.staleness == [0] * C  # a full buffer can never be stale
+        assert float(m["loss"]) == rec.loss
+    np.testing.assert_array_equal(np.asarray(state["params"]), np.asarray(eng.state["params"]))
+    for x, y in zip(jax.tree.leaves(state["opt"]), jax.tree.leaves(eng.state["opt"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree.leaves(state["agg"]), jax.tree.leaves(eng.state["agg"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------- event-queue determinism ---------------------------
+
+def test_event_queue_tiebreak_by_client_id():
+    """Zero variance -> every completion ties; the heap's (time, client)
+    ordering must stage clients in id order, replay after replay."""
+    fed = _fed(buffer_size=2)
+    runs = []
+    for _ in range(2):
+        eng = _engine(fed)
+        runs.append([eng.step_round(_toks(r)).participants for r in range(4)])
+    assert runs[0] == runs[1]  # deterministic replay
+    # all four dispatched at t=0 with equal durations: ids pop in order,
+    # and each flush's redispatches land behind the still-queued ties
+    assert runs[0][0] == [0, 1] and runs[0][1] == [2, 3]
+
+
+def test_buffered_flush_preserves_in_flight_rows():
+    """In-flight clients keep the version they were dispatched with: after
+    one K=2 flush, the two unstaged rows still hold the initial dispatch."""
+    fed = _fed(buffer_size=2)
+    eng = _engine(fed)
+    before = np.array(np.asarray(eng.state["params"]))
+    rec = eng.step_round(_toks(0))
+    after = np.asarray(eng.state["params"])
+    in_flight = [c for c in range(C) if c not in rec.participants]
+    assert in_flight  # K < C leaves someone in flight
+    for c in in_flight:
+        np.testing.assert_array_equal(after[c], before[c])
+    for c in rec.participants:  # staged rows redispatch with the new global
+        assert not np.array_equal(after[c], before[c])
+    np.testing.assert_array_equal(after[rec.participants[0]], after[rec.participants[1]])
+
+
+def test_async_staleness_accumulates_for_slow_clients():
+    fed = _fed(buffer_size=2, staleness_alpha=0.5)
+    lm = _zero_var_lm()
+    lm.baseline = lm.loads = np.array([0.1, 0.1, 0.9, 0.9])  # 2 stragglers
+    eng = _engine(fed, lm=lm)
+    stale = []
+    for r in range(8):  # enough flushes for the ~10x-slower pair to land
+        stale += eng.step_round(_toks(r)).staleness
+    assert max(stale) >= 1  # straggler updates landed against newer versions
+
+
+# --------------------------- max_staleness drops -----------------------------
+
+def test_max_staleness_drops_are_counted_not_lost():
+    fed = _fed(n=3, buffer_size=1, staleness_alpha=0.5, max_staleness=1)
+    lm = _zero_var_lm(3)
+    lm.baseline = lm.loads = np.array([0.05, 0.1, 0.8])  # client 2 ~5x slower
+    eng = _engine(fed, lm=lm, timing=TimingModel(payload_bytes=0.0))
+    staged_total = 0
+    dropped_per_rec = 0
+    for r in range(12):
+        rec = eng.step_round(_toks(r, n=3))
+        staged_total += len(rec.participants)
+        dropped_per_rec += rec.dropped
+        assert 2 not in rec.participants or rec.staleness[rec.participants.index(2)] <= 1
+    assert eng.dropped_total >= 1  # the straggler's stale updates were dropped
+    assert dropped_per_rec == eng.dropped_total  # per-record counts add up
+    # nothing silently lost: every completion either staged or was dropped
+    assert eng.completions == staged_total + eng.dropped_total
+    # the dropped client was redispatched from the current global, so its
+    # dispatch version tracks the flushes that dropped it
+    assert int(eng.dispatch_version[2]) > 0
+
+
+# ------------------- staleness weights in the packed reduce ------------------
+
+def test_staleness_weights_need_not_sum_to_one_in_reduce():
+    """The flush folds (1+s)^-alpha into the weights operand; the packed
+    reducers normalize by their own denominator, so the discounted vector's
+    sum is irrelevant — pinned against the explicit normalized oracle."""
+    rng = np.random.default_rng(0)
+    packed = jnp.asarray(rng.normal(size=(C, 257)), jnp.float32)
+    mask = np.array([1, 0, 1, 1], np.float32)
+    stal = np.array([0, 0, 2, 5], np.float32)
+    w = mask / mask.sum()
+    w_disc = (w * (1.0 + stal) ** np.float32(-0.5)).astype(np.float32)
+    assert not np.isclose(w_disc.sum(), 1.0)  # the discount broke the sum
+    got = packing.weighted_mean(packed, jnp.asarray(w_disc), jnp.asarray(mask))
+    wn = w_disc * mask / (w_disc * mask).sum()
+    want = np.einsum("c,cn->n", wn, np.asarray(packed))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+    # same contract through an aggregator (what the flush actually calls)
+    fed = _fed("sync")
+    spec = packing.PackSpec(257, 1, (packing.LeafSlot("x", (257,), 0, 257, 0, 1),))
+    ctx = aggregators.AggContext(cfg=CFG, fed=fed, template=None, spec=spec, mesh=None)
+    out, _ = aggregators.get("dense")(ctx).aggregate(packed, jnp.asarray(w_disc), {}, jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(out[0]), want, rtol=1e-5, atol=1e-6)
+
+
+def test_record_weights_match_discount_formula():
+    fed = _fed(buffer_size=2, staleness_alpha=0.7)
+    lm = _zero_var_lm()
+    lm.baseline = lm.loads = np.array([0.1, 0.1, 0.9, 0.9])
+    eng = _engine(fed, lm=lm)
+    for r in range(4):
+        rec = eng.step_round(_toks(r))
+        w = np.zeros(C, np.float32)
+        w[rec.participants] = np.float32(1.0 / len(rec.participants))
+        s = np.zeros(C, np.float32)
+        s[rec.participants] = rec.staleness
+        np.testing.assert_allclose(
+            rec.weights, w * (1.0 + s) ** np.float32(-0.7), rtol=1e-6
+        )
+
+
+# ------------------------------ validation -----------------------------------
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="buffer_size"):
+        _engine(_fed(buffer_size=C + 1))
+    with pytest.raises(ValueError, match="mode='async'"):
+        _engine(_fed("sync"))
+    with pytest.raises(ValueError, match="participation"):
+        _engine(_fed(participation="masked", max_participants=2))
+    with pytest.raises(ValueError, match="flat"):
+        _engine(_fed(state_layout="tree"))
+    with pytest.raises(ValueError, match="max_staleness"):
+        _engine(_fed(max_staleness=-1))
+    with pytest.raises(ValueError, match="mode"):
+        R.build_fed_round(CFG, _fed("nope"), sgd())
+    with pytest.raises(ValueError, match="mode"):
+        FLServer(CFG, _fed("nope"), sgd())
+    # the sync builder refuses an async config outright — silently emitting
+    # a sync round with buffer_size/staleness ignored would masquerade as
+    # the buffered engine
+    with pytest.raises(ValueError, match="BufferedAsyncEngine"):
+        R.build_fed_round(CFG, _fed("async", buffer_size=2), sgd())
+
+
+def test_timing_model_terms():
+    t = TimingModel(base_compute_s=10.0, uplink_b_s=1e6, payload_bytes=2e6)
+    assert t.compute_seconds(0.0) == pytest.approx(10.0)
+    assert t.compute_seconds(0.5) == pytest.approx(20.0)
+    assert t.compute_seconds(1.0) == pytest.approx(10.0 / t.min_headroom)  # floored
+    up = client_upload_seconds(t, 3, t.payload_bytes, np.random.default_rng(0))
+    np.testing.assert_allclose(up, 2.0)  # 2 MB over 1 MB/s
+    loads = np.array([0.0, 0.5, 0.9])
+    assert sync_round_seconds(t, loads, up) == pytest.approx(10.0 / 0.1 + 2.0)
+    # the mask limits the wait to the selected subset
+    assert sync_round_seconds(t, loads, up, mask=np.array([1, 1, 0])) == pytest.approx(22.0)
+
+
+# ------------------------- platform integration ------------------------------
+
+def test_server_run_async_records_and_feeds_scheduler():
+    fed = _fed(buffer_size=2, staleness_alpha=0.5)
+    srv = FLServer(CFG, fed, sgd(0.05), load_model=_zero_var_lm())
+    with pytest.raises(RuntimeError, match="run_async"):
+        srv.run_round(_toks(0))
+    hist = srv.fit(iter(_toks(r) for r in range(3)), 3, log=None)
+    assert len(hist) == 3
+    times = [r.sim_time for r in hist]
+    assert times == sorted(times) and times[0] > 0
+    assert all(len(r.participants) == 2 and len(r.staleness) == 2 for r in hist)
+    # async completions fed the same scheduler quality EMA sync rounds use
+    seen = sorted({c for r in hist for c in r.participants})
+    assert not np.isnan(srv.scheduler.last_loss[seen]).any()
+    # the server's state IS the engine's state; edges unpack as usual
+    assert srv.state is srv.engine.state
+    assert jax.tree.structure(srv.global_params()) == jax.tree.structure(
+        R.make_template(CFG)
+    ) or srv.global_params() is not None
+
+
+def test_global_params_tracks_fresh_global_row():
+    """Buffered async: row 0 can hold a stale in-flight dispatch version,
+    so checkpoint/eval/serving dispatch must read the engine's global_row
+    (the last flush's first staged client), not row 0."""
+    fed = _fed(buffer_size=2)
+    lm = _zero_var_lm()
+    lm.baseline = lm.loads = np.array([0.9, 0.1, 0.1, 0.9])  # client 0 slow
+    srv = FLServer(CFG, fed, sgd(0.05), load_model=lm)
+    rec = srv.run_async(_toks(0))
+    assert rec.participants == [1, 2] and srv.engine.global_row == 1
+    p = np.asarray(srv.state["params"])
+    assert not np.array_equal(p[0], p[1])  # row 0 = stale in-flight dispatch
+    want = R.unpacked_params(CFG, fed, {"params": srv.state["params"][1:2]})
+    for a, b in zip(jax.tree.leaves(srv.global_params()), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b)[0])
+
+
+def test_sync_server_advances_shared_clock():
+    """A sync FLServer handed the platform's shared clock consumes
+    simulated time (wait-for-slowest) and reports next_time, so it can
+    interleave with async tasks under TaskManager.step_shared_clock;
+    without an explicit clock, sync rounds keep the legacy timeless
+    cadence."""
+    clock = SimClock()
+    srv = FLServer(CFG, _fed("sync"), sgd(0.05), load_model=_zero_var_lm(), clock=clock)
+    assert srv.next_time() > 0.0  # now + wait-for-slowest estimate
+    srv.run_round(_toks(0))
+    t1 = clock.now()
+    assert t1 > 0.0  # the round consumed simulated time
+    srv.run_round(_toks(1))
+    assert clock.now() > t1
+    # the load process advanced by the same simulated span as the clock —
+    # not by one legacy tick per round (the cadence-conflation bug)
+    assert srv.load_model.t == pytest.approx(clock.now())
+    srv2 = FLServer(CFG, _fed("sync"), sgd(0.05), load_model=_zero_var_lm())
+    srv2.run_round(_toks(0))
+    assert srv2.clock.now() == 0.0  # legacy: no shared clock, no sim time
+    assert srv2.load_model.t == pytest.approx(1.0)  # legacy tick preserved
+
+
+def test_load_model_ar1_variance_is_cadence_consistent():
+    """Stepping dt in one go or in k slices must give the same process
+    variance: sparse sampling (the async engine's big inter-event gaps)
+    cannot saturate loads at the clip walls."""
+    cfg = LoadModelConfig(straggler_frac=0.0, base_spread=0.0, spike_prob=0.0)
+    big = ClientLoadModel(4096, seed=5, config=cfg)
+    big.step(600.0)  # one sparse step, way past the decorrelation time
+    small = ClientLoadModel(4096, seed=6, config=cfg)
+    for _ in range(600):
+        small.step(1.0)  # dense legacy cadence to the same sim time
+    # both sit at the stationary distribution: jitter/sqrt(1-rho^2) ~ 0.13,
+    # nowhere near the sqrt(dt) blow-up (~2.0) the naive scaling produced
+    assert abs(np.std(big.loads) - np.std(small.loads)) < 0.03
+    assert np.std(big.loads) < 0.3
+
+
+def test_task_manager_interleaves_on_shared_clock():
+    """An 'async' task (event-queue ETAs) and a sync task (now + round
+    period) advance in simulated-completion order, not round-robin."""
+    clock = SimClock()
+    order = []
+
+    def mk(tid, durations):
+        times = iter(durations)
+        pending = [None]
+
+        def nt():
+            if pending[0] is None:
+                pending[0] = clock.now() + next(times)
+            return pending[0]
+
+        def run(r):
+            t = nt()
+            clock.advance_to(t)
+            pending[0] = None
+            order.append((tid, t))
+            return {"round": r, "t": t}
+
+        return FederatedTask(tid, "x", len(durations), run, next_time=nt)
+
+    tm = TaskManager(clock=clock)
+    tm.register(mk("async", [10.0, 15.0, 30.0]))  # flushes at t=10, 25, 55
+    tm.register(mk("sync", [20.0, 20.0]))  # rounds at t=20, 40
+    tm.run_to_completion()
+    assert [o[0] for o in order] == ["async", "sync", "async", "sync", "async"]
+    assert clock.now() == pytest.approx(55.0)
+    assert all(t.rounds_done == t.total_rounds for t in tm.tasks.values())
+    # a task with no next_time would report "ready now" forever and starve
+    # the clocked tasks — shared-clock mode rejects it loudly instead
+    tm.register(FederatedTask("untimed", "x", 1, lambda r: {}))
+    with pytest.raises(RuntimeError, match="next_time"):
+        tm.step_shared_clock()
+
+
+def test_two_async_engines_share_one_clock():
+    """A peer task can advance the shared clock past another engine's
+    queued completions; those events must land 'now' (never a backwards
+    clock error, never a failed task)."""
+    clock = SimClock()
+    fed = _fed(buffer_size=2)
+    a = BufferedAsyncEngine(CFG, fed, sgd(0.05), seed=0, clock=clock,
+                            load_model=_zero_var_lm(seed=0), timing=TimingModel())
+    slow = _zero_var_lm(seed=1)
+    slow.baseline = slow.loads = np.full(C, 0.6)  # B's fleet ~2x slower
+    b = BufferedAsyncEngine(CFG, fed, sgd(0.05), seed=1, clock=clock,
+                            load_model=slow, timing=TimingModel())
+    for r in range(3):  # A's flushes race the clock past B's queued events
+        a.step_round(_toks(r))
+    assert clock.now() > b.next_completion_time()  # B's events are past due
+    rec = b.step_round(_toks(9))  # lands "now" instead of raising
+    assert rec.sim_time == clock.now() and np.isfinite(rec.loss)
+    assert rec.participants and rec.staleness == [0, 0]
+
+
+def test_task_manager_without_clock_keeps_fair_share():
+    tm = TaskManager()
+    calls = []
+    tm.register(FederatedTask("a", "x", 2, lambda r: calls.append("a") or {}))
+    tm.register(FederatedTask("b", "x", 2, lambda r: calls.append("b") or {}))
+    tm.run_to_completion()
+    assert calls == ["a", "b", "a", "b"]  # lockstep round-robin, unchanged
+    with pytest.raises(RuntimeError, match="SimClock"):
+        tm.step_shared_clock()
+
+
+def test_monitor_renders_async_records():
+    recs = [
+        AsyncRoundRecord(round_idx=i, loss=2.0 - 0.1 * i, weights=[0.5, 0.5, 0.0],
+                         seconds=0.1, participants=[0, 1], loads=[0.2, 0.3, 0.9],
+                         version=i + 1, sim_time=30.0 * (i + 1),
+                         staleness=[0, i], dropped=i % 2)
+        for i in range(3)
+    ]
+    txt = monitor.render_task("demo", recs, 3)
+    assert "sim clock 90s" in txt and "dropped 1" in txt and "staleness" in txt
+    data = json.loads(monitor.export_json("demo", recs, 3))
+    assert data["rounds"][-1]["sim_time"] == pytest.approx(90.0)
+    assert data["rounds"][-1]["staleness"] == [0, 2]
+    # sync records still render without the async line
+    from repro.core.server import RoundRecord
+
+    sync_txt = monitor.render_task(
+        "s", [RoundRecord(0, 1.0, [1.0], 0.1)], 1
+    )
+    assert "sim clock" not in sync_txt
+
+
+def test_train_cli_async():
+    root = Path(__file__).resolve().parents[1]
+    env = {**os.environ, "PYTHONPATH": str(root / "src"), "JAX_PLATFORMS": "cpu"}
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-1.7b",
+         "--rounds", "3", "--clients", "3", "--batch", "2", "--seq", "32",
+         "--mode", "async", "--buffer-size", "2", "--max-staleness", "4"],
+        env=env, cwd=root, capture_output=True, text=True, timeout=420,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["mode"] == "async" and out["rounds"] == 3
+    assert out["sim_seconds"] > 0 and out["dropped"] == 0
