@@ -15,15 +15,20 @@ Prints ``name,value,derived`` CSV. Modules:
   async_sweep      — async vs sync time-to-loss on the simulated wall clock,
                      straggler fractions {0.125, 0.25, 0.5} (async must win
                      at 0.25 or the module fails)
+  client_scaling   — flat vs hier vs sharded-hier aggregation at
+                     C ∈ {8, 64, 256, 1024} + the C=1024 streaming async
+                     flush (DESIGN.md §13); writes BENCH_scaling_sweep.csv
   roofline_table   — per (arch x shape x mesh) roofline from the dry-run
 
 ``--smoke`` runs the cheap analytic tables, a 1-iteration flat-round sweep,
 the eq6 tiling guard (packed eq6 must beat the tree path at 256k — the
-module FAILS if the packed reducer regresses), and the async-vs-sync
+module FAILS if the packed reducer regresses), the async-vs-sync
 equivalence guard (full-buffer async must reproduce the sync round
-bit-for-bit) — the CI gate (scripts/check.sh) that proves the harness
-imports, both round engines run, and the re-tiled reducers still win, in
-a couple of minutes of compute.
+bit-for-bit), and the hier scaling guard (the two-level reduce must not
+lose to flat at C=64, with the C ∈ {8, 64} curves written to
+BENCH_scaling_sweep.csv) — the CI gate (scripts/check.sh) that proves the
+harness imports, both round engines run, and the re-tiled reducers still
+win, in a few minutes of compute.
 """
 from __future__ import annotations
 
@@ -38,7 +43,7 @@ def main() -> None:
                     help="fast CI subset: analytic tables + tiny participation sweep")
     args = ap.parse_args()
 
-    from benchmarks import async_bench, bandwidth_model, convergence, kernel_bench, roofline_table, upload_time
+    from benchmarks import async_bench, bandwidth_model, convergence, kernel_bench, roofline_table, scale_bench, upload_time
 
     if args.smoke:
         modules = [
@@ -47,6 +52,7 @@ def main() -> None:
             ("flat_round", lambda: kernel_bench.flat_round_rows(iters=1)),
             ("eq6_guard", kernel_bench.eq6_guard_rows),
             ("async_equiv", async_bench.equivalence_rows),
+            ("client_scaling", scale_bench.smoke_rows),
         ]
     else:
         modules = [
@@ -60,6 +66,7 @@ def main() -> None:
             ("eq6_guard", kernel_bench.eq6_guard_rows),
             ("async_equiv", async_bench.equivalence_rows),
             ("async_sweep", async_bench.async_sweep_rows),
+            ("client_scaling", scale_bench.full_rows),
             ("roofline_table", roofline_table.rows),
         ]
     failed = 0

@@ -1,0 +1,253 @@
+"""Client-axis scaling benches (PR 6, DESIGN.md §13).
+
+Three tables over the packed (C, N) buffer at C ∈ {8, 64, 256, 1024}:
+
+  client_scaling_rows — flat vs hierarchical aggregation (the eq6-style
+      masked bucket reduce, the engine's most general hot loop). Flat runs
+      one C-row reduce; hier runs the grouped inner mean (fused chains /
+      batched contraction under the per-group renormalization) plus the
+      same outer reduce over C/G group rows. Above the CHAIN_MAX_CLIENTS
+      cutover the flat path is one big contraction while hier's two small
+      levels stay chain-shaped — that is where the hierarchy wins.
+  sharded_hier_rows — the same hier reduce with the inner level running
+      shard-local under shard_map on a forced-2-device CPU mesh
+      (subprocess: the bench process itself runs on one device).
+  async_stream_rows — the C=1024 streaming async flush: state bytes of
+      the dispatch-ring + running-accumulator discipline vs the analytic
+      (C, N) buffered footprint, and one measured flush.
+
+hier_guard_rows is the CI gate: hier must not lose to flat at C=64 (the
+first federation size where the flat chain's unroll starts to hurt).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.kernel_bench import _bench_spec, _timeit, _timeit_paired
+from repro.core import packing
+
+N_BENCH = 262_144
+N_LEAVES = 32
+GROUPS = {8: 4, 64: 8, 256: 16, 1024: 32}  # G ~ sqrt(C): both levels stay small
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _setup(C: int, N: int = N_BENCH, n_leaves: int = N_LEAVES):
+    rng = np.random.default_rng(3)
+    spec = _bench_spec(C, N, n_leaves)
+    packed = jnp.asarray(rng.normal(size=(C, N)), jnp.float32)
+    w = jnp.full((C,), 1 / C, jnp.float32)
+    bmask = jnp.asarray(np.random.default_rng(7).integers(0, 2, (C, n_leaves)), jnp.float32)
+    return spec, packed, w, bmask * w[:, None]
+
+
+def _hier_fn(spec, G: int, w, n_leaves: int = N_LEAVES):
+    ngroups = w.shape[0] // G
+    gbmask = jnp.asarray(
+        np.random.default_rng(11).integers(0, 2, (ngroups, n_leaves)), jnp.float32
+    )
+
+    def f(p):
+        rows, den = packing.grouped_weighted_mean(p, w, G)
+        return packing.masked_bucket_mean(rows, gbmask * den[:, None], spec)
+
+    return jax.jit(f)
+
+
+def _flat_hier_pair(C: int, G: int, iters: int):
+    spec, packed, w, wmask = _setup(C)
+    flat = jax.jit(lambda p: packing.masked_bucket_mean(p, wmask, spec))
+    hier = _hier_fn(spec, G, w)
+    return _timeit_paired(
+        lambda p: flat(p), (packed,), lambda p: hier(p), (packed,), iters=iters
+    )
+
+
+def client_scaling_rows(Cs=(8, 64, 256, 1024), iters: int = 5, sharded: bool = True):
+    out = []
+    for C in Cs:
+        G = GROUPS[C]
+        us_flat, us_hier = _flat_hier_pair(C, G, iters)
+        out.append((
+            f"scale/agg_flat_C{C}", us_flat,
+            f"N={N_BENCH};mode=eq6_masked_bucket;iters={iters}",
+        ))
+        out.append((
+            f"scale/agg_hier_C{C}_G{G}", us_hier,
+            f"N={N_BENCH};inner=grouped_mean;outer=masked_bucket;"
+            f"speedup_vs_flat={us_flat / max(us_hier, 1e-9):.2f}x;iters={iters}",
+        ))
+    if sharded:
+        out.extend(sharded_hier_rows(Cs, iters=min(iters, 3)))
+    return out
+
+
+def hier_guard_rows(iters: int = 5):
+    """CI gate: the hierarchy must not lose to the flat reduce at C>=64."""
+    C, G = 64, GROUPS[64]
+    us_flat, us_hier = _flat_hier_pair(C, G, iters)
+    if us_hier > us_flat:
+        raise RuntimeError(
+            f"hier aggregation lost to flat at C={C}: {us_hier:.1f}us vs "
+            f"{us_flat:.1f}us — the two-level reduce regressed "
+            f"(grouped inner chains or the {G}-row outer reduce)"
+        )
+    return [(
+        f"scale/hier_guard_C{C}", us_hier,
+        f"flat={us_flat:.1f}us;speedup={us_flat / max(us_hier, 1e-9):.2f}x;"
+        f"guard=hier_must_not_lose_at_C>=64;iters={iters}",
+    )]
+
+
+_SHARDED_SCRIPT = r"""
+import sys
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from benchmarks.kernel_bench import _timeit
+from benchmarks.scale_bench import GROUPS, _setup, N_BENCH
+from repro.core import packing
+
+assert jax.device_count() == 2, jax.device_count()
+mesh = jax.make_mesh((2, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+iters = int(sys.argv[2])
+for C in [int(c) for c in sys.argv[1].split(",")]:
+    G = GROUPS[C]
+    spec, packed, w, _ = _setup(C)
+    ngroups = C // G
+    gbmask = jnp.asarray(np.random.default_rng(11).integers(0, 2, (ngroups, spec.n_buckets)), jnp.float32)
+
+    def f(p, w=w, G=G, gbmask=gbmask, spec=spec):
+        rows, den = jax.shard_map(
+            lambda pl, wl: packing.grouped_weighted_mean(pl, wl, G),
+            mesh=mesh,
+            in_specs=(P("data", None), P("data")),
+            out_specs=(P("data", None), P("data")),
+            check_vma=False,
+        )(p, w)
+        return packing.masked_bucket_mean(rows, gbmask * den[:, None], spec)
+
+    sharding = jax.NamedSharding(mesh, P("data", None))
+    p_sh = jax.device_put(packed, sharding)
+    fj = jax.jit(f)
+    us = _timeit(lambda p: fj(p), p_sh, iters=iters)
+    print(f"SHARDROW,scale/agg_hier_sharded_C{C}_G{G},{us},"
+          f"N={N_BENCH};shards=2;inner=shard_local_grouped_mean;iters={iters}")
+"""
+
+
+def sharded_hier_rows(Cs=(8, 64, 256, 1024), iters: int = 3):
+    """Times the shard-local hier reduce on 2 forced host devices. A
+    subprocess because this process already initialized jax on one."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=2"
+    ).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [_ROOT, os.path.join(_ROOT, "src"), env.get("PYTHONPATH", "")]
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT, ",".join(str(c) for c in Cs), str(iters)],
+        env=env, capture_output=True, text=True, timeout=1200, cwd=_ROOT,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"sharded hier bench failed:\n{out.stdout}\n{out.stderr}")
+    rows = []
+    for line in out.stdout.splitlines():
+        if line.startswith("SHARDROW,"):
+            _, name, us, extra = line.split(",", 3)
+            rows.append((name, float(us), extra))
+    return rows
+
+
+def async_stream_rows():
+    """The C=1024 streaming flush: O(buffer_size·N) accumulator state vs
+    the (C, N) buffered footprint, plus one measured flush."""
+    from repro.configs import get_arch
+    from repro.core.async_engine import StreamingAsyncEngine
+    from repro.core.rounds import FedConfig
+    from repro.optim import sgd
+
+    cfg = get_arch("qwen3-1.7b").reduced()
+    C, k_buf = 1024, 16
+    fed = FedConfig(
+        n_clients=C, local_steps=1, aggregation="dense", client_axis="data",
+        data_axis=None, state_layout="flat", mode="async", buffer_size=k_buf,
+        max_staleness=4, stream=True,
+    )
+    eng = StreamingAsyncEngine(cfg, fed, sgd(lr=0.05, momentum=0.0), seed=0)
+    n = eng.agg.ctx.spec.n_total
+    for leaf in jax.tree.leaves(eng.state):
+        assert not (leaf.ndim and leaf.shape[0] == C), (
+            f"streaming state materialized a client-dim leaf {leaf.shape}"
+        )
+    state_mb = sum(leaf.nbytes for leaf in jax.tree.leaves(eng.state)) / 1e6
+    # the buffered engine at the same size: (C, N) params + (C, N) sgd
+    # momentum rows, before counting the flush's own temporaries
+    buffered_mb = 2 * C * n * 4 / 1e6
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (C, 1, 2, 16)), jnp.int32)}
+    t0 = time.perf_counter()
+    eng.step_round(batch)  # compile + first flush
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    eng.step_round(batch)
+    flush_us = (time.perf_counter() - t0) * 1e6
+    return [
+        (
+            "scale/async_stream_state_C1024", round(state_mb, 2),
+            f"unit=MB;ring={fed.max_staleness + 1}xN;acc=1xN;"
+            f"buffered_analytic={buffered_mb:.0f}MB;"
+            f"ratio={buffered_mb / state_mb:.0f}x;no_CxN_leaf=checked",
+        ),
+        (
+            "scale/async_stream_flush_C1024", round(flush_us, 1),
+            f"unit=us;buffer={k_buf};cohort={eng._cohort};"
+            f"compile_s={compile_s:.1f};mode=dense;opt=sgd_m0",
+        ),
+    ]
+
+
+def write_csv(rows, path: str = None) -> None:
+    path = path or os.path.join(_ROOT, "BENCH_scaling_sweep.csv")
+    with open(path, "w") as f:
+        f.write("name,value,extra\n")
+        for name, val, extra in rows:
+            f.write(f"{name},{val},{extra}\n")
+
+
+def smoke_rows():
+    """CI subset: the C=64 guard + the C ∈ {8, 64} flat/hier/sharded
+    curves, written to BENCH_scaling_sweep.csv for the CI artifact."""
+    rows = hier_guard_rows(iters=3) + client_scaling_rows(Cs=(8, 64), iters=3)
+    write_csv(rows)
+    return rows
+
+
+def full_rows():
+    rows = (
+        hier_guard_rows()
+        + client_scaling_rows(Cs=(8, 64, 256, 1024))
+        + async_stream_rows()
+    )
+    write_csv(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    all_rows = full_rows()
+    for name, val, extra in all_rows:
+        print(f"{name},{val},{extra}")
+    from benchmarks.kernel_bench import emit_trajectory
+
+    emit_trajectory(all_rows)

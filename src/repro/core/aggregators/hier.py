@@ -1,0 +1,155 @@
+"""Hierarchical two-level aggregation over the packed buffer (DESIGN.md §13).
+
+FedVision's deployment is many cameras behind few edge servers: ``hier``
+makes that topology a registered aggregator that composes any *stacked*
+mode. Clients are split into C/G contiguous edge groups of
+``FedConfig.group_size`` G; each group reduces locally with a per-group
+renormalized weighted mean (`packing.grouped_weighted_mean` — one fused
+chain per group under the CHAIN_MAX_CLIENTS cutover, one batched
+contraction or `kernels/pack.grouped_reduce` launch above it), then the
+registered ``FedConfig.hier_base`` reducer merges the (C/G, N_total) group
+rows exactly as it would merge client rows. Group weights are the sums of
+their members' (mask-folded) weights, so the two-level dense mean IS the
+flat dense mean analytically:
+
+    sum_g (sum_i w_gi) * [sum_i w_gi x_gi / sum_i w_gi] / sum_g sum_i w_gi
+  = sum_c w_c x_c / sum_c w_c                                     (Eq. 5)
+
+A group none of whose members participated reduces to a zero row with a
+zero group weight and is masked out of the outer reduce. The outer
+dispatch row of each group is broadcast to all its members — the edge
+server redistributes within its group.
+
+Equivalence anchors (pinned in tests/test_hier.py): at ``G == 1`` every
+group is one client and at ``G == C`` there is one group — both degenerate
+points are *the flat path itself*, so ``hier`` delegates verbatim to the
+``hier_base`` aggregator over the full cohort and is bit-for-bit the
+existing engine by construction (recomputing through the generic two-level
+program would re-order the floating-point reductions).
+
+Sharded client axis: with a mesh whose client axis has S > 1 shards, the
+inner group reduce runs inside `shard_map` — groups must be shard-local
+((C/S) % G == 0, validated at build — so every group mean completes
+without communication, and the only cross-shard data movement is the
+gather of the small (C/G, N) group-row operand into the outer reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import packing
+from repro.core.aggregators.base import AggContext, Aggregator, get, register
+
+
+@register
+class Hier(Aggregator):
+    name = "hier"
+
+    def __init__(self, ctx: AggContext):
+        super().__init__(ctx)
+        fed = ctx.fed
+        C = fed.n_clients
+        G = fed.group_size or C
+        if not 1 <= G <= C or C % G:
+            raise ValueError(
+                f"hier: group_size={G} must divide n_clients={C} "
+                f"(and lie in [1, {C}])"
+            )
+        base = fed.hier_base
+        if base == "hier":
+            raise ValueError("hier: hier_base='hier' would recurse; name a flat reducer")
+        base_cls = get(base)  # build-time: unknown names fail here
+        if not base_cls.stacked:
+            raise ValueError(
+                f"hier: hier_base={base!r} runs one shared model copy "
+                "(fedsgd topology); compose a client-stacked reducer"
+            )
+        self.group_size = G
+        self.ngroups = C // G
+        self._shards = 1
+        if ctx.mesh is not None:
+            self._shards = dict(
+                zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)
+            ).get(fed.client_axis, 1)
+        self._delegate = G in (1, C)
+        if self._delegate:
+            # the equivalence anchor: both degenerate geometries ARE the
+            # flat path, so run the base aggregator verbatim — same program,
+            # bit-for-bit, for every registered stacked mode
+            impl_ctx = dataclasses.replace(
+                ctx, fed=dataclasses.replace(fed, aggregation=base, group_size=0)
+            )
+            self._impl = base_cls(impl_ctx)
+            return
+        if self._shards > 1 and (C // self._shards) % G:
+            raise ValueError(
+                f"hier: groups must be shard-local — n_clients={C} over "
+                f"{self._shards} '{fed.client_axis}' shards leaves "
+                f"{C // self._shards} rows per shard, not divisible by "
+                f"group_size={G}"
+            )
+        # the outer reduce sees C/G "clients" (the group rows), replicated:
+        # the gathered (C/G, N) operand is the one cross-shard merge
+        outer_fed = dataclasses.replace(
+            fed, n_clients=self.ngroups, aggregation=base, group_size=0
+        )
+        self._impl = base_cls(dataclasses.replace(ctx, fed=outer_fed, mesh=None))
+
+    # -- cross-round state ---------------------------------------------------
+    def init_state(self, packed0):
+        if self._delegate:
+            return self._impl.init_state(packed0)
+        # one representative row per group: every client starts from the
+        # same dispatch, so the strided slice is the initial group-row view
+        return self._impl.init_state(packed0[:: self.group_size])
+
+    def state_pspecs(self):
+        if self._delegate:
+            return self._impl.state_pspecs()
+        # outer state is group-granular ((C/G, ...) at most) — replicate it
+        # server-side rather than inheriting client-axis pspecs the group
+        # count need not divide
+        C = self.ctx.fed.n_clients
+        abs_in = jax.ShapeDtypeStruct((C, self.ctx.spec.n_total), jnp.float32)
+        return jax.tree.map(lambda _: P(), jax.eval_shape(self.init_state, abs_in))
+
+    # -- the round -----------------------------------------------------------
+    def _inner(self, packed, w):
+        """(C, N) + mask-folded (C,) weights -> ((C/G, N) rows, (C/G,) den),
+        shard-local under shard_map when the client axis is sharded."""
+        fed = self.ctx.fed
+        if self._shards > 1:
+            pspec = packing.packed_pspec(self.ctx.spec, fed.client_axis, self.ctx.mesh)
+
+            def body(p_loc, w_loc):
+                return packing.grouped_weighted_mean(
+                    p_loc, w_loc, self.group_size, impl=fed.agg_impl
+                )
+
+            return jax.shard_map(
+                body,
+                mesh=self.ctx.mesh,
+                in_specs=(pspec, P(fed.client_axis)),
+                out_specs=(P(*pspec), P(fed.client_axis)),
+                check_vma=False,
+            )(packed, w)
+        return packing.grouped_weighted_mean(
+            packed, w, self.group_size, impl=fed.agg_impl
+        )
+
+    def aggregate(self, packed, weights, agg_state, mask=None):
+        if self._delegate:
+            return self._impl.aggregate(packed, weights, agg_state, mask)
+        w = self._masked_weights(weights, mask)
+        rows, den = self._inner(packed, w)  # (C/G, N) f32, (C/G,)
+        gmask = (den > 0).astype(jnp.float32)  # empty groups drop out
+        out_g, agg_state = self._impl.aggregate(rows, den, agg_state, gmask)
+        C, N = packed.shape
+        out = jnp.broadcast_to(
+            out_g.astype(packed.dtype)[:, None, :], (self.ngroups, self.group_size, N)
+        ).reshape(C, N)
+        return out, agg_state

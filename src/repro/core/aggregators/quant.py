@@ -29,16 +29,29 @@ class Quant8(Aggregator):
     def __init__(self, ctx):
         super().__init__(ctx)
         C = ctx.fed.n_clients
+        G = ctx.fed.group_size
+        shards = 1
         if ctx.mesh is not None:
             shards = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)).get(
                 ctx.fed.client_axis, 1
             )
-            if C % shards:
+        if G:
+            # hierarchical geometry: groups must tile the cohort AND each
+            # shard must hold whole groups, or the gathered int8 rows of a
+            # group straddle devices and the row-scale vectors misalign
+            if C % G or (shards > 1 and G % shards):
                 raise ValueError(
-                    f"quant8 requires n_clients ({C}) divisible by the "
-                    f"'{ctx.fed.client_axis}' mesh axis ({shards} shards); "
-                    f"otherwise the gathered row-scale vector has the wrong length"
+                    f"quant8 hierarchical geometry invalid: n_clients={C}, "
+                    f"group_size={G}, '{ctx.fed.client_axis}' shards={shards} "
+                    f"— need n_clients % group_size == 0 and "
+                    f"group_size % shards == 0"
                 )
+        elif C % max(shards, 1):
+            raise ValueError(
+                f"quant8 requires n_clients ({C}) divisible by the "
+                f"'{ctx.fed.client_axis}' mesh axis ({shards} shards); "
+                f"otherwise the gathered row-scale vector has the wrong length"
+            )
 
     def init_state(self, packed0):
         # the dispatched base model each client diffs against next round —

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 from repro.core import explorer, packing
 from repro.core import rounds as R
 from repro.core.simclock import SimClock
+from repro.models import params as mp
 
 PyTree = Any
 
@@ -253,6 +254,11 @@ class BufferedAsyncEngine:
             )
         if fed.max_staleness < 0:
             raise ValueError(f"max_staleness={fed.max_staleness} must be >= 0")
+        if fed.stream and type(self) is BufferedAsyncEngine:
+            raise ValueError(
+                "FedConfig(stream=True) selects the streaming flush; construct "
+                "StreamingAsyncEngine (FLServer dispatches on fed.stream)"
+            )
         self.cfg, self.fed, self.optimizer = cfg, fed, optimizer
         # a caller that already resolved the aggregator (FLServer) passes it
         # in — make_aggregator walks the whole param template for the
@@ -270,20 +276,8 @@ class BufferedAsyncEngine:
         self.upload_s = default_upload_terms(
             self.timing, C, self.agg.ctx.spec.n_total, seed
         )
-        self.state = R.make_state(cfg, fed, optimizer, jax.random.key(seed), dtype)
-        if self.k_buf == C:
-            # the sync-equivalence contract, by construction: a full buffer
-            # means every client completed (staleness == 0 everywhere), and
-            # the flush IS the sync full-participation round program
-            self._flush = R.jit_fed_round(
-                R.build_fed_round(cfg, dataclasses.replace(fed, mode="sync"), optimizer, mesh, rules)
-            )
-            self._full = True
-        else:
-            self._flush = jax.jit(
-                _build_buffered_flush(cfg, fed, optimizer, self.agg), donate_argnums=(0,)
-            )
-            self._full = False
+        self._mesh, self._rules, self._dtype, self._seed = mesh, rules, dtype, seed
+        self._init_state_and_flush()
         self.version = 0
         self.dispatch_version = np.zeros(C, np.int64)
         self.completions = 0
@@ -296,6 +290,32 @@ class BufferedAsyncEngine:
         self.global_row = 0  # the state row currently holding the global dispatch
         for c in range(C):
             self._push(c)
+
+    # -- state + flush program (overridden by StreamingAsyncEngine) ----------
+
+    def _init_state_and_flush(self) -> None:
+        cfg, fed, optimizer = self.cfg, self.fed, self.optimizer
+        self.state = R.make_state(cfg, fed, optimizer, jax.random.key(self._seed), self._dtype)
+        if self.k_buf == fed.n_clients:
+            # the sync-equivalence contract, by construction: a full buffer
+            # means every client completed (staleness == 0 everywhere), and
+            # the flush IS the sync full-participation round program
+            self._flush = R.jit_fed_round(
+                R.build_fed_round(
+                    cfg, dataclasses.replace(fed, mode="sync"), optimizer, self._mesh, self._rules
+                )
+            )
+            self._full = True
+        else:
+            self._flush = jax.jit(
+                _build_buffered_flush(cfg, fed, optimizer, self.agg), donate_argnums=(0,)
+            )
+            self._full = False
+
+    def global_packed_row(self) -> jax.Array:
+        """The (N_total,) packed row holding the current global dispatch —
+        the one pack/unpack edge `server.global_params` reads through."""
+        return self.state["params"][self.global_row]
 
     # -- event machinery -----------------------------------------------------
 
@@ -327,18 +347,31 @@ class BufferedAsyncEngine:
 
     # -- one flush -----------------------------------------------------------
 
-    def step_round(self, batch: PyTree) -> AsyncRoundRecord:
-        """Collect ``buffer_size`` completions, flush once.
+    def _drop(self, c: int) -> None:
+        """Dropped completion: counted, redispatched from the current global
+        (its opt row persists — per-client optimizer memory is the client's
+        own, exactly as in the sync flat engine); the row copy batches with
+        other drops this window."""
+        self._pending.add(c)
 
-        batch: the same (C, E, per-step...) pytree the sync round takes;
-        only staged rows are consumed (the gated trainer carries the rest
-        through untouched).
-        """
-        t_host = time.time()
-        C = self.fed.n_clients
+    def _pre_stage(self, c: int) -> None:
+        if c in self._pending:
+            # a dropped client completed again before its deferred row
+            # copy landed — materialize the copies so it trains from
+            # the global it was redispatched with
+            self._apply_pending_redispatch(self._pending)
+
+    def _post_collect(self) -> None:
+        self._apply_pending_redispatch(self._pending)
+
+    def _collect(self) -> tuple[list[int], list[int], int]:
+        """Pop completion events (advancing the shared clock and the load
+        model in simulated time) until ``buffer_size`` updates stage.
+        Shared by both flush disciplines — the buffered/streaming split is
+        only in what a drop and a flush do with the rows."""
         staged: list[int] = []
         stal: list[int] = []
-        pending_redispatch: set[int] = set()  # dropped rows awaiting the global copy
+        self._pending: set[int] = set()  # dropped rows awaiting the global copy
         dropped = 0
         while len(staged) < self.k_buf:
             t, c = heapq.heappop(self._queue)
@@ -351,24 +384,33 @@ class BufferedAsyncEngine:
             self.completions += 1
             s = self.version - int(self.dispatch_version[c])
             if self.fed.max_staleness and s > self.fed.max_staleness:
-                # dropped: counted, redispatched from the current global
-                # (its opt row persists — per-client optimizer memory is the
-                # client's own, exactly as in the sync flat engine); the row
-                # copy batches with other drops this window
                 dropped += 1
                 self.dropped_total += 1
                 self.dispatch_version[c] = self.version
-                pending_redispatch.add(c)
+                self._drop(c)
                 self._push(c)
                 continue
-            if c in pending_redispatch:
-                # a dropped client completed again before its deferred row
-                # copy landed — materialize the copies so it trains from
-                # the global it was redispatched with
-                self._apply_pending_redispatch(pending_redispatch)
+            self._pre_stage(c)
             staged.append(c)
             stal.append(s)
-        self._apply_pending_redispatch(pending_redispatch)
+        self._post_collect()
+        return staged, stal, dropped
+
+    def step_round(self, batch: PyTree) -> AsyncRoundRecord:
+        """Collect ``buffer_size`` completions, flush once.
+
+        batch: the same (C, E, per-step...) pytree the sync round takes;
+        only staged rows are consumed (the gated trainer carries the rest
+        through untouched; the streaming flush gathers only staged rows).
+        """
+        t_host = time.time()
+        staged, stal, dropped = self._collect()
+        rec = self._do_flush(staged, stal, dropped, batch, t_host)
+        self.history.append(rec)
+        return rec
+
+    def _do_flush(self, staged, stal, dropped, batch, t_host) -> AsyncRoundRecord:
+        C = self.fed.n_clients
         mask = np.zeros(C, np.float32)
         mask[staged] = 1.0
         stal_vec = np.zeros(C, np.float32)
@@ -408,5 +450,168 @@ class BufferedAsyncEngine:
             staleness=[int(s) for s in stal],
             dropped=dropped,
         )
-        self.history.append(rec)
         return rec
+
+
+class StreamingAsyncEngine(BufferedAsyncEngine):
+    """The O(buffer_size · N) flush discipline for large federations
+    (DESIGN.md §13). Same event queue, clock, staleness accounting and
+    record format as :class:`BufferedAsyncEngine`; what changes is the
+    state the flush runs over:
+
+    - No ``(C, N_total)`` buffer. A client's dispatch content is the global
+      of the version it was dispatched with, so the engine keeps ONE ring
+      of ``max_staleness + 1`` packed global rows — versions
+      ``[version - max_staleness, version]``, exactly the versions a
+      non-dropped completion can still reference. ``state["ring"]`` is
+      ``(max_staleness + 1, N_total)``; a drop redispatches by writing
+      ``dispatch_version[c]`` only (the ring already holds the row — the
+      buffered engine instead copies a row per drop window).
+    - Landed cohorts reduce into a running ``(N_total,)`` accumulator plus
+      a weight scalar in ``state["agg"]`` (``acc``/``wsum``): each flush
+      gathers at most ``_cohort`` dispatch rows from the ring, trains them,
+      and folds ``sum_q w_q * trained_q`` into ``acc`` — peak extra memory
+      is O(cohort · N), never O(C · N). The finalize step divides, writes
+      the fresh global into ring slot ``(version+1) % R`` and zeroes the
+      accumulator.
+    - Training is stateless: no per-client optimizer rows exist, so the
+      local optimizer must carry nothing between rounds
+      (``sgd(momentum=0.0)``) — validated at build. Aggregation must be
+      the linear ``dense`` reduce (the only mode a running sum can
+      represent); both are build-time errors otherwise.
+
+    With the same seed, batches and timing, streaming matches the buffered
+    engine to reduction-order tolerance (the buffered flush reduces one
+    masked C-length chain; streaming sums k_buf rows in cohorts)."""
+
+    _cohort = 8  # max dispatch rows materialized per accumulate call
+
+    def _init_state_and_flush(self) -> None:
+        cfg, fed, optimizer = self.cfg, self.fed, self.optimizer
+        if not fed.stream:
+            raise ValueError("StreamingAsyncEngine needs FedConfig(stream=True)")
+        if fed.max_staleness < 1:
+            raise ValueError(
+                "streaming flush needs max_staleness >= 1: the dispatch ring "
+                "holds max_staleness+1 global versions in place of the (C, N) "
+                f"buffer, got max_staleness={fed.max_staleness}"
+            )
+        if fed.aggregation != "dense":
+            raise ValueError(
+                "streaming flush folds aggregation into a running weighted "
+                f"sum; only the linear 'dense' reduce streams, got "
+                f"{fed.aggregation!r}"
+            )
+        tpl = self.agg.ctx.template
+        spec = self.agg.ctx.spec
+        pabs = mp.abstract(tpl, self._dtype)
+        if jax.tree.leaves(jax.eval_shape(optimizer.init, pabs)):
+            raise ValueError(
+                "streaming flush keeps no per-client optimizer rows; use a "
+                f"stateless local optimizer (sgd(momentum=0.0)), "
+                f"got {optimizer.name!r} with persistent state"
+            )
+        self.ring_slots = fed.max_staleness + 1
+        # same init draw as make_state row 0: every engine with this seed
+        # starts from the identical global (the equivalence tests' anchor)
+        keys = jax.random.split(jax.random.key(self._seed), fed.n_clients)
+        row0 = packing.pack(
+            spec,
+            jax.tree.map(lambda x: x[None], mp.init_params(tpl, keys[0], self._dtype)),
+            self._dtype,
+        )[0]
+        n = spec.n_total
+        self.state = {
+            "ring": jnp.broadcast_to(row0, (self.ring_slots, n)),
+            "agg": {"acc": jnp.zeros((n,), jnp.float32), "wsum": jnp.zeros((), jnp.float32)},
+            "round": jnp.int32(0),
+        }
+        local_train, _ = R._local_training(cfg, fed, optimizer)
+
+        def accum(state, batch_q, slots, w_q):
+            # (Q, N) gather from the ring — the only row materialization
+            rows = jnp.take(state["ring"], slots, axis=0)
+            new_p, _, loss = jax.vmap(local_train)(
+                packing.unpack_views(spec, rows, tpl), {}, batch_q
+            )
+            trained = packing.write_slots(spec, rows, new_p).astype(jnp.float32)
+            acc = state["agg"]["acc"] + jnp.einsum("q,qn->n", w_q, trained)
+            wsum = state["agg"]["wsum"] + jnp.sum(w_q)
+            return {**state, "agg": {"acc": acc, "wsum": wsum}}, loss
+
+        def finalize(state, new_slot):
+            g = state["agg"]["acc"] / jnp.maximum(state["agg"]["wsum"], 1e-12)
+            ring = jax.lax.dynamic_update_index_in_dim(
+                state["ring"], g.astype(state["ring"].dtype), new_slot, 0
+            )
+            return {
+                "ring": ring,
+                "agg": {
+                    "acc": jnp.zeros_like(state["agg"]["acc"]),
+                    "wsum": jnp.zeros_like(state["agg"]["wsum"]),
+                },
+                "round": state["round"] + 1,
+            }
+
+        self._accum = jax.jit(accum, donate_argnums=(0,))
+        self._finalize = jax.jit(finalize, donate_argnums=(0,))
+        self._full = False
+
+    def global_packed_row(self) -> jax.Array:
+        return self.state["ring"][self.version % self.ring_slots]
+
+    # drops are version-only redispatches: the ring already holds the row
+    def _drop(self, c: int) -> None:
+        pass
+
+    def _pre_stage(self, c: int) -> None:
+        pass
+
+    def _post_collect(self) -> None:
+        pass
+
+    def _do_flush(self, staged, stal, dropped, batch, t_host) -> AsyncRoundRecord:
+        C = self.fed.n_clients
+        k = len(staged)
+        w_per = (
+            (1.0 / np.float32(k))
+            * (1.0 + np.asarray(stal, np.float32)) ** np.float32(-self.fed.staleness_alpha)
+        ).astype(np.float32)
+        Q = min(k, self._cohort)
+        losses = np.zeros(k, np.float32)
+        for i0 in range(0, k, Q):
+            chunk = staged[i0 : i0 + Q]
+            pad = Q - len(chunk)
+            idx = np.asarray(chunk + [chunk[0]] * pad, np.int64)
+            slots = jnp.asarray(
+                (self.dispatch_version[idx] % self.ring_slots).astype(np.int32)
+            )
+            w_q = np.zeros(Q, np.float32)
+            w_q[: len(chunk)] = w_per[i0 : i0 + Q]  # padding rows weigh 0
+            batch_q = jax.tree.map(lambda x: x[jnp.asarray(idx)], batch)
+            self.state, closs = self._accum(self.state, batch_q, slots, jnp.asarray(w_q))
+            losses[i0 : i0 + len(chunk)] = np.asarray(closs, np.float32)[: len(chunk)]
+        self.state = self._finalize(
+            self.state, jnp.int32((self.version + 1) % self.ring_slots)
+        )
+        self.version += 1
+        if self.scheduler is not None:
+            for i, c in enumerate(staged):
+                self.scheduler.report_quality(c, float(losses[i]))
+        for c in staged:
+            self.dispatch_version[c] = self.version
+            self._push(c)
+        w_disc = np.zeros(C, np.float32)
+        w_disc[staged] = w_per
+        return AsyncRoundRecord(
+            round_idx=self.version - 1,
+            loss=float(np.mean(losses)),
+            weights=[float(x) for x in w_disc],
+            seconds=time.time() - t_host,
+            participants=[int(c) for c in staged],
+            loads=[float(x) for x in self.load_model.loads],
+            version=self.version,
+            sim_time=self.clock.now(),
+            staleness=[int(s) for s in stal],
+            dropped=dropped,
+        )

@@ -4,6 +4,12 @@ federated model training on FedVision").
 Renders per-task progress — round, loss curve sparkline, participation,
 upload bytes — as the text analogue of the platform's dashboard, and
 exports the same data as JSON for a real UI.
+
+Per-client detail is capped at a top-k (`top_clients` ranking: latest
+per-client mAP when an eval trajectory exists, participation frequency
+otherwise) so a C=1024 federation renders and exports O(k) client rows,
+not O(C); pass ``per_client_cap=0`` to `export_json` to get the full
+per-client vectors on request.
 """
 from __future__ import annotations
 
@@ -22,7 +28,26 @@ def sparkline(values: Sequence[float], width: int = 32) -> str:
     return "".join(_SPARK[int((v - lo) / span * (len(_SPARK) - 1))] for v in vals)
 
 
-def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: float = 0.0, eval_history=None) -> str:
+def top_clients(history, n_clients: int, eval_history=None, k: int = 8) -> list[int]:
+    """The k clients worth per-client lines: ranked by the latest
+    per-client mAP when evals exist (quality is what the dashboard
+    watches), else by participation frequency. O(C log C) host-side once
+    per render — never O(C) render/export rows downstream."""
+    k = max(0, min(k, n_clients))
+    if eval_history:
+        per = eval_history[-1].per_client_map
+        order = sorted(range(min(n_clients, len(per))), key=lambda c: (-per[c], c))
+    else:
+        freq = [0] * n_clients
+        for r in history:
+            for c, w in enumerate(r.weights[:n_clients]):
+                if w > 0:
+                    freq[c] += 1
+        order = sorted(range(n_clients), key=lambda c: (-freq[c], c))
+    return order[:k]
+
+
+def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: float = 0.0, eval_history=None, top_k: int = 4) -> str:
     if not history:
         return f"[{task_id}] no rounds yet"
     losses = [r.loss for r in history]
@@ -53,6 +78,13 @@ def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: f
             f"  mAP@0.5  {maps[0]:.3f} → {maps[-1]:.3f}   {sparkline(maps)}"
             f"   client spread {spread:.3f}"
         )
+        # top-k per-client trajectories only — the render stays O(k) lines
+        # at C=1024 (the full vectors live in export_json(per_client_cap=0))
+        for c in top_clients(history, n_clients, eval_history, k=top_k):
+            traj = [e.per_client_map[c] for e in eval_history if c < len(e.per_client_map)]
+            lines.append(
+                f"    client {c:<5d} mAP {traj[-1]:.3f}   {sparkline(traj)}"
+            )
     if upload_bytes_per_round:
         lines.append(
             f"  upload   {upload_bytes_per_round / 1e6:.2f} MB/client/round "
@@ -61,7 +93,13 @@ def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: f
     return "\n".join(lines)
 
 
-def export_json(task_id: str, history, n_clients: int, eval_history=None) -> str:
+def export_json(task_id: str, history, n_clients: int, eval_history=None, per_client_cap: int = 16) -> str:
+    """JSON dashboard feed. Eval rows carry the full per-client mAP vector
+    only while ``n_clients <= per_client_cap``; above it each row exports
+    the top-``per_client_cap`` clients as a ``per_client_top`` map plus the
+    pooled spread, so the payload is O(k) per round at C=1024. Pass
+    ``per_client_cap=0`` (or None) to always export the full vectors."""
+
     def row(r):
         d = {"round": r.round_idx, "loss": r.loss, "participants": sum(1 for w in r.weights if w > 0), "seconds": r.seconds}
         if getattr(r, "sim_time", None) is not None and hasattr(r, "staleness"):
@@ -74,8 +112,23 @@ def export_json(task_id: str, history, n_clients: int, eval_history=None) -> str
         "n_clients": n_clients,
     }
     if eval_history:
-        out["eval"] = [
-            {"round": e.round_idx, "map50": e.map50, "per_client_map": e.per_client_map}
-            for e in eval_history
-        ]
+        cap = per_client_cap or 0
+        if cap and n_clients > cap:
+            top = top_clients(history, n_clients, eval_history, k=cap)
+
+            def erow(e):
+                per = e.per_client_map
+                return {
+                    "round": e.round_idx,
+                    "map50": e.map50,
+                    "per_client_top": {str(c): per[c] for c in top if c < len(per)},
+                    "per_client_capped": n_clients,
+                }
+
+            out["eval"] = [erow(e) for e in eval_history]
+        else:
+            out["eval"] = [
+                {"round": e.round_idx, "map50": e.map50, "per_client_map": e.per_client_map}
+                for e in eval_history
+            ]
     return json.dumps(out)

@@ -206,8 +206,12 @@ def merged_runs(spec: PackSpec) -> tuple[tuple[int, int, int, int], ...]:
 
 
 # clients beyond this fall back to contraction ops: the fused chains unroll
-# one multiply-add per client, which only beats the dot engine for small C
-CHAIN_MAX_CLIENTS = 32
+# one multiply-add per client. Measured on the CPU reference (N=262k, B=32):
+# the chain's RUNTIME still wins to C~128 (97ms vs 181ms einsum at C=128),
+# but its compile time grows with the unroll (6s at C=512, 16s at C=1024 vs
+# a flat 1.5s for the contraction) — 64 is where the remaining runtime edge
+# stops paying for the trace/compile blow-up at federation scale.
+CHAIN_MAX_CLIENTS = 64
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +272,51 @@ def weighted_mean(packed: jax.Array, weights: jax.Array, mask: jax.Array | None 
     for c in range(1, C):
         acc = acc + packed[c].astype(jnp.float32) * wn[c]
     return acc
+
+
+def grouped_weighted_mean(
+    packed: jax.Array,
+    weights: jax.Array,
+    group_size: int,
+    mask: jax.Array | None = None,
+    *,
+    impl: str = "ref",
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-group renormalized Eq. 5 — the hierarchical inner reduce.
+
+    packed (C, N), weights (C,), C % group_size == 0 ->
+    (rows (C/G, N) f32, den (C/G,) f32) with
+    ``rows[g] = sum_i w[gG+i] x[gG+i] / den[g]`` and
+    ``den[g] = sum_i w[gG+i]`` (mask folded in). A group nobody in
+    participated has den 0 and a zero row — callers must mask it out of the
+    outer reduce (`aggregators/hier.py` does). The 1/den renormalization is
+    folded into the per-member weights exactly like `weighted_mean`, so each
+    group is one fused multiply-add chain over its members (G <= cutover) or
+    the whole buffer is ONE batched contraction (G above it).
+    """
+    C, N = packed.shape
+    G = group_size
+    if G < 1 or C % G:
+        raise ValueError(f"group_size={G} must divide n_clients={C}")
+    ngroups = C // G
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = w * mask.astype(jnp.float32)
+    wg = w.reshape(ngroups, G)
+    den = jnp.sum(wg, axis=1)  # (C/G,)
+    wn = wg / jnp.maximum(den, 1e-12)[:, None]
+    if impl == "pallas":
+        from repro.kernels import pack as _pk  # deferred: kernels are optional here
+
+        return _pk.grouped_reduce(packed, wn, interpret=interpret), den
+    xg = packed.astype(jnp.float32).reshape(ngroups, G, N)
+    if G > CHAIN_MAX_CLIENTS:
+        return jnp.einsum("gi,gin->gn", wn, xg), den
+    acc = xg[:, 0] * wn[:, 0][:, None]
+    for i in range(1, G):
+        acc = acc + xg[:, i] * wn[:, i][:, None]
+    return acc, den
 
 
 def masked_bucket_mean(

@@ -88,6 +88,9 @@ class FedConfig:
     buffer_size: int = 0  # async: K_buf staged updates per flush (0 -> n_clients)
     staleness_alpha: float = 0.5  # async: polynomial staleness discount (1+s)^-alpha
     max_staleness: int = 0  # async: drop updates staler than this (0 -> keep all)
+    group_size: int = 0  # hier: edge-group width G (DESIGN.md §13; 0 -> C, one group)
+    hier_base: str = "dense"  # hier: the registered reducer composed over group rows
+    stream: bool = False  # async: streaming O(buffer_size*N) flush (DESIGN.md §13)
 
 
 def loss_for(cfg: ArchConfig) -> Callable:
@@ -346,7 +349,7 @@ def build_fed_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, mesh=
             )
     if _layout(fed) == "tree":
         return _build_tree_round(cfg, fed, optimizer, agg)
-    return _build_flat_round(cfg, fed, optimizer, agg)
+    return _build_flat_round(cfg, fed, optimizer, agg, mesh)
 
 
 def jit_fed_round(round_fn: Callable) -> Callable:
@@ -498,16 +501,43 @@ def _build_tree_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, agg
     return fed_round
 
 
-def _build_flat_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, agg) -> Callable:
+def _client_shards(fed: FedConfig, mesh) -> int:
+    """Size of the mesh axis acting as the federation (1 without a mesh)."""
+    if mesh is None:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(fed.client_axis, 1)
+
+
+def _build_flat_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, agg, mesh=None) -> Callable:
     """The flat-state engine (DESIGN.md §11): state["params"] is the packed
     (C, N_total) buffer. Training consumes slot views (reshape-of-slice) and
     writes trained leaves back in place; the aggregator reads the buffer
     directly — the per-round pack/unpack copies of the tree engine are gone,
-    and under `jit_fed_round`'s donation XLA reuses the state buffers."""
+    and under `jit_fed_round`'s donation XLA reuses the state buffers.
+
+    With a mesh whose client axis has more than one shard, the round pins
+    the buffer's C dim to that axis (`packing.packed_pspec`) on entry and
+    exit — per-client training and the hier inner reduce then run
+    shard-local, the single cross-shard merge lives inside the aggregator,
+    and `jit_fed_round` still emits ONE donated program (DESIGN.md §13).
+    A 1-shard client axis adds no constraint, keeping the single-device
+    program bit-identical to the meshless build."""
     spec = agg.ctx.spec
     tpl = agg.ctx.template
     local_train, gated = _local_training(cfg, fed, optimizer)
     train_clients = _train_clients_fn(fed, local_train, gated)
+    constrain = None
+    if _client_shards(fed, mesh) > 1:
+        if fed.n_clients % _client_shards(fed, mesh):
+            raise ValueError(
+                f"sharded client axis: n_clients={fed.n_clients} must be "
+                f"divisible by the '{fed.client_axis}' mesh axis "
+                f"({_client_shards(fed, mesh)} shards)"
+            )
+        sharding = jax.sharding.NamedSharding(
+            mesh, packing.packed_pspec(spec, fed.client_axis, mesh)
+        )
+        constrain = lambda x: jax.lax.with_sharding_constraint(x, sharding)
 
     def fed_round(state, batch, part):
         weights, mask, idx = _parse_participation(fed, part)
@@ -515,6 +545,8 @@ def _build_flat_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, agg
             return _fedsgd_round(fed, local_train, state, batch)
         _check_compact_idx(fed, idx)
         packed = state["params"]
+        if constrain is not None:
+            packed = constrain(packed)
         if fed.participation == "compact" and static_budget(fed) == fed.n_clients:
             # K == C: the scheduler's idx is a permutation, so gathering
             # rows by idx and scattering them back is an identity — train
@@ -545,6 +577,8 @@ def _build_flat_round(cfg: ArchConfig, fed: FedConfig, optimizer: Optimizer, agg
             )
             packed_new = packing.write_slots(spec, packed, new_p)
         packed_out, agg_state = agg.aggregate(packed_new, weights, state["agg"], mask)
+        if constrain is not None:
+            packed_out = constrain(packed_out)
         out = {
             **state,
             "params": packed_out,

@@ -39,6 +39,7 @@ from repro.core import aggregators, async_engine, explorer, rounds
 from repro.core.async_engine import (
     AsyncRoundRecord,
     BufferedAsyncEngine,
+    StreamingAsyncEngine,
     TimingModel,
     sync_round_seconds,
 )
@@ -112,9 +113,12 @@ class FLServer:
         self.dtype = dtype
         self.engine: BufferedAsyncEngine | None = None
         if fed.mode == "async":
-            # the buffered engine owns the flat state and the (donated)
-            # flush program; the server's round surface delegates to it
-            self.engine = BufferedAsyncEngine(
+            # the engine owns the flat state and the (donated) flush
+            # program; the server's round surface delegates to it.
+            # stream=True swaps the O(C·N) buffered flush for the ring +
+            # running-accumulator discipline (DESIGN.md §13)
+            engine_cls = StreamingAsyncEngine if fed.stream else BufferedAsyncEngine
+            self.engine = engine_cls(
                 cfg, fed, optimizer, mesh=mesh, rules=rules, seed=seed, dtype=dtype,
                 clock=self.clock, load_model=self.load_model, timing=self.timing,
                 scheduler=self.scheduler, aggregator=self.aggregator,
@@ -151,14 +155,19 @@ class FLServer:
         never inside the round."""
         if not self.aggregator.stacked:
             return self.state["params"]
+        if self.engine is not None:
+            # the engine knows which row is current (buffered: the last
+            # staged client's row; streaming: the live ring slot)
+            packed = self.engine.global_packed_row()[None]
+            params = rounds.unpacked_params(self.cfg, self.fed, {"params": packed}, self.dtype)
+            return jax.tree.map(lambda x: x[0], params)
         params = self.state["params"]
-        row = self.engine.global_row if self.engine is not None else 0
         if isinstance(params, jax.Array):  # flat layout: unpack one row only
             params = rounds.unpacked_params(
-                self.cfg, self.fed, {"params": params[row : row + 1]}, self.dtype
+                self.cfg, self.fed, {"params": params[:1]}, self.dtype
             )
             return jax.tree.map(lambda x: x[0], params)
-        return jax.tree.map(lambda x: x[row], params)
+        return jax.tree.map(lambda x: x[0], params)
 
     def run_round(self, batch: PyTree) -> RoundRecord:
         if self.engine is not None:

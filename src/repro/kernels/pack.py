@@ -1,6 +1,6 @@
 """Pallas kernels over the packed (C, N_total) aggregation buffer.
 
-All three kernels run on a 2-D ``(N-block x client-block)`` grid
+The reduction kernels run on a 2-D ``(N-block x client-block)`` grid
 (DESIGN.md §11): the N axis is the outer grid dim, clients the inner, and
 partial sums accumulate into the revisited output block across consecutive
 client steps. Each grid step therefore loads only a ``(BLOCK_C, BLOCK_N)``
@@ -20,6 +20,12 @@ ONE launch, versus the old encode -> decode -> reduce triple pass.
 must materialize for the all_gather (the gathered decode+reduce then runs
 fused via `packing.dequant_reduce_ref`); `dequantize_rows` is its
 standalone inverse, used by tests/tooling rather than the round path.
+
+`grouped_reduce` is the hierarchical inner reduce (DESIGN.md §13): a 3-D
+``(N-block x group x member-block)`` grid turns every edge group's
+renormalized weighted mean into one accumulating launch, so the two-level
+`hier` aggregator costs one launch for all C/G groups plus the registered
+outer reduce over (C/G, N) rows.
 """
 from __future__ import annotations
 
@@ -31,6 +37,17 @@ from jax.experimental import pallas as pl
 
 BLOCK_N = 1024
 BLOCK_C = 8
+
+
+def client_block(C: int) -> int:
+    """Client-block width for a C-row launch. BLOCK_C=8 was tuned at the
+    C=8 federation; at C=256/1024 an 8-row block revisits every output
+    N-block C/8 times, and the revisit overhead (output reload + grid-step
+    bookkeeping) dominates. Wider client blocks amortize the revisits while
+    a (32, BLOCK_N) f32 window still sits far under VMEM."""
+    if C <= 64:
+        return BLOCK_C
+    return 32
 
 
 def _pad_rows(x: jax.Array, block_c: int) -> jax.Array:
@@ -77,7 +94,7 @@ def packed_bucket_reduce(
     *,
     interpret: bool = True,
     block_n: int = BLOCK_N,
-    block_c: int = BLOCK_C,
+    block_c: int | None = None,
     bucket_tile: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """packed (C, N), wmask (C, B), bucket_ids (N,), mask (C,) or None
@@ -88,8 +105,9 @@ def packed_bucket_reduce(
     participation vector from the scheduler (None -> all participate); it is
     a traced operand, so per-round selection changes never retrace. N pads
     to block_n (padding gets bucket id B, whose weight column is zero) and C
-    pads to block_c with zero-weight rows. `bucket_tile` bounds how many
-    buckets one N-block spans (packing.bucket_tile_bound for a real spec);
+    pads to block_c with zero-weight rows (block_c None -> `client_block(C)`:
+    wider client blocks at C > 64). `bucket_tile` bounds how many buckets
+    one N-block spans (packing.bucket_tile_bound for a real spec);
     None means B — always safe, e.g. for unsorted id vectors.
     """
     C, N = packed.shape
@@ -102,7 +120,7 @@ def packed_bucket_reduce(
         packed = jnp.pad(packed, ((0, 0), (0, pad)))
         bucket_ids = jnp.pad(bucket_ids, (0, pad), constant_values=B)
     npad = N + pad
-    bc = min(block_c, C)
+    bc = min(client_block(C) if block_c is None else block_c, C)
     packed = _pad_rows(packed, bc)
     cpad = packed.shape[0]
     # zero-pad TB weight columns so the dynamic_slice window never reads
@@ -276,3 +294,60 @@ def quant8_reduce(
         interpret=interpret,
     )(delta, wp)
     return num[:N]
+
+
+def _grouped_kernel(x_ref, w_ref, out_ref):
+    ci = pl.program_id(2)
+    x = x_ref[0].astype(jnp.float32)  # (BC, BN) member window of one group
+    w = w_ref[...].astype(jnp.float32)  # (1, BC) pre-normalized weights
+    partial = jnp.sum(x * w.reshape(-1, 1), axis=0)
+
+    @pl.when(ci == 0)
+    def _():
+        out_ref[...] = partial[None, :]
+
+    @pl.when(ci > 0)
+    def _():
+        out_ref[...] += partial[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n", "block_c"))
+def grouped_reduce(
+    packed: jax.Array, wn: jax.Array, *, interpret: bool = True,
+    block_n: int = BLOCK_N, block_c: int | None = None,
+) -> jax.Array:
+    """Hierarchical inner reduce: packed (C, N) + wn (C/G, G) pre-normalized
+    per-group weights -> (C/G, N) f32 group rows, ONE launch for all groups.
+
+    ``out[g] = sum_i wn[g, i] * packed[g*G + i]``. The grid is 3-D
+    (N-block x group x member-block): each step loads one group's
+    (block_c, block_n) member window and accumulates into the revisited
+    group-row output block — the same client-step accumulation as
+    `packed_bucket_reduce`, batched over groups. Callers fold the 1/den
+    group renormalization into ``wn`` (`packing.grouped_weighted_mean`);
+    zero-weight padding rows keep the sums exact."""
+    C, N = packed.shape
+    ngroups, G = wn.shape
+    assert ngroups * G == C, (wn.shape, packed.shape)
+    bc = min(client_block(G) if block_c is None else block_c, G)
+    gpad = (-G) % bc
+    pad = (-N) % block_n
+    if pad:
+        packed = jnp.pad(packed, ((0, 0), (0, pad)))
+    xg = packed.reshape(ngroups, G, N + pad)
+    if gpad:
+        xg = jnp.pad(xg, ((0, 0), (0, gpad), (0, 0)))
+        wn = jnp.pad(wn, ((0, 0), (0, gpad)))
+    npad, Gp = N + pad, G + gpad
+    out = pl.pallas_call(
+        _grouped_kernel,
+        grid=(npad // block_n, ngroups, Gp // bc),
+        in_specs=[
+            pl.BlockSpec((1, bc, block_n), lambda j, g, ci: (g, ci, j)),
+            pl.BlockSpec((1, bc), lambda j, g, ci: (g, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda j, g, ci: (g, j)),
+        out_shape=jax.ShapeDtypeStruct((ngroups, npad), jnp.float32),
+        interpret=interpret,
+    )(xg, wn)
+    return out[:, :N]

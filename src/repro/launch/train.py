@@ -69,6 +69,11 @@ def main() -> None:
     ap.add_argument("--agg", default="eq6", choices=[n for n in aggregators.names() if n != "fedsgd"])
     ap.add_argument("--server-lr", type=float, default=None,
                     help="fedavgm/fedadam server step (default: 1.0 for fedavgm, 0.02 for fedadam)")
+    ap.add_argument("--group-size", type=int, default=0,
+                    help="hier: clients per edge group (must divide --clients; "
+                    "1 or --clients delegates to the flat base bit-for-bit)")
+    ap.add_argument("--hier-base", default="dense",
+                    help="hier: the stacked aggregator composed over group rows")
     ap.add_argument("--topn", type=int, default=0)
     ap.add_argument("--mode", default="sync", choices=["sync", "async"],
                     help="round control plane: sync (wait for every selected client) or "
@@ -79,6 +84,10 @@ def main() -> None:
                     "which reproduces the sync round bit-for-bit)")
     ap.add_argument("--staleness-alpha", type=float, default=0.5,
                     help="async: polynomial staleness discount (1+s)^-alpha")
+    ap.add_argument("--stream", action="store_true",
+                    help="async: streaming O(buffer_size*N) flush — dispatch "
+                    "ring + running accumulator instead of the (C, N) buffer "
+                    "(forces --agg dense and a stateless sgd local optimizer)")
     ap.add_argument("--max-staleness", type=int, default=0,
                     help="async: drop updates staler than this many versions "
                     "(0 -> keep all; drops are counted, never silent)")
@@ -123,6 +132,19 @@ def main() -> None:
     if args.mode == "async" and args.participation != "full":
         ap.error("--mode async owns its own participation plane (the event queue); "
                  "drop --participation")
+    if args.agg != "hier" and (args.group_size or args.hier_base != "dense"):
+        ap.error("--group-size/--hier-base configure the hierarchical "
+                 "aggregator; pass --agg hier")
+    if args.stream:
+        if args.mode != "async":
+            ap.error("--stream is an async flush discipline; pass --mode async")
+        if args.agg not in ("dense", "eq6"):  # eq6 is the default; coerce it
+            ap.error("--stream folds aggregation into a running sum; only "
+                     "--agg dense streams")
+        args.agg = "dense"
+        args.optimizer = "sgd"
+        if args.max_staleness < 1:
+            args.max_staleness = 4  # the dispatch ring needs a bound
     budget = args.max_participants or max(2, args.clients // 2)
     fed = FedConfig(
         n_clients=args.clients,
@@ -140,8 +162,16 @@ def main() -> None:
         buffer_size=args.buffer_size,
         staleness_alpha=args.staleness_alpha,
         max_staleness=args.max_staleness,
+        stream=args.stream,
+        group_size=args.group_size,
+        hier_base=args.hier_base,
     )
-    optimizer = adamw(args.lr) if args.optimizer == "adamw" else sgd(args.lr)
+    if args.stream:
+        optimizer = sgd(args.lr, momentum=0.0)  # stateless: the ring keeps no opt rows
+    elif args.optimizer == "adamw":
+        optimizer = adamw(args.lr)
+    else:
+        optimizer = sgd(args.lr)
     mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
     store = ObjectStore(args.store) if args.store else None
     with jax.set_mesh(mesh):

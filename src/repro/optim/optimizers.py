@@ -32,6 +32,23 @@ def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
 
 
 def sgd(lr: float = 1e-2, momentum: float = 0.9, clip_norm: float = 10.0) -> Optimizer:
+    if momentum == 0.0:
+        # stateless: no velocity tree at all. The streaming async flush
+        # (DESIGN.md §13) requires this — it keeps no per-client optimizer
+        # rows, so the local trainer must carry nothing between rounds.
+        def init0(params):
+            return {}
+
+        def update0(params, grads, state):
+            if clip_norm:
+                grads = clip_by_global_norm(grads, clip_norm)
+            params = jax.tree.map(
+                lambda p, g: p - (lr * g.astype(p.dtype)).astype(p.dtype), params, grads
+            )
+            return params, {}
+
+        return Optimizer(init0, update0, "sgd")
+
     def init(params):
         return {"mu": jax.tree.map(jnp.zeros_like, params)}
 

@@ -1,0 +1,133 @@
+"""Property tests for the packed-buffer reduction tiling at large C
+(DESIGN.md §11/§13 satellite of PR 6).
+
+Random slot layouts pin the invariants the fused reducers and the Pallas
+bucket kernel rely on:
+  - `merged_runs` tiles [0, n_total) exactly and reproduces the per-element
+    bucket id map (`bucket(col0 + i) == b0 + i // per` inside each run);
+  - `bucket_tile_bound` really bounds the distinct buckets any
+    block_n-aligned window touches (the kernel's static tile width);
+  - `weighted_mean` / `grouped_weighted_mean` agree with the NumPy oracle
+    on BOTH sides of the CHAIN_MAX_CLIENTS cutover — the fused chain and
+    the contraction are interchangeable numerics, so retuning the cutover
+    can never change results beyond reduction-order ulps.
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+
+from repro.core import packing
+from repro.core.packing import CHAIN_MAX_CLIENTS, LeafSlot, PackSpec
+
+
+def _spec_from_layout(widths, kinds):
+    """Random slot layout -> a consistent PackSpec. kinds[i] selects a
+    misc slot (one bucket) or a scan-stacked slot (one bucket per row)."""
+    slots = []
+    off = 0
+    boff = 0
+    for w, k in zip(widths, kinds):
+        if k:  # stacked: nb rows of `w` elements, one bucket each
+            nb = 1 + (w % 3)
+            size = nb * w
+        else:  # misc tensor: one bucket
+            nb = 1
+            size = w
+        slots.append(LeafSlot(f"s{off}", (size,), off, size, boff, nb))
+        off += size
+        boff += nb
+    return PackSpec(n_total=off, n_buckets=boff, slots=tuple(slots))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    widths=st.lists(st.integers(1, 64), min_size=1, max_size=12),
+    kind_seed=st.integers(0, 2**30),
+)
+def test_merged_runs_cover_and_reconstruct_bucket_ids(widths, kind_seed):
+    rng = np.random.default_rng(kind_seed)
+    spec = _spec_from_layout(widths, rng.integers(0, 2, len(widths)))
+    runs = packing.merged_runs(spec)
+    ids = packing.bucket_ids(spec)
+    # exact disjoint coverage in offset order
+    pos = 0
+    rebuilt = np.empty(spec.n_total, np.int32)
+    for col0, b0, nb, per in runs:
+        assert col0 == pos, "runs must tile the buffer contiguously"
+        assert per >= 1 and nb >= 1
+        span = nb * per
+        rebuilt[col0 : col0 + span] = b0 + np.arange(span) // per
+        pos += span
+    assert pos == spec.n_total
+    np.testing.assert_array_equal(rebuilt, ids)
+    # expand_bucket_vec is the same map applied to data
+    vec = jnp.asarray(rng.normal(size=spec.n_buckets).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(packing.expand_bucket_vec(spec, vec)), np.asarray(vec)[rebuilt]
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    widths=st.lists(st.integers(1, 64), min_size=1, max_size=12),
+    kind_seed=st.integers(0, 2**30),
+    block_n=st.integers(4, 96),
+)
+def test_bucket_tile_bound_bounds_every_window(widths, kind_seed, block_n):
+    rng = np.random.default_rng(kind_seed)
+    spec = _spec_from_layout(widths, rng.integers(0, 2, len(widths)))
+    bound = packing.bucket_tile_bound(spec, block_n)
+    ids = packing.bucket_ids(spec)
+    pad = (-len(ids)) % block_n
+    padded = np.concatenate([ids, np.full(pad, spec.n_buckets, np.int32)])
+    for w in padded.reshape(-1, block_n):
+        assert len(np.unique(w)) <= bound
+        # the kernel's tile is a contiguous [min, min+bound) id window
+        assert w.max() - w.min() < bound
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    c_off=st.integers(-4, 4),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**30),
+)
+def test_weighted_mean_agrees_across_chain_cutover(c_off, n, seed):
+    # C straddles CHAIN_MAX_CLIENTS: below -> fused chain, above -> einsum.
+    # Both must match the f64 oracle, so the cutover is numerics-neutral.
+    C = CHAIN_MAX_CLIENTS + c_off
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(C, n)).astype(np.float32)
+    w = rng.uniform(0.1, 1.0, C).astype(np.float32)
+    mask = (rng.uniform(size=C) > 0.2).astype(np.float32)
+    if mask.sum() == 0:
+        mask[0] = 1.0
+    got = np.asarray(packing.weighted_mean(jnp.asarray(x), jnp.asarray(w), jnp.asarray(mask)))
+    wm = (w * mask).astype(np.float64)
+    exp = (wm @ x.astype(np.float64)) / wm.sum()
+    np.testing.assert_allclose(got, exp, rtol=2e-5, atol=2e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    g_off=st.integers(-2, 2),
+    ngroups=st.integers(1, 3),
+    n=st.integers(1, 120),
+    seed=st.integers(0, 2**30),
+)
+def test_grouped_mean_agrees_across_chain_cutover(g_off, ngroups, n, seed):
+    G = CHAIN_MAX_CLIENTS + g_off  # inner chain vs batched contraction
+    C = ngroups * G
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(C, n)).astype(np.float32)
+    w = rng.uniform(0.1, 1.0, C).astype(np.float32)
+    rows, den = packing.grouped_weighted_mean(jnp.asarray(x), jnp.asarray(w), G)
+    wg = w.astype(np.float64).reshape(ngroups, G)
+    den_np = wg.sum(axis=1)
+    exp = np.einsum(
+        "gi,gin->gn", wg / den_np[:, None], x.astype(np.float64).reshape(ngroups, G, n)
+    )
+    np.testing.assert_allclose(np.asarray(rows), exp, rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(np.asarray(den), den_np, rtol=1e-6)

@@ -1,0 +1,144 @@
+"""Streaming async flush (DESIGN.md §13).
+
+Pins the O(buffer_size·N) discipline:
+  - with the same seed/timing, StreamingAsyncEngine reproduces the
+    buffered engine's event schedule exactly (participants, staleness,
+    drops) and its global model to reduction-order tolerance;
+  - no state leaf carries the client dimension: the dispatch ring is
+    (max_staleness+1, N) and the running accumulator is (N,) — that IS
+    the memory claim, as static shapes;
+  - drops are counted, never silently lost, and redispatch version-only;
+  - build-time validation: stream needs max_staleness>=1, the dense
+    reduce, and a stateless local optimizer; BufferedAsyncEngine refuses
+    stream=True configs;
+  - sgd(momentum=0) is stateless and steps identically to the momentum
+    path's first step;
+  - FLServer dispatches on fed.stream and serves global_params/monitor
+    from the ring.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import explorer, monitor
+from repro.core.async_engine import BufferedAsyncEngine, StreamingAsyncEngine
+from repro.core.rounds import FedConfig
+from repro.core.server import FLServer
+from repro.optim import adamw, sgd
+
+CFG = get_arch("qwen3-1.7b").reduced()
+C = 4
+
+
+def _fed(**kw):
+    base = dict(n_clients=C, local_steps=1, aggregation="dense",
+                client_axis="data", data_axis=None, state_layout="flat",
+                mode="async", buffer_size=2, max_staleness=3, stream=True)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _batch(seed=1):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(0, CFG.vocab_size, (C, 1, 2, 16)), jnp.int32)}
+
+
+def _opt():
+    return sgd(lr=0.05, momentum=0.0)
+
+
+def test_streaming_matches_buffered_engine():
+    eb = BufferedAsyncEngine(CFG, _fed(stream=False), _opt(), seed=0,
+                             load_model=explorer.ClientLoadModel(C, seed=0))
+    es = StreamingAsyncEngine(CFG, _fed(), _opt(), seed=0,
+                              load_model=explorer.ClientLoadModel(C, seed=0))
+    batch = _batch()
+    for i in range(6):
+        rb = eb.step_round(batch)
+        rs = es.step_round(batch)
+        # identical event plane: the collection loop is shared code
+        assert rb.participants == rs.participants
+        assert rb.staleness == rs.staleness
+        assert rb.dropped == rs.dropped
+        assert rb.weights == pytest.approx(rs.weights, abs=1e-7)
+        assert rb.loss == pytest.approx(rs.loss, rel=1e-4)
+        gb = np.asarray(eb.global_packed_row(), np.float64)
+        gs = np.asarray(es.global_packed_row(), np.float64)
+        scale = max(np.max(np.abs(gb)), 1e-9)
+        # same math, different reduction order (masked C-chain vs cohort sum)
+        assert np.max(np.abs(gb - gs)) / scale < 1e-5, i
+
+
+def test_streaming_state_has_no_client_dimension():
+    fed = _fed(max_staleness=2)
+    es = StreamingAsyncEngine(CFG, fed, _opt(), seed=0)
+    n = es.agg.ctx.spec.n_total
+    assert es.state["ring"].shape == (fed.max_staleness + 1, n)
+    assert es.state["agg"]["acc"].shape == (n,)
+    assert es.state["agg"]["wsum"].shape == ()
+    for leaf in jax.tree.leaves(es.state):
+        assert not (leaf.ndim and leaf.shape[0] == C), leaf.shape
+    # the flush materializes at most min(buffer_size, _cohort) rows at once
+    assert min(fed.buffer_size, es._cohort) <= fed.buffer_size
+
+
+def test_streaming_drop_accounting():
+    es = StreamingAsyncEngine(CFG, _fed(buffer_size=1, max_staleness=1), _opt(), seed=3)
+    batch = _batch()
+    staged_total = 0
+    for _ in range(12):
+        rec = es.step_round(batch)
+        staged_total += len(rec.participants)
+        assert all(s <= 1 for s in rec.staleness)
+    assert es.completions == staged_total + es.dropped_total
+    assert es.dropped_total > 0  # the schedule actually exercised drops
+
+
+def test_streaming_config_validation():
+    with pytest.raises(ValueError, match="max_staleness"):
+        StreamingAsyncEngine(CFG, _fed(max_staleness=0), _opt())
+    with pytest.raises(ValueError, match="dense"):
+        StreamingAsyncEngine(CFG, _fed(aggregation="eq6"), _opt())
+    with pytest.raises(ValueError, match="stateless"):
+        StreamingAsyncEngine(CFG, _fed(), sgd(lr=0.05))  # momentum state
+    with pytest.raises(ValueError, match="stateless"):
+        StreamingAsyncEngine(CFG, _fed(), adamw(1e-3))
+    with pytest.raises(ValueError, match="stream=True"):
+        StreamingAsyncEngine(CFG, _fed(stream=False), _opt())
+    with pytest.raises(ValueError, match="StreamingAsyncEngine"):
+        BufferedAsyncEngine(CFG, _fed(), _opt())
+
+
+def test_stateless_sgd_matches_momentum_first_step():
+    opt0 = sgd(lr=0.1, momentum=0.0)
+    optm = sgd(lr=0.1, momentum=0.9)
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0], jnp.float32)}
+    grads = {"w": jnp.asarray([0.5, 0.1, -0.2], jnp.float32)}
+    assert opt0.init(params) == {}
+    p0, s0 = opt0.update(params, grads, {})
+    pm, _ = optm.update(params, grads, optm.init(params))
+    # from zero velocity the first momentum step is the plain sgd step
+    np.testing.assert_allclose(np.asarray(p0["w"]), np.asarray(pm["w"]), rtol=1e-7)
+    assert s0 == {}
+
+
+def test_server_dispatches_streaming_engine():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with jax.set_mesh(mesh):
+        srv = FLServer(CFG, _fed(), _opt(), mesh=mesh, seed=0)
+        assert isinstance(srv.engine, StreamingAsyncEngine)
+        batch = _batch()
+        rec = srv.run_async(batch)
+        assert rec.participants and rec.version == 1
+        params = srv.global_params()
+        leaves = jax.tree.leaves(params)
+        assert leaves and all(l.ndim == 0 or l.shape[0] != C for l in leaves)
+        # the ring row round-trips through the one pack/unpack edge
+        packed = srv.engine.global_packed_row()
+        assert packed.shape == (srv.engine.agg.ctx.spec.n_total,)
+        text = monitor.render_task("t", srv.history, C)
+        assert "sim clock" in text
