@@ -18,6 +18,8 @@ Prints ``name,value,derived`` CSV. Modules:
   client_scaling   — flat vs hier vs sharded-hier aggregation at
                      C ∈ {8, 64, 256, 1024} + the C=1024 streaming async
                      flush (DESIGN.md §13); writes BENCH_scaling_sweep.csv
+  wire_bench       — socket-transport payload bytes per codec + measured
+                     localhost DISPATCH/UPDATE round-trip (DESIGN.md §14)
   roofline_table   — per (arch x shape x mesh) roofline from the dry-run
 
 ``--smoke`` runs the cheap analytic tables, a 1-iteration flat-round sweep,
@@ -43,7 +45,7 @@ def main() -> None:
                     help="fast CI subset: analytic tables + tiny participation sweep")
     args = ap.parse_args()
 
-    from benchmarks import async_bench, bandwidth_model, convergence, kernel_bench, roofline_table, scale_bench, upload_time
+    from benchmarks import async_bench, bandwidth_model, convergence, kernel_bench, roofline_table, scale_bench, upload_time, wire_bench
 
     if args.smoke:
         modules = [
@@ -53,6 +55,7 @@ def main() -> None:
             ("eq6_guard", kernel_bench.eq6_guard_rows),
             ("async_equiv", async_bench.equivalence_rows),
             ("client_scaling", scale_bench.smoke_rows),
+            ("wire_bench", wire_bench.rows),
         ]
     else:
         modules = [
@@ -67,6 +70,7 @@ def main() -> None:
             ("async_equiv", async_bench.equivalence_rows),
             ("async_sweep", async_bench.async_sweep_rows),
             ("client_scaling", scale_bench.full_rows),
+            ("wire_bench", wire_bench.rows),
             ("roofline_table", roofline_table.rows),
         ]
     failed = 0

@@ -1,0 +1,104 @@
+"""Wire-transport benchmark rows (DESIGN.md §14).
+
+Two tables:
+
+  wire/payload_*      — analytic UPDATE-payload bytes per codec
+                        (`transport.codec.payload_bytes`) at representative
+                        packed-row widths, plus the quant8 compression ratio
+                        (the FedVision uplink claim, now with real wire
+                        framing overhead included).
+  wire/roundtrip_*    — measured localhost round-trip latency of one
+                        DISPATCH -> UPDATE exchange over a real TCP socket
+                        pair: full frames, `FrameParser` on both ends,
+                        encode/decode included — everything but the training
+                        step, so the row isolates transport cost from JAX.
+
+Both are cheap (no jit, no subprocess) so they belong in the ``--smoke``
+CI subset: they prove the framing + codec path imports and moves real
+bytes without spending the minutes a full `wire_run` federation costs.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+
+import numpy as np
+
+from repro.core.transport import codec, wire
+
+# representative packed-row widths: the test harness's tiny arch (~0.4M),
+# a 16M mid-size row, and the paper-scale FedYOLOv3 row (~62M params)
+WIDTHS = {"tiny": 1 << 19, "mid": 1 << 24, "fedyolov3": 61_949_149}
+RT_WIDTH = 1 << 20  # round-trip measurement payload (1M f32 = 4 MB dense)
+RT_ITERS = 5
+
+
+def payload_rows():
+    out = []
+    for name, n in WIDTHS.items():
+        dense = codec.payload_bytes(n, "dense")
+        q8 = codec.payload_bytes(n, "quant8")
+        out.append((f"wire/payload_{name}_dense_MB", dense / 1e6, f"n={n}"))
+        out.append((f"wire/payload_{name}_quant8_MB", q8 / 1e6,
+                    f"ratio={dense / q8:.2f}x"))
+    return out
+
+
+def _echo_server(listener: socket.socket, n: int):
+    """Server half: send a DISPATCH, parse the UPDATE that comes back."""
+    sock, _ = listener.accept()
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    parser = wire.FrameParser()
+    row = np.zeros(n, np.float32)
+    payload = codec.encode_row(row, "dense")
+    for _ in range(RT_ITERS):
+        sock.sendall(wire.pack_dispatch(1, payload))
+        frames = []
+        while not frames:
+            data = sock.recv(1 << 20)
+            if not data:
+                return
+            frames.extend(parser.feed(data))
+    sock.close()
+
+
+def roundtrip_rows():
+    out = []
+    for name in codec.CODECS:
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.bind(("127.0.0.1", 0))
+        listener.listen(1)
+        t = threading.Thread(target=_echo_server, args=(listener, RT_WIDTH), daemon=True)
+        t.start()
+        sock = socket.create_connection(listener.getsockname()[:2], timeout=30.0)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        parser = wire.FrameParser()
+        times = []
+        for i in range(RT_ITERS):
+            t0 = time.perf_counter()
+            frames = []
+            while not frames:
+                frames.extend(parser.feed(sock.recv(1 << 20)))
+            _v, row_buf = wire.parse_dispatch(frames[0][1])
+            base = codec.decode_row(row_buf).astype(np.float32)
+            buf = codec.encode_update(base, base, name, 1024)
+            sock.sendall(wire.pack_update(0, i, 1, 0.0, buf))
+            times.append(time.perf_counter() - t0)
+        sock.close()
+        t.join(timeout=10.0)
+        listener.close()
+        # first iteration pays connection warmup; report the rest
+        ms = 1e3 * float(np.median(times[1:] or times))
+        out.append((f"wire/roundtrip_{name}_ms", ms,
+                    f"n={RT_WIDTH};iters={RT_ITERS}"))
+    return out
+
+
+def rows():
+    return payload_rows() + roundtrip_rows()
+
+
+if __name__ == "__main__":
+    for name, val, extra in rows():
+        print(f"{name},{val:.4f},{extra}")

@@ -453,6 +453,285 @@ class BufferedAsyncEngine:
         return rec
 
 
+def build_row_update(cfg, fed: R.FedConfig, optimizer, *, spec=None, template=None, dtype=jnp.float32):
+    """The single-row jitted local update: (N_total,) dispatch row + one
+    client's (E, per-step...) batch -> (trained row, mean loss).
+
+    This is THE program federated workers run (DESIGN.md §14): the wire
+    worker (`launch/worker.py`) and the SimClock replay harness
+    (`core/transport/replay.py`) both train through this one jit, so the
+    trained bytes a worker uploads and the rows the replay recomputes are
+    the same deterministic function of (dispatch row, batch) — the
+    replay-determinism contract rests on it. Training must be a pure
+    function of the dispatch row, so the local optimizer must carry no
+    cross-round state (``sgd(momentum=0.0)``), exactly the
+    StreamingAsyncEngine rule."""
+    if spec is None or template is None:
+        agg = R.make_aggregator(cfg, fed)
+        spec, template = agg.ctx.spec, agg.ctx.template
+    pabs = mp.abstract(template, dtype)
+    if jax.tree.leaves(jax.eval_shape(optimizer.init, pabs)):
+        raise ValueError(
+            "the row update is a pure function of (dispatch row, batch): use "
+            f"a stateless local optimizer (sgd(momentum=0.0)), got "
+            f"{optimizer.name!r} with persistent state"
+        )
+    local_train, _ = R._local_training(cfg, fed, optimizer)
+
+    def update(row, batch_c):
+        views = packing.unpack_views(spec, row[None], template)
+        b = jax.tree.map(lambda x: x[None], batch_c)
+        new_p, _, loss = jax.vmap(local_train)(views, {}, b)
+        return packing.write_slots(spec, row[None], new_p)[0], loss[0]
+
+    return jax.jit(update)
+
+
+def _build_landing_flush(agg):
+    """The arrival engine's flush: the buffered flush minus its training
+    step — rows landed already trained (by the worker over the wire, or by
+    the replay's row update), so the program is the registered aggregation
+    over the packed buffer with the staleness discount folded into the
+    weights operand, then the staged-redispatch select (staged rows leave
+    holding the fresh global; in-flight rows keep their dispatch)."""
+
+    def flush(state, part):
+        mask = part["mask"].astype(jnp.float32)
+        w_disc = part["weights"].astype(jnp.float32)
+        packed = state["params"]
+        packed_out, agg_state = agg.aggregate(packed, w_disc, state["agg"], mask)
+        params = jnp.where(mask[:, None] > 0, packed_out, packed)
+        return {
+            **state,
+            "params": params,
+            "agg": agg_state,
+            "round": state["round"] + 1,
+        }
+
+    return flush
+
+
+@dataclasses.dataclass
+class LandResult:
+    """What one landed completion did to the engine."""
+
+    client: int
+    staleness: int
+    dropped: bool  # True: staler than max_staleness — counted, redispatched
+    version: int  # engine version after handling (the redispatch version)
+    flush: AsyncRoundRecord | None = None  # set when this landing filled the buffer
+
+
+class ArrivalAsyncEngine:
+    """Buffered async engine driven by an external arrival stream
+    (DESIGN.md §14): the wire server's socket landing loop, or a recorded
+    arrival schedule replayed on the SimClock.
+
+    Same packed ``(C, N_total)`` dispatch-row state, staleness accounting,
+    polynomial discount, registered aggregation, and ``AsyncRoundRecord``
+    history as :class:`BufferedAsyncEngine` — what changes is *when* and
+    *whence* updates land: there is no simulated event heap, and updates
+    arrive **already trained** (the worker ran :func:`build_row_update` on
+    its dispatch row). Consequently there are no per-client optimizer rows:
+    the local optimizer must be stateless (``sgd(momentum=0.0)``), the
+    StreamingAsyncEngine rule.
+
+    Row ``c`` of ``state["params"]`` always holds exactly what client ``c``
+    was last dispatched (until its trained update lands in place) — the row
+    IS the wire dispatch payload, which is what makes a recorded run
+    replayable: replaying the same dispatch/land sequence reproduces the
+    same rows, hence the same flushes, bit-for-bit for the dense codec.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        fed: R.FedConfig,
+        optimizer,
+        *,
+        seed: int = 0,
+        dtype=jnp.float32,
+        clock: SimClock | None = None,
+        aggregator=None,
+    ):
+        if fed.mode != "async":
+            raise ValueError(
+                f"ArrivalAsyncEngine needs FedConfig(mode='async'), got {fed.mode!r}"
+            )
+        if fed.state_layout != "flat":
+            raise ValueError(
+                "the arrival engine runs on the flat packed round state "
+                f"(state_layout='flat'), got {fed.state_layout!r}"
+            )
+        if fed.stream:
+            raise ValueError(
+                "the arrival engine keeps the (C, N_total) dispatch buffer — "
+                "its rows ARE the wire payloads; stream=True has no buffer to land into"
+            )
+        C = fed.n_clients
+        self.k_buf = fed.buffer_size or C
+        if not 1 <= self.k_buf <= C:
+            raise ValueError(
+                f"buffer_size={fed.buffer_size} must be in [1, n_clients={C}] (or 0 -> C)"
+            )
+        if fed.max_staleness < 0:
+            raise ValueError(f"max_staleness={fed.max_staleness} must be >= 0")
+        self.cfg, self.fed, self.optimizer = cfg, fed, optimizer
+        self.agg = aggregator or R.make_aggregator(cfg, fed)
+        if not self.agg.stacked:
+            raise ValueError(
+                f"async mode needs a client-stacked aggregator; {fed.aggregation!r} "
+                "runs one shared model copy (fedsgd topology)"
+            )
+        spec, tpl = self.agg.ctx.spec, self.agg.ctx.template
+        pabs = mp.abstract(tpl, dtype)
+        if jax.tree.leaves(jax.eval_shape(optimizer.init, pabs)):
+            raise ValueError(
+                "the arrival engine keeps no per-client optimizer rows (updates "
+                "arrive already trained); use a stateless local optimizer "
+                f"(sgd(momentum=0.0)), got {optimizer.name!r} with persistent state"
+            )
+        self.clock = clock or SimClock()
+        # same init draw as make_state row 0: every engine with this seed
+        # starts from the identical global (the replay/equivalence anchor)
+        keys = jax.random.split(jax.random.key(seed), C)
+        row0 = packing.pack(
+            spec,
+            jax.tree.map(lambda x: x[None], mp.init_params(tpl, keys[0], dtype)),
+            dtype,
+        )[0]
+        packed = jnp.tile(row0[None], (C, 1))
+        self.state = {
+            "params": packed,
+            "agg": self.agg.init_state(packed),
+            "round": jnp.int32(0),
+        }
+        self._flush = jax.jit(_build_landing_flush(self.agg), donate_argnums=(0,))
+        self.version = 0
+        self.global_row = 0
+        # unlike the buffered engine, rows mutate on EVERY landing, so "the
+        # row staged[0] holds the global" is only true until that client's
+        # next update lands mid-window — the engine keeps its own copy of
+        # the current global instead of trusting an index into the buffer
+        self._global = row0
+        self.dispatch_version = np.zeros(C, np.int64)
+        self.completions = 0
+        self.dropped_total = 0
+        self.history: list[AsyncRoundRecord] = []
+        self._staged: list[int] = []
+        self._stal: list[int] = []
+        self._losses: list[float] = []
+        self._dropped_window = 0
+
+    # -- dispatch side -------------------------------------------------------
+
+    def global_packed_row(self) -> jax.Array:
+        """The (N_total,) packed row holding the current global dispatch.
+
+        NOT ``state["params"][global_row]``: that row belongs to a client
+        and may already hold the client's NEXT trained update (landed this
+        window). Checkpoints and dispatches read the engine's own copy,
+        which only changes at a flush."""
+        return self._global
+
+    def staged(self) -> tuple[int, ...]:
+        """Clients landed-but-not-flushed this window (their rows hold
+        trained updates and must not be redispatched over)."""
+        return tuple(self._staged)
+
+    def dispatch(self, c: int) -> int:
+        """(Re)dispatch the current global into client ``c``'s row; returns
+        the version dispatched. Refuses a staged client — its row holds a
+        trained update awaiting the flush (the wire server defers such
+        dispatches until the flush redispatches it anyway)."""
+        if c in self._staged:
+            raise RuntimeError(
+                f"client {c} is staged for the pending flush; dispatching now "
+                "would overwrite its landed update"
+            )
+        # copy from the engine's global, never from another client's row —
+        # a row indexed by global_row may hold that client's newer landed
+        # update (the mid-window staleness hazard global_params documents).
+        # Skip only when row c provably holds the current global already:
+        # dispatch_version[c] == version and c unstaged means c's last row
+        # write was this version's flush or a dispatch of it.
+        if int(self.dispatch_version[c]) != self.version:
+            self.state["params"] = self.state["params"].at[c].set(self._global)
+        self.dispatch_version[c] = self.version
+        return self.version
+
+    def dispatch_row(self, c: int) -> np.ndarray:
+        """Host copy of client ``c``'s dispatch row — the wire payload."""
+        return np.asarray(self.state["params"][c], np.float32)
+
+    # -- landing side --------------------------------------------------------
+
+    def land(self, c: int, row, *, loss: float = 0.0, t: float | None = None) -> LandResult:
+        """One arrived update: advance the clock to its arrival time, apply
+        the staleness gate, write the trained row in place, and flush once
+        ``buffer_size`` updates have staged. Drops redispatch from the
+        current global immediately (counted, never silent)."""
+        if c in self._staged:
+            raise RuntimeError(
+                f"client {c} already staged this window — the dispatch protocol "
+                "sends one update per dispatch"
+            )
+        if t is not None:
+            self.clock.advance_to(max(float(t), self.clock.now()))
+        self.completions += 1
+        s = self.version - int(self.dispatch_version[c])
+        if self.fed.max_staleness and s > self.fed.max_staleness:
+            self.dropped_total += 1
+            self._dropped_window += 1
+            self.dispatch(c)  # redispatch from the current global
+            return LandResult(client=c, staleness=s, dropped=True, version=self.version)
+        self.state["params"] = self.state["params"].at[c].set(
+            jnp.asarray(row, self.state["params"].dtype)
+        )
+        self._staged.append(c)
+        self._stal.append(s)
+        self._losses.append(float(loss))
+        rec = self._flush_staged() if len(self._staged) >= self.k_buf else None
+        return LandResult(client=c, staleness=s, dropped=False, version=self.version, flush=rec)
+
+    def _flush_staged(self) -> AsyncRoundRecord:
+        staged, stal, losses = self._staged, self._stal, self._losses
+        C = self.fed.n_clients
+        mask = np.zeros(C, np.float32)
+        mask[staged] = 1.0
+        stal_vec = np.zeros(C, np.float32)
+        stal_vec[staged] = stal
+        # identical discount arithmetic to BufferedAsyncEngine._do_flush —
+        # the replay equivalence leans on the formulas matching exactly
+        w = mask / np.float32(len(staged))
+        w_disc = (w * (1.0 + stal_vec) ** np.float32(-self.fed.staleness_alpha)).astype(
+            np.float32
+        )
+        part = {"mask": jnp.asarray(mask), "weights": jnp.asarray(w_disc)}
+        self.state = self._flush(self.state, part)
+        self.version += 1
+        for c in staged:
+            self.dispatch_version[c] = self.version
+        self.global_row = staged[0]  # its row holds the fresh global (for now)
+        self._global = self.state["params"][staged[0]]  # ...so snapshot it
+        rec = AsyncRoundRecord(
+            round_idx=self.version - 1,
+            loss=float(np.mean(losses)) if losses else 0.0,
+            weights=[float(x) for x in w_disc],
+            seconds=0.0,
+            participants=[int(c) for c in staged],
+            loads=[0.0] * C,
+            version=self.version,
+            sim_time=self.clock.now(),
+            staleness=[int(s) for s in stal],
+            dropped=self._dropped_window,
+        )
+        self.history.append(rec)
+        self._staged, self._stal, self._losses = [], [], []
+        self._dropped_window = 0
+        return rec
+
+
 class StreamingAsyncEngine(BufferedAsyncEngine):
     """The O(buffer_size · N) flush discipline for large federations
     (DESIGN.md §13). Same event queue, clock, staleness accounting and

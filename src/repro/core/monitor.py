@@ -93,6 +93,31 @@ def render_task(task_id: str, history, n_clients: int, upload_bytes_per_round: f
     return "\n".join(lines)
 
 
+def render_wire(task_id: str, history, stats, n_clients: int, liveness_log=()) -> str:
+    """The socket-transport lines (DESIGN.md §14): the round view plus the
+    wire's own operational counters — landings/drops, reconnects, dead-peer
+    detections, uplink/downlink bytes, and landing-queue backpressure."""
+    lines = [render_task(task_id, history, n_clients)]
+    deaths = sum(1 for _, _, s in liveness_log if s == "dead")
+    lines.append(
+        f"  wire     {stats.flushes} flushes   {stats.landed} landed"
+        f" / {stats.dropped} dropped   {stats.reconnects} reconnects"
+        f"   {deaths} dead-peer events"
+    )
+    lines.append(
+        f"  bytes    up {stats.bytes_up / 1e6:.2f} MB   down {stats.bytes_down / 1e6:.2f} MB"
+        f"   heartbeats {stats.heartbeats}"
+    )
+    lines.append(
+        f"  queue    high water {stats.queue_high_water}"
+        f"   backpressure blocks {stats.backpressure_blocks}"
+        f"   protocol errors {stats.protocol_errors}"
+        f"   superseded {stats.superseded}"
+        + ("   DEADLINE HIT" if stats.deadline_hit else "")
+    )
+    return "\n".join(lines)
+
+
 def export_json(task_id: str, history, n_clients: int, eval_history=None, per_client_cap: int = 16) -> str:
     """JSON dashboard feed. Eval rows carry the full per-client mAP vector
     only while ``n_clients <= per_client_cap``; above it each row exports

@@ -91,6 +91,12 @@ class FedConfig:
     group_size: int = 0  # hier: edge-group width G (DESIGN.md §13; 0 -> C, one group)
     hier_base: str = "dense"  # hier: the registered reducer composed over group rows
     stream: bool = False  # async: streaming O(buffer_size*N) flush (DESIGN.md §13)
+    # --- multi-process transport (DESIGN.md §14) ---
+    transport: str = "inproc"  # inproc (SimClock event heap) | socket (real wire)
+    wire_codec: str = "dense"  # dense (f32 rows) | quant8 (int8 delta + block scales)
+    queue_cap: int = 0  # socket: bounded landing-queue depth (0 -> 2 * n_clients)
+    heartbeat_s: float = 0.2  # socket: worker heartbeat period (wall seconds)
+    heartbeat_timeout_s: float = 2.0  # socket: silence beyond this marks a client dead
 
 
 def loss_for(cfg: ArchConfig) -> Callable:

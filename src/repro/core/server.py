@@ -146,13 +146,20 @@ class FLServer:
     def global_params(self) -> PyTree:
         """Dispatchable global model (synced post-round; fedsgd topology
         already holds the single shared copy). Sync rounds broadcast the
-        global to every row, so row 0 serves; a buffered async state only
-        guarantees the *last-staged* rows hold the fresh global — in-flight
-        rows (row 0 included) may carry stale dispatch versions, so the
-        engine's `global_row` picks the right one. This is a pack/unpack
-        EDGE (DESIGN.md §11): the flat round state unpacks to a param
-        pytree only here — checkpoint PUT and model dispatch to serving —
-        never inside the round."""
+        global to every row, so row 0 serves; an async state only
+        guarantees *some* rows hold the fresh global — in-flight rows (row
+        0 included) may carry stale dispatch versions — so this reads the
+        engine's `global_packed_row()`, never a fixed row index. Each
+        engine knows where its global lives: buffered keeps `global_row`
+        (the last-staged row, immutable until the next flush), streaming
+        the live ring slot, and the arrival engine an explicit snapshot
+        (its rows mutate on every landing, so no buffer row is trustworthy
+        mid-window). Async checkpoints go through here, so a checkpoint
+        taken right after drops/redispatches stores the flushed global,
+        not a client's half-trained row — tests/test_transport.py pins
+        that. This is a pack/unpack EDGE (DESIGN.md §11): the flat round
+        state unpacks to a param pytree only here — checkpoint PUT and
+        model dispatch to serving — never inside the round."""
         if not self.aggregator.stacked:
             return self.state["params"]
         if self.engine is not None:

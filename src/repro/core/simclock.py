@@ -43,3 +43,38 @@ class SimClock:
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"SimClock(t={self._t:.3f})"
+
+
+class WallClock(SimClock):
+    """SimClock slaved to the host's monotonic clock (DESIGN.md §14).
+
+    The wire transport's landing loop runs in real time, but the arrival
+    engine speaks the SimClock interface — `sync()` pulls the clock forward
+    to ``monotonic() - t0`` (relative seconds since construction) and
+    returns it. Times read off a WallClock are what a wire run records into
+    its arrival schedule; replaying advances a plain SimClock to those same
+    stamps, so a recorded run and its replay agree on every ``sim_time``.
+    Only `sync` reads host time; between syncs the clock is as dumb and
+    monotonic as its parent.
+    """
+
+    def __init__(self):
+        import time
+
+        super().__init__(0.0)
+        self._mono = time.monotonic
+        self._t0 = self._mono()
+
+    def sync(self) -> float:
+        """Advance to now (relative host seconds); returns the new time.
+        Only the landing loop — the single engine-owning thread — may call
+        this; concurrent syncs could race the monotonicity check."""
+        t = self._mono() - self._t0
+        if t > self.now():
+            self.advance_to(t)
+        return self.now()
+
+    def peek(self) -> float:
+        """Relative host seconds WITHOUT advancing the clock — safe from
+        any thread (reader threads stamp `last_seen` with this)."""
+        return max(self.now(), self._mono() - self._t0)

@@ -1,0 +1,171 @@
+"""Row payload codec: the bytes inside DISPATCH/UPDATE frames (DESIGN.md §14).
+
+Two codecs, selected by ``FedConfig.wire_codec``:
+
+    dense   — the full row as raw little-endian bytes in its own dtype.
+              Lossless: encode -> decode is bit-identical, which is what
+              lets a recorded dense wire run replay bit-for-bit.
+    quant8  — the paper's 4x uplink cut finally carrying real wire bytes:
+              the **delta** vs the dispatch row, int8-quantized with one
+              f32 scale per ``block`` elements (symmetric, the
+              `core.compression` / quant8-aggregator scheme). Deltas, not
+              rows: a trained row's quantization step would be set by the
+              weight magnitudes and destroy the (lr-sized) update signal;
+              the delta's step is set by the update itself.
+
+All arithmetic is NumPy in float32 — deterministic across processes, so
+the replay harness reproduces a worker's encoded bytes exactly by running
+the same codec on the same trained row.
+
+Payload layout (after the 1-byte codec tag):
+
+    dense:  u8 dtype code, u32 n, raw bytes
+    quant8: u32 n, u32 block, ceil(n/block) f32 scales, n int8 values
+"""
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+DENSE = 0
+QUANT8 = 1
+
+CODECS = {"dense": DENSE, "quant8": QUANT8}
+CODEC_NAMES = {v: k for k, v in CODECS.items()}
+
+_DTYPES = {0: np.float32, 1: np.float16, 2: np.float64}
+_DTYPE_CODES = {np.dtype(v): k for k, v in _DTYPES.items()}
+
+_DENSE_HDR = struct.Struct("!BI")
+_QUANT_HDR = struct.Struct("!II")
+
+
+def _as_row(x) -> np.ndarray:
+    row = np.asarray(x)
+    if row.ndim != 1:
+        raise ValueError(f"codec rows are 1-D packed rows, got shape {row.shape}")
+    return row
+
+
+# -- dense -------------------------------------------------------------------
+
+def encode_dense(row) -> bytes:
+    row = _as_row(row)
+    if row.dtype not in _DTYPE_CODES:
+        raise ValueError(f"unsupported row dtype {row.dtype}")
+    hdr = _DENSE_HDR.pack(_DTYPE_CODES[row.dtype], row.size)
+    return bytes([DENSE]) + hdr + row.astype(row.dtype.newbyteorder("<")).tobytes()
+
+
+def _decode_dense(buf: bytes) -> np.ndarray:
+    code, n = _DENSE_HDR.unpack_from(buf, 0)
+    if code not in _DTYPES:
+        raise ValueError(f"unknown dtype code {code}")
+    dt = np.dtype(_DTYPES[code]).newbyteorder("<")
+    body = buf[_DENSE_HDR.size :]
+    if len(body) != n * dt.itemsize:
+        raise ValueError(f"dense payload of {len(body)} bytes != {n} x {dt.itemsize}")
+    return np.frombuffer(body, dt, count=n).astype(_DTYPES[code])
+
+
+# -- quant8 ------------------------------------------------------------------
+
+def quantize_blocks(x: np.ndarray, block: int) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric blockwise int8: one f32 scale per `block` elements
+    (amax/127, floored so an all-zero block stays exactly zero)."""
+    if block < 1:
+        raise ValueError(f"quant block must be >= 1, got {block}")
+    x = np.asarray(x, np.float32)
+    n = x.size
+    nb = -(-n // block)
+    padded = np.zeros(nb * block, np.float32)
+    padded[:n] = x
+    x2 = padded.reshape(nb, block)
+    scale = (np.maximum(np.abs(x2).max(axis=1), 1e-12) / np.float32(127.0)).astype(
+        np.float32
+    )
+    q = np.clip(np.rint(x2 / scale[:, None]), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize_blocks(q: np.ndarray, scale: np.ndarray, n: int) -> np.ndarray:
+    return (q.astype(np.float32) * scale[:, None].astype(np.float32)).reshape(-1)[:n]
+
+
+def encode_quant8(row, block: int) -> bytes:
+    row = _as_row(row)
+    q, scale = quantize_blocks(row, block)
+    hdr = _QUANT_HDR.pack(row.size, block)
+    return (
+        bytes([QUANT8])
+        + hdr
+        + scale.astype("<f4").tobytes()
+        + q.tobytes()
+    )
+
+
+def _decode_quant8(buf: bytes) -> np.ndarray:
+    n, block = _QUANT_HDR.unpack_from(buf, 0)
+    nb = -(-n // block)
+    off = _QUANT_HDR.size
+    scale = np.frombuffer(buf, "<f4", count=nb, offset=off).astype(np.float32)
+    off += nb * 4
+    q = np.frombuffer(buf, np.int8, count=nb * block, offset=off).reshape(nb, block)
+    if len(buf) != off + nb * block:
+        raise ValueError("quant8 payload size mismatch")
+    return dequantize_blocks(q, scale, n)
+
+
+# -- update/dispatch payloads ------------------------------------------------
+
+def encode_row(row, codec: str = "dense", block: int = 1024) -> bytes:
+    """DISPATCH payload: dense always (downlink is not the FL bottleneck —
+    FedVision's asymmetry is camera uplink — and a lossless dispatch keeps
+    the worker training on exactly the server's row)."""
+    if codec not in CODECS:
+        raise ValueError(f"unknown wire codec {codec!r}; expected {sorted(CODECS)}")
+    return encode_dense(row)
+
+
+def decode_row(buf: bytes) -> np.ndarray:
+    if not buf:
+        raise ValueError("empty row payload")
+    tag = buf[0]
+    if tag == DENSE:
+        return _decode_dense(buf[1:])
+    if tag == QUANT8:
+        return _decode_quant8(buf[1:])
+    raise ValueError(f"unknown codec tag {tag}")
+
+
+def encode_update(row_new, row_base, codec: str = "dense", block: int = 1024) -> bytes:
+    """UPDATE payload: the trained row (dense) or its int8 delta (quant8)."""
+    if codec == "dense":
+        return encode_dense(row_new)
+    if codec == "quant8":
+        delta = np.asarray(row_new, np.float32) - np.asarray(row_base, np.float32)
+        return encode_quant8(delta, block)
+    raise ValueError(f"unknown wire codec {codec!r}; expected {sorted(CODECS)}")
+
+
+def decode_update(buf: bytes, row_base) -> np.ndarray:
+    """Inverse of `encode_update`: quant8 payloads land as
+    base + dequant(delta); dense payloads are the row itself."""
+    if not buf:
+        raise ValueError("empty update payload")
+    if buf[0] == DENSE:
+        return _decode_dense(buf[1:])
+    if buf[0] == QUANT8:
+        return np.asarray(row_base, np.float32) + _decode_quant8(buf[1:])
+    raise ValueError(f"unknown codec tag {buf[0]}")
+
+
+def payload_bytes(n: int, codec: str, block: int = 1024, itemsize: int = 4) -> int:
+    """Analytic payload size (the BENCH payload-bytes rows)."""
+    if codec == "dense":
+        return 1 + _DENSE_HDR.size + n * itemsize
+    if codec == "quant8":
+        nb = -(-n // block)
+        return 1 + _QUANT_HDR.size + nb * 4 + nb * block
+    raise ValueError(f"unknown wire codec {codec!r}")

@@ -1,0 +1,197 @@
+"""Wire-run orchestration: meta construction, worker processes, one call
+to run a whole multi-process federation (DESIGN.md §14).
+
+`make_meta` builds the run's self-description — the single dict that the
+server, every worker process, and the replay harness all derive their
+config/engine/batches from (it is also what `ArrivalSchedule` persists).
+`wire_run` is the one-call harness the scenario tests and
+``launch/train.py --transport socket`` share: build the engine on a
+WallClock, start the `WireServer`, spawn worker processes over real
+sockets, serve until the flush target, tear everything down, and hand back
+the schedule + stats + final global row.
+
+Workers are real OS processes (``python -m repro.launch.worker``). One
+process can host several client loops in threads (``client_ids``) — that
+amortizes the JAX import/jit cost across clients — while scenario-specific
+clients (the crasher, the straggler) get their own process so killing or
+delaying them touches nobody else.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+from repro.core.simclock import WallClock
+from repro.core.transport import replay as rp
+from repro.core.transport.server import WireRunStats, WireServer
+
+# shrink the reduced arch further for multi-process tests: every worker
+# process re-jits the row update, so the model should be as small as the
+# transformer stack allows while still exercising real packed rows
+TINY_OVERRIDES = {"d_model": 64, "n_heads": 2, "n_kv_heads": 1, "d_ff": 128, "vocab_size": 128}
+
+_run_counter = 0  # distinguishes WIRE_SCHEDULE_DIR dumps within one process
+
+
+def make_meta(
+    arch: str = "qwen3-1.7b",
+    *,
+    reduced: bool = True,
+    overrides: dict | None = None,
+    n_clients: int = 4,
+    buffer_size: int = 2,
+    max_staleness: int = 2,
+    staleness_alpha: float = 0.5,
+    aggregation: str = "dense",
+    local_steps: int = 1,
+    batch: int = 2,
+    seq: int = 16,
+    seed: int = 0,
+    lr: float = 0.05,
+    wire_codec: str = "dense",
+    quant_block: int = 1024,
+    queue_cap: int = 0,
+    heartbeat_s: float = 0.2,
+    heartbeat_timeout_s: float = 2.0,
+) -> dict[str, Any]:
+    return {
+        "arch": arch,
+        "reduced": reduced,
+        "overrides": dict(overrides) if overrides else {},
+        "n_clients": n_clients,
+        "buffer_size": buffer_size,
+        "max_staleness": max_staleness,
+        "staleness_alpha": staleness_alpha,
+        "aggregation": aggregation,
+        "local_steps": local_steps,
+        "batch": batch,
+        "seq": seq,
+        "seed": seed,
+        "lr": lr,
+        "transport": "socket",
+        "wire_codec": wire_codec,
+        "quant_block": quant_block,
+        "queue_cap": queue_cap,
+        "heartbeat_s": heartbeat_s,
+        "heartbeat_timeout_s": heartbeat_timeout_s,
+    }
+
+
+def worker_cmd(meta_path: str, host: str, port: int, client_ids: list[int],
+               extra: list[str] | None = None) -> list[str]:
+    return [
+        sys.executable, "-m", "repro.launch.worker",
+        "--host", host, "--port", str(port),
+        "--meta", meta_path,
+        "--client-ids", ",".join(str(c) for c in client_ids),
+        *(extra or []),
+    ]
+
+
+def spawn_worker(meta_path: str, host: str, port: int, client_ids: list[int],
+                 extra: list[str] | None = None) -> subprocess.Popen:
+    src = Path(rp.__file__).resolve().parents[3]  # .../src
+    env = {
+        **os.environ,
+        "PYTHONPATH": f"{src}{os.pathsep}{os.environ.get('PYTHONPATH', '')}".rstrip(os.pathsep),
+        "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+    }
+    return subprocess.Popen(
+        worker_cmd(meta_path, host, port, client_ids, extra),
+        env=env,
+        stdout=subprocess.DEVNULL,
+        stderr=subprocess.PIPE,
+    )
+
+
+@dataclasses.dataclass
+class WireRunResult:
+    meta: dict
+    stats: WireRunStats
+    schedule: rp.ArrivalSchedule
+    history: list  # AsyncRoundRecord flushes, wall-clock arrival order
+    global_row: np.ndarray  # final (N_total,) packed global
+    dropped_total: int
+    liveness_log: list[tuple[float, int, str]]
+    worker_stderr: dict[str, str] = dataclasses.field(default_factory=dict)
+
+
+def wire_run(
+    meta: dict,
+    n_flushes: int,
+    *,
+    worker_groups: list[dict] | None = None,
+    deadline_s: float = 180.0,
+    land_delay_s: float = 0.0,
+    port: int = 0,
+    hooks=None,
+) -> WireRunResult:
+    """One multi-process federation: engine + WireServer + worker processes.
+
+    worker_groups: list of ``{"client_ids": [...], "extra": [cli flags]}``
+    — one worker process per entry (default: all clients in one process).
+    hooks: optional ``fn(server, workers)`` called right after workers
+    spawn, before `serve` — scenario tests use it to kill a process mid-run.
+
+    With ``WIRE_SCHEDULE_DIR`` set in the environment, every run saves its
+    recorded arrival schedule there (CI uploads the directory as an
+    artifact on failure, so a red wire test can be replay-debugged locally
+    via ``train.py --replay-schedule`` without rerunning the subprocesses).
+    """
+    engine = rp.make_engine(meta, clock=WallClock())
+    server = WireServer(engine, port=port, land_delay_s=land_delay_s)
+    server.schedule.meta = dict(meta)
+    groups = worker_groups or [{"client_ids": list(range(meta["n_clients"]))}]
+    workers: list[subprocess.Popen] = []
+    stderrs: dict[str, str] = {}
+    with tempfile.TemporaryDirectory(prefix="fedwire_") as td:
+        meta_path = str(Path(td) / "meta.json")
+        Path(meta_path).write_text(json.dumps(meta))
+        server.start()
+        try:
+            for g in groups:
+                workers.append(
+                    spawn_worker(meta_path, server.host, server.port,
+                                 g["client_ids"], g.get("extra"))
+                )
+            if hooks is not None:
+                hooks(server, workers)
+            server.serve(n_flushes, deadline_s=deadline_s)
+        finally:
+            server.stop()
+            deadline = time.monotonic() + 20.0
+            for i, p in enumerate(workers):
+                try:
+                    _, err = p.communicate(timeout=max(0.1, deadline - time.monotonic()))
+                except subprocess.TimeoutExpired:
+                    p.kill()
+                    _, err = p.communicate()
+                if err:
+                    stderrs[f"worker{i}"] = err.decode("utf-8", "replace")[-4000:]
+    dump_dir = os.environ.get("WIRE_SCHEDULE_DIR")
+    if dump_dir:
+        global _run_counter
+        _run_counter += 1
+        Path(dump_dir).mkdir(parents=True, exist_ok=True)
+        server.schedule.save(
+            Path(dump_dir) / f"schedule_{os.getpid()}_{_run_counter:03d}.json"
+        )
+    return WireRunResult(
+        meta=meta,
+        stats=server.stats,
+        schedule=server.schedule,
+        history=list(engine.history),
+        global_row=np.asarray(engine.global_packed_row(), np.float32),
+        dropped_total=engine.dropped_total,
+        liveness_log=list(server.liveness_log),
+        worker_stderr=stderrs,
+    )

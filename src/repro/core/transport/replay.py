@@ -1,0 +1,215 @@
+"""Recorded arrival schedules + the SimClock replay harness (DESIGN.md §14).
+
+Every wire run records its **arrival schedule**: the ordered dispatch/land
+events the server's landing loop actually processed, with relative wall
+times. `replay` drives the same `ArrivalAsyncEngine` from that record on a
+plain `SimClock`, recomputing each trained row with the identical jitted
+row update (`async_engine.build_row_update`) and pushing it through the
+identical wire codec round-trip — so a recorded run replays end-to-end
+in-process, and the replay-determinism contract holds:
+
+    dense codec  -> the replayed global params equal the wire run's
+                    **bit for bit** (same jit program, same codec bytes,
+                    same landing order);
+    quant8 codec -> 1e-5 agreement (the int8 delta round-trip is itself
+                    deterministic NumPy, so in practice this is bitwise
+                    too; the tolerance covers cross-platform rint/fma
+                    variation between the worker's host and the replayer).
+
+Replay cross-checks every recorded decision against the engine's own:
+dispatch versions, staleness drops, and flush boundaries must all re-derive
+identically, or `ReplayMismatch` pinpoints the first divergent event. The
+schedule serializes to JSON (no tensors — rows are recomputed, never
+stored) so CI can attach failing schedules as artifacts for offline replay.
+
+The run **meta** block is the schedule's self-description: everything
+needed to rebuild the config, engine, optimizer, and per-client synthetic
+batches. Batches are derived, not recorded: client ``c``'s ``k``-th local
+dataset is a pure function of ``(seed, c, k)`` (`synth_client_batch`), and
+the UPDATE frame carries ``k`` so worker and replayer index the same data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import async_engine as ae
+from repro.core.rounds import FedConfig
+from repro.core.simclock import SimClock
+from repro.core.transport import codec
+from repro.optim import sgd
+
+
+class ReplayMismatch(AssertionError):
+    """The wire path drifted from the in-process reference — which is never
+    allowed: the first recorded event whose re-derivation disagrees."""
+
+
+@dataclasses.dataclass
+class WireEvent:
+    """One landing-loop action.
+
+    kind "dispatch": the server pushed the current global to `client`
+    (connect, reconnect, or a deferred post-flush dispatch); `version` is
+    the global version sent. kind "land": an UPDATE arrived; `version` is
+    the dispatch version it was trained against, `seq` the client-local
+    update index (the batch selector), `dropped` whether the staleness gate
+    discarded it, and `flush` the round index it completed (-1 otherwise).
+    """
+
+    kind: str
+    t: float
+    client: int
+    version: int
+    seq: int = -1
+    dropped: bool = False
+    flush: int = -1
+
+
+@dataclasses.dataclass
+class ArrivalSchedule:
+    meta: dict[str, Any]
+    events: list[WireEvent] = dataclasses.field(default_factory=list)
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {"meta": self.meta, "events": [dataclasses.asdict(e) for e in self.events]}
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "ArrivalSchedule":
+        obj = json.loads(text)
+        return cls(obj["meta"], [WireEvent(**e) for e in obj["events"]])
+
+    def save(self, path) -> None:
+        Path(path).write_text(self.to_json())
+
+    @classmethod
+    def load(cls, path) -> "ArrivalSchedule":
+        return cls.from_json(Path(path).read_text())
+
+    @property
+    def n_flushes(self) -> int:
+        return sum(1 for e in self.events if e.flush >= 0)
+
+    @property
+    def n_dropped(self) -> int:
+        return sum(1 for e in self.events if e.kind == "land" and e.dropped)
+
+
+# -- run meta: the schedule's self-description -------------------------------
+
+def build_cfg(meta: dict):
+    cfg = get_arch(meta["arch"])
+    if meta.get("reduced", True):
+        cfg = cfg.reduced()
+    if meta.get("overrides"):
+        cfg = dataclasses.replace(cfg, **meta["overrides"])
+    return cfg
+
+
+def build_fed(meta: dict) -> FedConfig:
+    return FedConfig(
+        n_clients=int(meta["n_clients"]),
+        local_steps=int(meta.get("local_steps", 1)),
+        aggregation=meta.get("aggregation", "dense"),
+        client_axis="data",
+        data_axis=None,
+        state_layout="flat",
+        mode="async",
+        buffer_size=int(meta.get("buffer_size", 0)),
+        staleness_alpha=float(meta.get("staleness_alpha", 0.5)),
+        max_staleness=int(meta.get("max_staleness", 0)),
+        transport=meta.get("transport", "socket"),
+        wire_codec=meta.get("wire_codec", "dense"),
+        queue_cap=int(meta.get("queue_cap", 0)),
+        heartbeat_s=float(meta.get("heartbeat_s", 0.2)),
+        heartbeat_timeout_s=float(meta.get("heartbeat_timeout_s", 2.0)),
+    )
+
+
+def build_optimizer(meta: dict):
+    # the transport path trains statelessly at the worker (DESIGN.md §14):
+    # momentum-free sgd is the build_row_update purity requirement
+    return sgd(float(meta.get("lr", 0.05)), momentum=0.0)
+
+
+def synth_client_batch(cfg, meta: dict, client: int, k: int):
+    """Client ``c``'s ``k``-th local batch: (E, b, seq) tokens, a pure
+    function of (seed, c, k) — the worker and the replayer derive the same
+    data without any of it crossing the wire."""
+    rng = np.random.default_rng([int(meta["seed"]), int(client), int(k)])
+    shape = (int(meta.get("local_steps", 1)), int(meta["batch"]), int(meta["seq"]))
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, shape), jnp.int32)}
+
+
+# -- replay ------------------------------------------------------------------
+
+def make_engine(meta: dict, clock: SimClock | None = None) -> ae.ArrivalAsyncEngine:
+    cfg, fed = build_cfg(meta), build_fed(meta)
+    return ae.ArrivalAsyncEngine(
+        cfg, fed, build_optimizer(meta), seed=int(meta["seed"]), clock=clock or SimClock()
+    )
+
+
+def replay(schedule: ArrivalSchedule, *, clock: SimClock | None = None) -> ae.ArrivalAsyncEngine:
+    """Re-derive a recorded wire run through the in-process engine on the
+    SimClock. Returns the engine (history, state, drop counters populated);
+    raises :class:`ReplayMismatch` at the first event whose re-derivation
+    disagrees with the record."""
+    meta = schedule.meta
+    cfg, fed = build_cfg(meta), build_fed(meta)
+    opt = build_optimizer(meta)
+    engine = ae.ArrivalAsyncEngine(
+        cfg, fed, opt, seed=int(meta["seed"]), clock=clock or SimClock()
+    )
+    update = ae.build_row_update(
+        cfg, fed, opt, spec=engine.agg.ctx.spec, template=engine.agg.ctx.template
+    )
+    wire_codec = meta.get("wire_codec", "dense")
+    block = int(meta.get("quant_block", 1024))
+    for i, ev in enumerate(schedule.events):
+        where = f"event {i} ({ev.kind} client {ev.client} t={ev.t:.3f})"
+        if ev.kind == "dispatch":
+            engine.clock.advance_to(max(ev.t, engine.clock.now()))
+            got = engine.dispatch(ev.client)
+            if got != ev.version:
+                raise ReplayMismatch(
+                    f"{where}: replay dispatched version {got}, wire sent {ev.version}"
+                )
+        elif ev.kind == "land":
+            have = int(engine.dispatch_version[ev.client])
+            if have != ev.version:
+                raise ReplayMismatch(
+                    f"{where}: replay dispatch_version {have} != recorded {ev.version}"
+                )
+            base = np.asarray(engine.state["params"][ev.client], np.float32)
+            batch = synth_client_batch(cfg, meta, ev.client, ev.seq)
+            trained, loss = update(jnp.asarray(base), batch)
+            # the exact worker-side wire hop: encode -> decode the update
+            landed = codec.decode_update(
+                codec.encode_update(np.asarray(trained, np.float32), base, wire_codec, block),
+                base,
+            )
+            res = engine.land(ev.client, landed, loss=float(loss), t=ev.t)
+            if res.dropped != ev.dropped:
+                raise ReplayMismatch(
+                    f"{where}: replay {'dropped' if res.dropped else 'staged'} "
+                    f"(staleness {res.staleness}), wire "
+                    f"{'dropped' if ev.dropped else 'staged'}"
+                )
+            got_flush = -1 if res.flush is None else res.flush.round_idx
+            if got_flush != ev.flush:
+                raise ReplayMismatch(
+                    f"{where}: replay flush index {got_flush} != recorded {ev.flush}"
+                )
+        else:
+            raise ReplayMismatch(f"{where}: unknown event kind {ev.kind!r}")
+    return engine

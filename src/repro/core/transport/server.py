@@ -1,0 +1,318 @@
+"""The server side of the wire transport (DESIGN.md §14).
+
+`WireServer` owns the listening socket, one reader thread per client
+connection, and THE landing loop — the single thread allowed to touch the
+`ArrivalAsyncEngine`. Readers only parse frames and enqueue work:
+
+    reader threads --(bounded landing queue)--> landing loop --> engine
+
+The landing queue is bounded (``FedConfig.queue_cap``, default 2C): when
+the loop falls behind, `queue.put` blocks the reader, the reader stops
+draining its socket, the kernel's TCP window closes, and the *worker's*
+send blocks — real end-to-end backpressure, counted in
+``backpressure_blocks`` rather than buffered unboundedly.
+
+Liveness is a two-state machine per client driven entirely by frame
+arrival times: ALIVE -> DEAD after ``heartbeat_timeout_s`` of silence
+(heartbeats ride their own frame type and never touch the engine), DEAD ->
+ALIVE on any frame. Transitions land in ``liveness_log``. A dead client's
+in-flight dispatch simply never returns; when it reconnects (a fresh HELLO
+is the reconnect path) the landing loop redispatches the current global —
+unless the client is staged in the pending flush, in which case the
+dispatch is deferred to the flush boundary so the landed update is never
+overwritten.
+
+Every landing-loop action is recorded into an `ArrivalSchedule`
+(`core/transport/replay.py`), timestamped off the engine's `WallClock` —
+the record a SimClock replay must reproduce bit-for-bit (dense codec).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import socket
+import threading
+import time
+
+import numpy as np
+
+from repro.core.simclock import WallClock
+from repro.core.transport import codec, wire
+from repro.core.transport.replay import ArrivalSchedule, WireEvent
+
+ALIVE, DEAD = "alive", "dead"
+
+
+@dataclasses.dataclass
+class WireRunStats:
+    """Operational counters the monitor renders next to the round history."""
+
+    flushes: int = 0
+    landed: int = 0
+    dropped: int = 0
+    heartbeats: int = 0
+    reconnects: int = 0
+    bytes_up: int = 0  # client -> server, payload+framing
+    bytes_down: int = 0  # server -> client
+    backpressure_blocks: int = 0  # reader puts that found the queue full
+    queue_high_water: int = 0
+    protocol_errors: int = 0  # frames the engine refused (double updates)
+    superseded: int = 0  # updates whose echoed dispatch version was stale
+    deadline_hit: bool = False
+
+
+class WireServer:
+    """Socket front-end for one `ArrivalAsyncEngine`.
+
+    The engine must have been built on a `simclock.WallClock` (the harness
+    does this); `serve(n_flushes)` runs the landing loop until that many
+    flushes land or the deadline passes.
+    """
+
+    def __init__(self, engine, *, host: str = "127.0.0.1", port: int = 0,
+                 record: bool = True, land_delay_s: float = 0.0):
+        fed = engine.fed
+        if fed.transport != "socket":
+            raise ValueError(
+                f"WireServer needs FedConfig(transport='socket'), got {fed.transport!r}"
+            )
+        if not isinstance(engine.clock, WallClock):
+            raise ValueError(
+                "WireServer runs in real time: build the engine on a "
+                "simclock.WallClock (replay is where a plain SimClock belongs)"
+            )
+        self.engine = engine
+        self.fed = fed
+        self.codec = fed.wire_codec
+        if self.codec not in codec.CODECS:
+            raise ValueError(f"unknown wire_codec {self.codec!r}")
+        self.block = fed.quant_block
+        self.queue_cap = fed.queue_cap or 2 * fed.n_clients
+        self.land_delay_s = land_delay_s  # test hook: a deliberately slow landing loop
+        self._q: queue.Queue = queue.Queue(self.queue_cap)
+        self.stats = WireRunStats()
+        self.schedule = ArrivalSchedule(meta={}) if record else None
+        self._lock = threading.Lock()  # conns / last_seen / stats counters
+        self._conns: dict[int, socket.socket] = {}
+        self._send_locks: dict[int, threading.Lock] = {}
+        self._last_seen: dict[int, float] = {}
+        self.liveness: dict[int, str] = {}
+        self.liveness_log: list[tuple[float, int, str]] = []
+        self._deferred: set[int] = set()  # HELLOs from staged clients, dispatch at flush
+        self._stopping = threading.Event()
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(fed.n_clients + 4)
+        self.host, self.port = self._listener.getsockname()[:2]
+        self._accept_thread: threading.Thread | None = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "WireServer":
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="wire-accept", daemon=True
+        )
+        self._accept_thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stopping.set()
+        with self._lock:
+            conns = dict(self._conns)
+        for c, sock in conns.items():
+            try:
+                self._send(c, wire.pack_bye())
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+
+    # -- reader side (per-connection threads; never touch the engine) --------
+
+    def _accept_loop(self) -> None:
+        while not self._stopping.is_set():
+            try:
+                sock, _ = self._listener.accept()
+            except OSError:
+                return
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            threading.Thread(
+                target=self._reader, args=(sock,), name="wire-reader", daemon=True
+            ).start()
+
+    def _put(self, item) -> None:
+        try:
+            self._q.put_nowait(item)
+        except queue.Full:
+            with self._lock:
+                self.stats.backpressure_blocks += 1
+            self._q.put(item)  # blocks this reader: backpressure to the socket
+        with self._lock:
+            self.stats.queue_high_water = max(self.stats.queue_high_water, self._q.qsize())
+
+    def _reader(self, sock: socket.socket) -> None:
+        parser = wire.FrameParser()
+        client: int | None = None
+        while not self._stopping.is_set():
+            try:
+                data = sock.recv(1 << 16)
+            except OSError:
+                break
+            if not data:
+                break
+            # peek, never sync: only the landing loop advances the engine clock
+            t = self.engine.clock.peek()
+            with self._lock:
+                self.stats.bytes_up += len(data)
+            try:
+                frames = parser.feed(data)
+            except ValueError:
+                break  # corrupt stream: drop the connection, liveness handles it
+            for ftype, payload in frames:
+                if ftype == wire.HELLO:
+                    client = wire.parse_hello(payload)
+                    if not 0 <= client < self.fed.n_clients:
+                        sock.close()
+                        return
+                    with self._lock:
+                        known = client in self._conns
+                        self._conns[client] = sock
+                        self._send_locks.setdefault(client, threading.Lock())
+                        self._last_seen[client] = t
+                        if known:
+                            self.stats.reconnects += 1
+                    self._put(("hello", client, None))
+                elif ftype == wire.UPDATE:
+                    c, seq, version, loss, buf = wire.parse_update(payload)
+                    with self._lock:
+                        self._last_seen[c] = t
+                    self._put(("update", c, (seq, version, loss, buf)))
+                elif ftype == wire.HEARTBEAT:
+                    c = wire.parse_heartbeat(payload)
+                    with self._lock:
+                        self._last_seen[c] = t
+                        self.stats.heartbeats += 1
+                # BYE from a client is just a close; the recv() EOF handles it
+
+    # -- landing loop (the only engine owner) ---------------------------------
+
+    def _send(self, c: int, frame: bytes) -> None:
+        with self._lock:
+            sock = self._conns.get(c)
+            slock = self._send_locks.get(c)
+        if sock is None or slock is None:
+            return
+        try:
+            with slock:
+                sock.sendall(frame)
+            with self._lock:
+                self.stats.bytes_down += len(frame)
+        except OSError:
+            pass  # client gone mid-send; liveness will flag it
+
+    def _send_dispatch(self, c: int) -> None:
+        row = self.engine.dispatch_row(c)
+        frame = wire.pack_dispatch(
+            int(self.engine.dispatch_version[c]), codec.encode_row(row, self.codec)
+        )
+        self._send(c, frame)
+
+    def _record(self, ev: WireEvent) -> None:
+        if self.schedule is not None:
+            self.schedule.events.append(ev)
+
+    def _check_liveness(self, t: float) -> None:
+        timeout = self.fed.heartbeat_timeout_s
+        with self._lock:
+            seen = dict(self._last_seen)
+        for c, last in seen.items():
+            state = self.liveness.get(c)
+            if t - last > timeout and state == ALIVE:
+                self.liveness[c] = DEAD
+                self.liveness_log.append((t, c, DEAD))
+            elif t - last <= timeout and state != ALIVE:
+                self.liveness[c] = ALIVE
+                self.liveness_log.append((t, c, ALIVE))
+
+    def _dispatch_now(self, c: int, t: float) -> None:
+        v = self.engine.dispatch(c)
+        self._record(WireEvent(kind="dispatch", t=t, client=c, version=v))
+        self._send_dispatch(c)
+
+    def serve(self, n_flushes: int, *, deadline_s: float = 120.0) -> WireRunStats:
+        """Run the landing loop until `n_flushes` flushes land. Returns the
+        stats; `engine.history` has the round records and `self.schedule`
+        the replayable arrival record. A hung federation (every client dead,
+        nothing arriving) exits at the deadline with ``deadline_hit`` set
+        instead of stalling the caller — CI's hung-socket guard depends on
+        this never blocking forever."""
+        deadline = time.monotonic() + deadline_s
+        while self.stats.flushes < n_flushes:
+            if time.monotonic() > deadline:
+                self.stats.deadline_hit = True
+                break
+            t = self.engine.clock.sync()
+            self._check_liveness(t)
+            try:
+                kind, c, args = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if self.land_delay_s:
+                time.sleep(self.land_delay_s)
+            t = self.engine.clock.sync()
+            if kind == "hello":
+                if c in self.engine.staged():
+                    self._deferred.add(c)  # redispatch at the flush boundary
+                else:
+                    self._dispatch_now(c, t)
+            elif kind == "update":
+                seq, trained_against, loss, buf = args
+                if trained_against != int(self.engine.dispatch_version[c]):
+                    # the echoed dispatch was superseded (a flush or a
+                    # reconnect redispatched this client while the update
+                    # was in flight): the row it trained on is not the row
+                    # the engine holds, so landing it would silently
+                    # diverge from the replay. Refuse it; the newer
+                    # dispatch's update is already on its way.
+                    self.stats.superseded += 1
+                    continue
+                base = np.asarray(self.engine.state["params"][c], np.float32)
+                try:
+                    row = codec.decode_update(buf, base)
+                except ValueError:
+                    continue  # corrupt payload: skip; the client will retrain on redispatch
+                try:
+                    res = self.engine.land(c, row, loss=loss, t=t)
+                except RuntimeError:
+                    # protocol violation (double update for one dispatch) —
+                    # never let a misbehaving client kill the landing loop
+                    self.stats.protocol_errors += 1
+                    continue
+                self.stats.landed += 0 if res.dropped else 1
+                self.stats.dropped += 1 if res.dropped else 0
+                self._record(
+                    WireEvent(
+                        kind="land", t=t, client=c, version=trained_against, seq=seq,
+                        dropped=res.dropped,
+                        flush=-1 if res.flush is None else res.flush.round_idx,
+                    )
+                )
+                if res.dropped:
+                    # land() already redispatched the row+version; ship it
+                    self._send_dispatch(c)
+                elif res.flush is not None:
+                    self.stats.flushes += 1
+                    for sc in res.flush.participants:
+                        self._send_dispatch(sc)  # staged rows already hold the global
+                    # deferred reconnects were staged, hence participants:
+                    # the flush dispatch above covered them
+                    self._deferred.clear()
+        return self.stats

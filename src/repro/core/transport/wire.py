@@ -1,0 +1,149 @@
+"""Length-prefixed wire framing for the federation transport (DESIGN.md §14).
+
+One frame on the socket is::
+
+    u32 length (big-endian, of everything after itself)
+    u8  frame type
+    ... type-specific payload
+
+Frame types (client -> server unless noted):
+
+    HELLO      client_id u32, protocol u16 — sent once per connection;
+               repeating it on a new connection IS the reconnect path
+               (the server re-registers the id and redispatches).
+    DISPATCH   (server -> client) version u64, encoded row payload
+               (`transport.codec`) — the global model the client trains on.
+    UPDATE     client_id u32, seq u32 (client-local update index, the batch
+               selector), version u64 (ECHO of the DISPATCH version this
+               update was trained against — the server refuses an echo that
+               does not match the client's current dispatch, which closes
+               the superseded-dispatch race: a reconnect or redispatch can
+               leave two processes holding dispatches for one client id,
+               and an update trained on the older row must never be
+               credited to the newer version), loss f32, encoded update
+               payload (dense full row or quant8 delta vs the dispatch,
+               `codec.encode_update`).
+    HEARTBEAT  client_id u32 — liveness only, never touches the engine.
+    BYE        (server -> client) empty — orderly shutdown.
+
+`FrameParser` is an incremental decoder: feed it arbitrary byte chunks
+(TCP gives no message boundaries — frames arrive split and coalesced) and
+it yields complete frames in order. The hypothesis round-trip suite in
+tests/test_packing_props.py pins encode->feed->parse identity under
+adversarial chunkings.
+"""
+from __future__ import annotations
+
+import struct
+
+PROTOCOL_VERSION = 1
+
+HELLO = 1
+DISPATCH = 2
+UPDATE = 3
+HEARTBEAT = 4
+BYE = 5
+
+FRAME_TYPES = (HELLO, DISPATCH, UPDATE, HEARTBEAT, BYE)
+
+_LEN = struct.Struct("!I")
+_HELLO = struct.Struct("!IH")
+_DISPATCH = struct.Struct("!Q")
+_UPDATE = struct.Struct("!IIQf")
+_HEARTBEAT = struct.Struct("!I")
+
+# a frame larger than this is a protocol error, not a big model: the row
+# payload of a 314B-param arch ships sharded, never as one frame
+MAX_FRAME = 1 << 31
+
+
+def encode_frame(ftype: int, payload: bytes = b"") -> bytes:
+    """One wire frame: length prefix + type byte + payload."""
+    if ftype not in FRAME_TYPES:
+        raise ValueError(f"unknown frame type {ftype}")
+    body = bytes([ftype]) + payload
+    if len(body) > MAX_FRAME:
+        raise ValueError(f"frame of {len(body)} bytes exceeds MAX_FRAME")
+    return _LEN.pack(len(body)) + body
+
+
+class FrameParser:
+    """Incremental frame decoder over a TCP byte stream.
+
+    `feed(chunk)` returns every frame completed by that chunk as a list of
+    ``(ftype, payload)`` tuples; partial frames are buffered across calls.
+    The parser is transport-agnostic: the socket reader threads, the replay
+    tooling, and the property tests all share it.
+    """
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    @property
+    def pending(self) -> int:
+        """Bytes buffered awaiting a complete frame."""
+        return len(self._buf)
+
+    def feed(self, chunk: bytes) -> list[tuple[int, bytes]]:
+        self._buf.extend(chunk)
+        frames: list[tuple[int, bytes]] = []
+        while True:
+            if len(self._buf) < _LEN.size:
+                return frames
+            (n,) = _LEN.unpack_from(self._buf, 0)
+            if n < 1 or n > MAX_FRAME:
+                raise ValueError(f"corrupt frame length {n}")
+            if len(self._buf) < _LEN.size + n:
+                return frames
+            body = bytes(self._buf[_LEN.size : _LEN.size + n])
+            del self._buf[: _LEN.size + n]
+            ftype = body[0]
+            if ftype not in FRAME_TYPES:
+                raise ValueError(f"unknown frame type {ftype}")
+            frames.append((ftype, body[1:]))
+
+
+# -- message payloads --------------------------------------------------------
+
+def pack_hello(client_id: int) -> bytes:
+    return encode_frame(HELLO, _HELLO.pack(client_id, PROTOCOL_VERSION))
+
+
+def parse_hello(payload: bytes) -> int:
+    client_id, proto = _HELLO.unpack(payload)
+    if proto != PROTOCOL_VERSION:
+        raise ValueError(f"protocol version {proto} != {PROTOCOL_VERSION}")
+    return client_id
+
+
+def pack_dispatch(version: int, row_payload: bytes) -> bytes:
+    return encode_frame(DISPATCH, _DISPATCH.pack(version) + row_payload)
+
+
+def parse_dispatch(payload: bytes) -> tuple[int, bytes]:
+    (version,) = _DISPATCH.unpack_from(payload, 0)
+    return version, payload[_DISPATCH.size :]
+
+
+def pack_update(client_id: int, seq: int, version: int, loss: float,
+                row_payload: bytes) -> bytes:
+    return encode_frame(
+        UPDATE, _UPDATE.pack(client_id, seq, version, loss) + row_payload
+    )
+
+
+def parse_update(payload: bytes) -> tuple[int, int, int, float, bytes]:
+    client_id, seq, version, loss = _UPDATE.unpack_from(payload, 0)
+    return client_id, seq, version, loss, payload[_UPDATE.size :]
+
+
+def pack_heartbeat(client_id: int) -> bytes:
+    return encode_frame(HEARTBEAT, _HEARTBEAT.pack(client_id))
+
+
+def parse_heartbeat(payload: bytes) -> int:
+    return _HEARTBEAT.unpack(payload)[0]
+
+
+def pack_bye() -> bytes:
+    return encode_frame(BYE)

@@ -12,7 +12,17 @@ or emits the production-mesh launch configuration with --print-plan.
   PYTHONPATH=src python -m repro.launch.train --task detection --eval-every 1
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --rounds 20 \
       --mode async --buffer-size 2 --staleness-alpha 0.5 --max-staleness 4
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --mode async \
+      --transport socket --clients 4 --buffer-size 2 --rounds 3 \
+      --wire-codec quant8 --record-schedule /tmp/run.schedule.json
+  PYTHONPATH=src python -m repro.launch.train --replay-schedule /tmp/run.schedule.json
   PYTHONPATH=src python -m repro.launch.train --arch grok-1-314b --print-plan
+
+--transport socket runs a REAL multi-process federation (DESIGN.md §14):
+worker processes (`repro.launch.worker`) train over TCP and the landing
+loop feeds the arrival engine in wall-clock order; --rounds counts
+flushes. The recorded arrival schedule replays deterministically through
+the in-process SimClock engine (--replay-schedule verifies one).
 
 --task detection runs the paper's actual workload: federated YOLOv3 over a
 partitioned synthetic scene pool, with per-round global + per-client
@@ -49,6 +59,62 @@ def print_plan(arch_name: str) -> None:
             print(f"   clients={plan.fed.n_clients} client_axis={plan.fed.client_axis} "
                   f"data_axis={plan.fed.data_axis} microbatches={plan.fed.microbatches} topn={plan.fed.topn}")
         print(f"   rules={ {k: v for k, v in plan.rules.items() if v} }")
+
+
+def _run_socket(args) -> None:
+    """The --transport socket path: a real multi-process federation, then
+    the wire summary + JSON (and optionally the recorded schedule)."""
+    from repro.core.transport import harness
+
+    meta = harness.make_meta(
+        args.arch,
+        reduced=not args.full_size,
+        n_clients=args.clients,
+        buffer_size=args.buffer_size,
+        max_staleness=args.max_staleness,
+        staleness_alpha=args.staleness_alpha,
+        aggregation=args.agg if args.agg != "eq6" else "dense",
+        local_steps=args.local_steps,
+        batch=args.batch,
+        seq=args.seq,
+        lr=args.lr,
+        wire_codec=args.wire_codec,
+    )
+    res = harness.wire_run(meta, args.rounds)
+    if args.record_schedule:
+        res.schedule.save(args.record_schedule)
+    print(monitor.render_wire(args.arch, res.history, res.stats, args.clients,
+                              liveness_log=res.liveness_log))
+    stal = [s for r in res.history for s in r.staleness]
+    print(json.dumps({
+        "final_loss": res.history[-1].loss if res.history else float("nan"),
+        "rounds": len(res.history),
+        "mode": "async",
+        "transport": "socket",
+        "wire_codec": args.wire_codec,
+        "landed": res.stats.landed,
+        "dropped": res.dropped_total,
+        "mean_staleness": (sum(stal) / len(stal)) if stal else 0.0,
+        "bytes_up": res.stats.bytes_up,
+        "bytes_down": res.stats.bytes_down,
+        "deadline_hit": res.stats.deadline_hit,
+    }))
+
+
+def _replay_schedule(path: str) -> None:
+    """Replay a recorded arrival schedule (a CI artifact, say) through the
+    SimClock engine; exits nonzero on the first divergent event."""
+    from repro.core.transport import replay as rp
+
+    schedule = rp.ArrivalSchedule.load(path)
+    engine = rp.replay(schedule)
+    print(json.dumps({
+        "replayed_events": len(schedule.events),
+        "flushes": len(engine.history),
+        "final_loss": engine.history[-1].loss if engine.history else float("nan"),
+        "dropped": engine.dropped_total,
+        "deterministic": True,
+    }))
 
 
 def main() -> None:
@@ -91,6 +157,18 @@ def main() -> None:
     ap.add_argument("--max-staleness", type=int, default=0,
                     help="async: drop updates staler than this many versions "
                     "(0 -> keep all; drops are counted, never silent)")
+    ap.add_argument("--transport", default="inproc", choices=["inproc", "socket"],
+                    help="inproc: simulated clients in this process; socket: real "
+                    "worker processes over TCP (needs --mode async; --rounds "
+                    "counts buffered flushes)")
+    ap.add_argument("--wire-codec", default="dense", choices=["dense", "quant8"],
+                    help="socket: UPDATE payload encoding — dense f32 rows or "
+                    "int8 block-quantized deltas (the paper's ~4x uplink cut)")
+    ap.add_argument("--record-schedule", default="",
+                    help="socket: write the recorded arrival schedule (JSON) here")
+    ap.add_argument("--replay-schedule", default="",
+                    help="replay a recorded arrival schedule through the SimClock "
+                    "engine and exit (no --arch needed; verifies determinism)")
     ap.add_argument("--participation", default="full", choices=["full", "masked", "compact"],
                     help="round body: full (everyone trains), masked (cond-gated), "
                     "compact (static-K gather; see --max-participants)")
@@ -112,6 +190,21 @@ def main() -> None:
     ap.add_argument("--store", default="", help="COS object-store directory")
     ap.add_argument("--print-plan", action="store_true")
     args = ap.parse_args()
+
+    if args.replay_schedule:
+        _replay_schedule(args.replay_schedule)
+        return
+    if args.transport == "socket":
+        if args.mode != "async":
+            ap.error("--transport socket is the async control plane over a real "
+                     "wire; pass --mode async")
+        if args.stream or args.task == "detection":
+            ap.error("--transport socket runs the buffered arrival engine "
+                     "(lm workload, no --stream)")
+        if args.arch is None:
+            ap.error("--arch is required")
+        _run_socket(args)
+        return
 
     if args.task == "detection" and args.arch is None:
         args.arch = "fedyolov3"  # the paper's own model

@@ -1,0 +1,200 @@
+"""A federated client worker process (DESIGN.md §14).
+
+``python -m repro.launch.worker --host H --port P --meta meta.json
+--client-ids 0,1`` connects each client id to a `WireServer` over TCP and
+runs the dispatch/train/upload loop:
+
+    HELLO(c) -> [DISPATCH(version, row) -> train -> UPDATE(c, seq, version, loss)]* -> BYE
+
+The UPDATE echoes the DISPATCH version it trained against: a reconnect can
+leave two processes holding dispatches for one client id, and the server
+uses the echo to refuse an update trained on a row its engine has already
+moved past (superseded dispatch).
+
+Training goes through `async_engine.build_row_update` — the SAME jitted
+single-row program the SimClock replay uses — on batches derived from
+(seed, client, seq) via `transport.synth_client_batch`. Nothing about the
+data crosses the wire; ``seq`` (the client-local update counter) rides the
+UPDATE frame so the replayer indexes the same batch. One process can host
+several clients as threads sharing the one jitted update (amortizing the
+JAX import), while fault-scenario clients run alone so crashing or
+delaying them is isolated.
+
+Scenario hooks: ``--train-delay`` sleeps before each upload (a straggler;
+with a small ``max_staleness`` its updates arrive stale and get dropped),
+``--crash-after N`` hard-kills the process (``os._exit``) after N uploads
+(mid-round crash), ``--max-updates N`` exits each client loop cleanly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import sys
+import threading
+import time
+
+import numpy as np
+
+CRASH_EXIT_CODE = 17
+
+
+def _parse_args(argv=None):
+    p = argparse.ArgumentParser(description="FedVision wire worker")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, required=True)
+    p.add_argument("--meta", required=True, help="path to the run-meta JSON")
+    p.add_argument("--client-ids", required=True, help="comma-separated client ids")
+    p.add_argument("--train-delay", type=float, default=0.0,
+                   help="seconds to sleep before each upload (straggler)")
+    p.add_argument("--crash-after", type=int, default=0,
+                   help="os._exit after this many uploads across the process")
+    p.add_argument("--max-updates", type=int, default=0,
+                   help="per-client clean exit after this many uploads")
+    p.add_argument("--heartbeat-s", type=float, default=0.0,
+                   help="override the meta heartbeat period (0 = use meta)")
+    return p.parse_args(argv)
+
+
+class _Conn:
+    """One client's socket: framed sends under a lock (the heartbeat thread
+    and the training loop both write) and a blocking framed-receive."""
+
+    def __init__(self, host: str, port: int, client: int, wire):
+        self.wire = wire
+        self.client = client
+        self.sock = socket.create_connection((host, port), timeout=60.0)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._parser = wire.FrameParser()
+        self._send_lock = threading.Lock()
+        self._frames: list = []
+
+    def send(self, frame: bytes) -> None:
+        with self._send_lock:
+            self.sock.sendall(frame)
+
+    def recv_frame(self):
+        """Next (ftype, payload), or None on EOF."""
+        while not self._frames:
+            data = self.sock.recv(1 << 16)
+            if not data:
+                return None
+            self._frames.extend(self._parser.feed(data))
+        return self._frames.pop(0)
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+def _heartbeat_loop(conn: "_Conn", period: float, stop: threading.Event) -> None:
+    wire = conn.wire
+    while not stop.wait(period):
+        try:
+            conn.send(wire.pack_heartbeat(conn.client))
+        except OSError:
+            return
+
+
+def run_client(client: int, args, meta: dict, cfg, update, crash_budget) -> None:
+    """One client's dispatch/train/upload loop (runs in its own thread)."""
+    from repro.core.transport import codec, replay, wire
+
+    import jax.numpy as jnp
+
+    wire_codec = meta.get("wire_codec", "dense")
+    block = int(meta.get("quant_block", 1024))
+    hb = args.heartbeat_s or float(meta.get("heartbeat_s", 0.2))
+    conn = _Conn(args.host, args.port, client, wire)
+    stop = threading.Event()
+    try:
+        conn.send(wire.pack_hello(client))
+        threading.Thread(
+            target=_heartbeat_loop, args=(conn, hb, stop),
+            name=f"hb-{client}", daemon=True,
+        ).start()
+        seq = 0
+        while True:
+            got = conn.recv_frame()
+            if got is None:
+                return
+            ftype, payload = got
+            if ftype == wire.BYE:
+                return
+            if ftype != wire.DISPATCH:
+                continue
+            version, row_buf = wire.parse_dispatch(payload)
+            base = codec.decode_row(row_buf).astype(np.float32)
+            batch = replay.synth_client_batch(cfg, meta, client, seq)
+            trained, loss = update(jnp.asarray(base), batch)
+            trained = np.asarray(trained, np.float32)
+            if args.train_delay:
+                time.sleep(args.train_delay)
+            buf = codec.encode_update(trained, base, wire_codec, block)
+            conn.send(wire.pack_update(client, seq, version, float(loss), buf))
+            seq += 1
+            if crash_budget is not None and crash_budget.hit():
+                os._exit(CRASH_EXIT_CODE)  # mid-round crash: no BYE, no cleanup
+            if args.max_updates and seq >= args.max_updates:
+                return
+    except OSError:
+        return  # server gone; the process exit path below cleans up
+    finally:
+        stop.set()
+        try:
+            conn.send(wire.pack_bye())
+        except OSError:
+            pass
+        conn.close()
+
+
+class _CrashBudget:
+    """Process-wide upload countdown shared by this worker's clients."""
+
+    def __init__(self, n: int):
+        self._left = n
+        self._lock = threading.Lock()
+
+    def hit(self) -> bool:
+        with self._lock:
+            self._left -= 1
+            return self._left <= 0
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+    meta = json.loads(open(args.meta).read())
+    clients = [int(c) for c in args.client_ids.split(",") if c != ""]
+    if not clients:
+        raise SystemExit("--client-ids is empty")
+
+    # one jit shared by every client thread in this process
+    from repro.core.transport import replay
+
+    cfg = replay.build_cfg(meta)
+    fed = replay.build_fed(meta)
+    opt = replay.build_optimizer(meta)
+    from repro.core.async_engine import build_row_update
+
+    update = build_row_update(cfg, fed, opt)
+    crash = _CrashBudget(args.crash_after) if args.crash_after else None
+
+    threads = [
+        threading.Thread(
+            target=run_client, args=(c, args, meta, cfg, update, crash),
+            name=f"client-{c}",
+        )
+        for c in clients
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

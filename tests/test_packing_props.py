@@ -11,6 +11,13 @@ bucket kernel rely on:
     on BOTH sides of the CHAIN_MAX_CLIENTS cutover — the fused chain and
     the contraction are interchangeable numerics, so retuning the cutover
     can never change results beyond reduction-order ulps.
+
+PR 7 adds the wire-codec properties (DESIGN.md §14): random rows pushed
+through the FULL uplink pipeline — ``encode_update`` -> frame -> adversarial
+TCP chunking (split and coalesced reads) -> ``FrameParser`` ->
+``parse_update`` -> ``decode_update`` — must come back identical (dense,
+bitwise) or within the quant8 half-step bound, because the replay-determinism
+contract replays recorded schedules through exactly this round-trip.
 """
 import numpy as np
 
@@ -20,6 +27,7 @@ from _hyp import given, settings, st
 
 from repro.core import packing
 from repro.core.packing import CHAIN_MAX_CLIENTS, LeafSlot, PackSpec
+from repro.core.transport import codec, wire
 
 
 def _spec_from_layout(widths, kinds):
@@ -131,3 +139,118 @@ def test_grouped_mean_agrees_across_chain_cutover(g_off, ngroups, n, seed):
     )
     np.testing.assert_allclose(np.asarray(rows), exp, rtol=2e-5, atol=2e-6)
     np.testing.assert_allclose(np.asarray(den), den_np, rtol=1e-6)
+
+
+# --------------------------- wire codec (§14) --------------------------------
+
+def _chunked(stream: bytes, rng, style: int):
+    """Adversarial TCP read patterns: 1-byte drip, random small splits
+    (frames arrive split), or huge reads (frames arrive coalesced)."""
+    if style == 0:
+        sizes = [1] * len(stream)
+    elif style == 1:
+        sizes = rng.integers(1, 17, len(stream)).tolist()
+    else:
+        sizes = rng.integers(len(stream) // 2 + 1, len(stream) + 1, 4).tolist()
+    pos = 0
+    for n in sizes:
+        if pos >= len(stream):
+            return
+        yield stream[pos : pos + int(n)]
+        pos += int(n)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    block=st.integers(1, 600),
+    seed=st.integers(0, 2**30),
+    style=st.integers(0, 2),
+)
+def test_wire_update_roundtrip_through_frames_and_codec(n, block, seed, style):
+    """encode_update -> frame -> chunked feed -> parse -> decode_update is
+    the identity (dense) / half-step-bounded (quant8) for random rows."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=n).astype(np.float32) * rng.uniform(0.01, 10)
+    trained = (base + rng.normal(size=n).astype(np.float32) * 0.05).astype(np.float32)
+    for name in codec.CODECS:
+        buf = codec.encode_update(trained, base, name, block)
+        stream = wire.pack_update(7, 3, 41, 0.25, buf)
+        parser = wire.FrameParser()
+        got = []
+        for chunk in _chunked(stream, rng, style):
+            got.extend(parser.feed(chunk))
+        assert parser.pending == 0 and len(got) == 1
+        ftype, payload = got[0]
+        assert ftype == wire.UPDATE
+        c, seq, ver, loss, out = wire.parse_update(payload)
+        assert (c, seq, ver, loss) == (7, 3, 41, 0.25)
+        decoded = codec.decode_update(out, base)
+        if name == "dense":
+            np.testing.assert_array_equal(decoded, trained)
+        else:
+            delta = trained - base
+            nb = -(-n // block)
+            pad = np.zeros(nb * block, np.float32)
+            pad[:n] = delta
+            step = np.abs(pad).reshape(nb, block).max(axis=1) / 127.0
+            # half the quant step per block, plus one f32-addition ulp
+            bound = np.repeat(step / 2 * 1.001, block)[:n] + 2.4e-7 * np.abs(base) + 1e-9
+            assert np.all(np.abs(decoded - trained) <= bound)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    seed=st.integers(0, 2**30),
+    style=st.integers(0, 2),
+)
+def test_wire_dispatch_roundtrip_is_bitwise(n, seed, style):
+    """Dispatch rows (always dense) survive framing + chunking bit-for-bit —
+    the worker must train on EXACTLY the server's row."""
+    rng = np.random.default_rng(seed)
+    row = rng.normal(size=n).astype(np.float32)
+    stream = wire.pack_dispatch(int(rng.integers(0, 2**40)), codec.encode_row(row, "dense"))
+    parser = wire.FrameParser()
+    got = []
+    for chunk in _chunked(stream, rng, style):
+        got.extend(parser.feed(chunk))
+    assert len(got) == 1 and got[0][0] == wire.DISPATCH
+    _v, out = wire.parse_dispatch(got[0][1])
+    np.testing.assert_array_equal(codec.decode_row(out), row)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    nframes=st.integers(2, 8),
+    seed=st.integers(0, 2**30),
+    style=st.integers(0, 2),
+)
+def test_mixed_frame_stream_roundtrip(nframes, seed, style):
+    """A whole conversation's worth of mixed frames survives any chunking
+    in order, with payloads intact."""
+    rng = np.random.default_rng(seed)
+    frames = []
+    for _ in range(nframes):
+        k = int(rng.integers(0, 4))
+        if k == 0:
+            frames.append((wire.HELLO, wire.pack_hello(int(rng.integers(0, 100)))))
+        elif k == 1:
+            frames.append((wire.HEARTBEAT, wire.pack_heartbeat(int(rng.integers(0, 100)))))
+        elif k == 2:
+            frames.append((wire.DISPATCH, wire.pack_dispatch(
+                int(rng.integers(0, 1000)), b"\x00" + rng.bytes(int(rng.integers(1, 200))))))
+        else:
+            frames.append((wire.UPDATE, wire.pack_update(
+                int(rng.integers(0, 100)), int(rng.integers(0, 50)),
+                int(rng.integers(0, 1000)), 0.5, rng.bytes(int(rng.integers(1, 200))))))
+    stream = b"".join(f for _, f in frames)
+    parser = wire.FrameParser()
+    got = []
+    for chunk in _chunked(stream, rng, style):
+        got.extend(parser.feed(chunk))
+    assert parser.pending == 0
+    assert [t for t, _ in got] == [t for t, _ in frames]
+    # each parsed payload is the original frame minus length+type prefix
+    for (ftype, full), (_, payload) in zip(frames, got):
+        assert full[5:] == payload

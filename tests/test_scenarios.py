@@ -1,0 +1,190 @@
+"""Fault scenarios on the real wire, each pinned against the SimClock
+replay (DESIGN.md §14).
+
+Every scenario here runs twice: once as real worker subprocesses over TCP
+(`harness.wire_run`), once as a SimClock replay of the recorded arrival
+schedule — and the two must agree bit for bit on the final global (dense
+codec), with `rp.replay` additionally cross-checking every recorded
+dispatch version, drop decision, and flush boundary along the way.
+
+The scenarios are the failure modes the transport exists to survive:
+  - a client process hard-crashes mid-round (after one upload, before its
+    next) — the survivors keep flushing;
+  - a straggler trains against a version the fast clients flushed past —
+    its update drops at the staleness gate and it redispatches;
+  - a client exits and a NEW process reconnects with the same id (a fresh
+    HELLO is the reconnect path) and resumes contributing;
+  - the landing loop falls behind a bounded queue — readers block and the
+    overflow is counted as backpressure, never buffered unboundedly;
+  - a crashed client goes silent past heartbeat_timeout_s and the
+    liveness machine logs the ALIVE -> DEAD transition.
+
+Workers are deliberately choreographed with --max-updates / --train-delay
+/ --crash-after so the interesting ordering is forced, not hoped for.
+"""
+import json
+import threading
+import time
+
+import numpy as np
+
+from repro.core.transport import harness
+from repro.core.transport import replay as rp
+from repro.launch.worker import CRASH_EXIT_CODE
+
+TINY = harness.TINY_OVERRIDES
+
+
+def _meta(**kw):
+    base = dict(overrides=TINY, seq=8, batch=2)
+    base.update(kw)
+    return harness.make_meta(**base)
+
+
+def _pin_replay(res):
+    """The scenario's correctness spine: the recorded schedule re-derives
+    identically in-process (rp.replay raises on any divergent decision)
+    and lands on the same global bit for bit (dense codec)."""
+    eng = rp.replay(res.schedule)
+    np.testing.assert_array_equal(
+        np.asarray(eng.global_packed_row(), np.float32), res.global_row
+    )
+    assert len(eng.history) == len(res.history)
+    assert eng.dropped_total == res.dropped_total
+    return eng
+
+
+def test_client_crash_midround_survivors_keep_flushing():
+    meta = _meta(n_clients=3, buffer_size=2, max_staleness=0)
+    captured = {}
+
+    def hooks(server, workers):
+        captured["workers"] = workers
+
+    res = harness.wire_run(
+        meta, 3,
+        worker_groups=[
+            {"client_ids": [0, 1]},  # survivors, no limits
+            {"client_ids": [2], "extra": ["--crash-after", "1"]},
+        ],
+        deadline_s=120.0,
+        hooks=hooks,
+    )
+    assert not res.stats.deadline_hit, (res.stats, res.worker_stderr)
+    assert res.stats.flushes == 3
+    # the crasher died the hard way (os._exit, no BYE) after one upload
+    assert captured["workers"][1].returncode == CRASH_EXIT_CODE
+    crash_lands = [e for e in res.schedule.events if e.kind == "land" and e.client == 2]
+    assert len(crash_lands) == 1
+    _pin_replay(res)
+
+
+def test_straggler_drops_past_max_staleness_and_recovers():
+    # buffer_size=1: every landing flushes, so versions advance with the
+    # fast client alone. The straggler's first update arrives 2 versions
+    # stale -> dropped + redispatched; its retrained update then lands
+    # fresh and completes the final flush.
+    meta = _meta(n_clients=2, buffer_size=1, max_staleness=1)
+    res = harness.wire_run(
+        meta, 3,
+        worker_groups=[
+            {"client_ids": [0], "extra": ["--max-updates", "2"]},
+            {"client_ids": [1], "extra": ["--train-delay", "4.0", "--max-updates", "2"]},
+        ],
+        deadline_s=120.0,
+    )
+    assert not res.stats.deadline_hit, (res.stats, res.worker_stderr)
+    assert res.stats.flushes == 3
+    assert res.dropped_total == 1 and res.schedule.n_dropped == 1
+    drops = [e for e in res.schedule.events if e.kind == "land" and e.dropped]
+    assert drops[0].client == 1
+    # after the drop, client 1 landed again and that landing flushed
+    later = [e for e in res.schedule.events if e.kind == "land"
+             and e.client == 1 and not e.dropped]
+    assert later and later[-1].flush >= 0
+    eng = _pin_replay(res)
+    assert eng.history[-1].participants == [1]
+
+
+def test_reconnect_with_same_id_resumes_contributing(tmp_path):
+    meta = _meta(n_clients=2, buffer_size=2, max_staleness=0)
+    meta_path = tmp_path / "meta.json"
+    meta_path.write_text(json.dumps(meta))
+
+    def hooks(server, workers):
+        def late_join():
+            # the fresh HELLO may race the first process's (jit-slow) single
+            # upload: the new process can then hold a dispatch the first
+            # flush supersedes, so its first upload may be refused at the
+            # version-echo gate — budget TWO updates so it retrains from the
+            # flush redispatch and still contributes exactly once
+            time.sleep(4.0)
+            workers.append(
+                harness.spawn_worker(str(meta_path), server.host, server.port,
+                                     [0], ["--max-updates", "2"])
+            )
+        threading.Thread(target=late_join, daemon=True).start()
+
+    res = harness.wire_run(
+        meta, 2,
+        worker_groups=[
+            {"client_ids": [0], "extra": ["--max-updates", "1"]},
+            {"client_ids": [1]},
+        ],
+        deadline_s=120.0,
+        hooks=hooks,
+    )
+    assert not res.stats.deadline_hit, (res.stats, res.worker_stderr)
+    assert res.stats.flushes == 2
+    assert res.stats.reconnects >= 1
+    # the reconnected client really contributed: client 0 landed exactly
+    # twice (once per process) — every flush here needs both clients, and
+    # a superseded/refused upload is never recorded as a land
+    lands0 = [e for e in res.schedule.events if e.kind == "land" and e.client == 0]
+    assert len(lands0) == 2
+    # client 0 was dispatched at least once via HELLO (flush-boundary
+    # redispatches are implicit in both engines, so a deferred reconnect
+    # records no extra dispatch event)
+    dispatches0 = [e for e in res.schedule.events
+                   if e.kind == "dispatch" and e.client == 0]
+    assert len(dispatches0) >= 1
+    _pin_replay(res)
+
+
+def test_bounded_queue_applies_backpressure():
+    # queue_cap=1 + a deliberately slow landing loop + 4 clients in one
+    # process: their HELLOs (and later their post-jit uploads) arrive
+    # within milliseconds of each other, so while the loop dawdles 0.2s
+    # over the first item the rest MUST find the queue full — readers
+    # block (counted as backpressure) and the run still completes:
+    # backpressure, not loss. Heartbeats never enqueue, so they can't
+    # fill the queue for us.
+    meta = _meta(n_clients=4, buffer_size=2, max_staleness=2,
+                 queue_cap=1)
+    res = harness.wire_run(meta, 2, deadline_s=120.0, land_delay_s=0.2)
+    assert not res.stats.deadline_hit, (res.stats, res.worker_stderr)
+    assert res.stats.flushes == 2
+    assert res.stats.backpressure_blocks >= 1
+    assert res.stats.queue_high_water <= meta["queue_cap"]
+    _pin_replay(res)
+
+
+def test_heartbeat_timeout_marks_crashed_client_dead():
+    meta = _meta(n_clients=2, buffer_size=1, max_staleness=0,
+                 heartbeat_s=0.1, heartbeat_timeout_s=0.6)
+    res = harness.wire_run(
+        meta, 8,
+        worker_groups=[
+            {"client_ids": [0], "extra": ["--train-delay", "0.3"]},
+            {"client_ids": [1], "extra": ["--crash-after", "1"]},
+        ],
+        deadline_s=120.0,
+    )
+    assert not res.stats.deadline_hit, (res.stats, res.worker_stderr)
+    assert res.stats.flushes == 8
+    transitions = [(c, s) for _, c, s in res.liveness_log]
+    assert (1, "alive") in transitions, res.liveness_log
+    assert (1, "dead") in transitions, res.liveness_log
+    # the survivor stayed alive throughout
+    assert (0, "dead") not in transitions
+    _pin_replay(res)

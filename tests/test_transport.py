@@ -1,0 +1,355 @@
+"""Multi-process federation over a real wire, pinned deterministic against
+the in-process engine (DESIGN.md §14).
+
+The tentpole contract: a wire run — real worker processes training over
+TCP, landings in wall-clock arrival order — records its arrival schedule,
+and replaying that schedule through the SimClock `ArrivalAsyncEngine`
+reproduces the global parameters **bit for bit** (dense codec; 1e-5 for
+quant8, which in practice is also bitwise because the int8 delta
+round-trip is deterministic NumPy). The acceptance test drives C=4 worker
+processes over 5 flushes including one forced staleness dropout, then
+replays.
+
+Below it, the layers the contract rests on get their own pins:
+  - framing: length-prefixed frames survive arbitrary split/coalesced
+    reads; corrupt lengths/types fail loudly;
+  - codec: dense is bit-lossless, quant8's delta error is bounded by half
+    a quantization step per block, dispatches are always dense;
+  - arrival engine: staged clients can't be redispatched over, double
+    updates are refused, stale landings drop + redispatch *from the true
+    global* — global_packed_row() must survive the global_row client
+    landing its next trained update mid-window (the buffered engine never
+    faces this: its rows only mutate at a flush);
+  - FLServer: async checkpoints read the engine's global row, not a
+    client's half-trained buffer row, even after drops/redispatches.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ObjectStore
+from repro.core import rounds as R
+from repro.core.async_engine import ArrivalAsyncEngine, build_row_update
+from repro.core.explorer import ClientLoadModel, LoadModelConfig
+from repro.core.server import FLServer
+from repro.core.simclock import SimClock, WallClock
+from repro.core.transport import codec as tc
+from repro.core.transport import harness, wire
+from repro.core.transport import replay as rp
+from repro.optim import adamw, sgd
+
+TINY = harness.TINY_OVERRIDES
+
+
+def _meta(**kw):
+    base = dict(overrides=TINY, n_clients=3, buffer_size=2, max_staleness=1,
+                seq=8, batch=2)
+    base.update(kw)
+    return harness.make_meta(**base)
+
+
+# ------------------------------- framing -------------------------------------
+
+def test_frame_roundtrip_survives_arbitrary_chunking():
+    rng = np.random.default_rng(7)
+    frames = [
+        wire.pack_hello(3),
+        wire.pack_dispatch(9, b"\x00" + rng.bytes(37)),
+        wire.pack_update(1, 4, 9, 0.5, rng.bytes(113)),
+        wire.pack_heartbeat(2),
+        wire.pack_bye(),
+    ]
+    stream = b"".join(frames)
+    # feed in adversarial chunk sizes: 1-byte drip, then random splits
+    for sizes in ([1] * len(stream), rng.integers(1, 11, len(stream)).tolist()):
+        parser = wire.FrameParser()
+        got = []
+        pos = 0
+        for n in sizes:
+            got.extend(parser.feed(stream[pos:pos + int(n)]))
+            pos += int(n)
+            if pos >= len(stream):
+                break
+        assert parser.pending == 0
+        assert [t for t, _ in got] == [wire.HELLO, wire.DISPATCH, wire.UPDATE,
+                                       wire.HEARTBEAT, wire.BYE]
+    assert wire.parse_hello(got[0][1]) == 3
+    v, row = wire.parse_dispatch(got[1][1])
+    assert v == 9 and len(row) == 38
+    c, seq, ver, loss, buf = wire.parse_update(got[2][1])
+    assert (c, seq, ver, loss) == (1, 4, 9, 0.5) and len(buf) == 113
+    assert wire.parse_heartbeat(got[3][1]) == 2
+
+
+def test_frame_parser_rejects_corruption():
+    with pytest.raises(ValueError, match="frame length"):
+        wire.FrameParser().feed(b"\x00\x00\x00\x00garbage")
+    bad_type = b"\x00\x00\x00\x01\x7f"
+    with pytest.raises(ValueError, match="frame type"):
+        wire.FrameParser().feed(bad_type)
+    with pytest.raises(ValueError, match="protocol version"):
+        wire.parse_hello(wire.FrameParser().feed(
+            wire.encode_frame(wire.HELLO, b"\x00\x00\x00\x01\x00\x63"))[0][1])
+
+
+# -------------------------------- codec --------------------------------------
+
+def test_dense_codec_bit_lossless():
+    rng = np.random.default_rng(0)
+    for dtype in (np.float32, np.float16, np.float64):
+        row = rng.normal(size=257).astype(dtype)
+        out = tc.decode_row(tc.encode_dense(row))
+        assert out.dtype == dtype
+        np.testing.assert_array_equal(out, row)
+
+
+def test_quant8_delta_error_bounded_by_half_step():
+    rng = np.random.default_rng(1)
+    base = rng.normal(size=1000).astype(np.float32)
+    delta = (rng.normal(size=1000) * 1e-3).astype(np.float32)
+    for block in (32, 256, 1024):
+        buf = tc.encode_update(base + delta, base, "quant8", block)
+        landed = tc.decode_update(buf, base)
+        err = np.abs(landed - (base + delta))
+        nb = -(-1000 // block)
+        padded = np.zeros(nb * block, np.float32)
+        padded[:1000] = delta
+        step = np.maximum(np.abs(padded.reshape(nb, block)).max(axis=1), 1e-12) / 127.0
+        # half a quantization step, plus one f32-addition ulp of the base
+        # (landed = fl(base + dq) vs fl(base + delta) round differently)
+        bound = np.repeat(step / 2 * 1.001, block)[:1000] + 2.4e-7 * np.abs(base) + 1e-9
+        assert (err <= bound).all()
+        # the round-trip is deterministic NumPy: same bytes every time
+        assert tc.encode_update(base + delta, base, "quant8", block) == buf
+
+
+def test_dispatch_rows_always_dense():
+    row = np.linspace(-1, 1, 64, dtype=np.float32)
+    for codec in ("dense", "quant8"):
+        buf = tc.encode_row(row, codec)
+        assert buf[0] == tc.DENSE
+        np.testing.assert_array_equal(tc.decode_row(buf), row)
+    with pytest.raises(ValueError, match="unknown wire codec"):
+        tc.encode_row(row, "zstd")
+
+
+def test_payload_bytes_analytic_matches_encoding():
+    row = np.ones(3000, np.float32)
+    assert len(tc.encode_dense(row)) == tc.payload_bytes(3000, "dense")
+    buf = tc.encode_update(row, np.zeros(3000, np.float32), "quant8", 256)
+    assert len(buf) == tc.payload_bytes(3000, "quant8", 256)
+    # the wire's uplink cut: quant8 ~4x smaller at the default block
+    assert tc.payload_bytes(1 << 20, "quant8") < tc.payload_bytes(1 << 20, "dense") / 3.8
+
+
+# --------------------------- arrival engine ----------------------------------
+
+def test_arrival_engine_validates_config():
+    meta = _meta()
+    fed = rp.build_fed(meta)
+    cfg = rp.build_cfg(meta)
+    with pytest.raises(ValueError, match="stateless"):
+        ArrivalAsyncEngine(cfg, fed, adamw(1e-3))
+    with pytest.raises(ValueError, match="mode"):
+        ArrivalAsyncEngine(cfg, dataclasses.replace(fed, mode="sync"), sgd(0.05, momentum=0.0))
+    with pytest.raises(ValueError, match="buffer_size"):
+        ArrivalAsyncEngine(cfg, dataclasses.replace(fed, buffer_size=99), sgd(0.05, momentum=0.0))
+    with pytest.raises(ValueError, match="stream"):
+        ArrivalAsyncEngine(cfg, dataclasses.replace(fed, stream=True, aggregation="dense"),
+                           sgd(0.05, momentum=0.0))
+
+
+def test_arrival_engine_protocol_guards():
+    eng = rp.make_engine(_meta())
+    base = eng.dispatch_row(0)
+    eng.land(0, base + 1.0)
+    with pytest.raises(RuntimeError, match="staged"):
+        eng.dispatch(0)  # would overwrite the landed update
+    with pytest.raises(RuntimeError, match="already staged"):
+        eng.land(0, base + 2.0)  # one update per dispatch
+
+
+def test_global_row_survives_midwindow_landing_and_drop_redispatch():
+    """THE regression for the mid-window staleness hazard: after a flush,
+    global_row points at a client's row — but in the arrival engine that
+    client's NEXT trained update can land mid-window. The global must not
+    change, and a dropped client's redispatch must copy the true global,
+    not the neighbouring client's half-trained row."""
+    eng = rp.make_engine(_meta())  # C=3, buffer 2, max_staleness 1
+    base = eng.dispatch_row(0)
+    eng.land(0, base + 1.0)
+    rec = eng.land(1, base + 2.0)
+    assert rec.flush is not None and rec.flush.participants == [0, 1]
+    g1 = np.asarray(eng.global_packed_row(), np.float32).copy()
+    assert eng.global_row == 0
+    # client 0's next trained update lands mid-window onto row global_row
+    eng.land(0, base + 50.0)
+    np.testing.assert_array_equal(np.asarray(eng.global_packed_row()), g1)
+    # second flush: versions move to 2 while client 2 still holds v0
+    rec2 = eng.land(1, base + 7.0)
+    assert rec2.flush is not None and rec2.flush.participants == [0, 1]
+    assert eng.staged() == ()  # the mid-window landing flushed, not lost
+    g2 = np.asarray(eng.global_packed_row(), np.float32).copy()
+    assert not np.array_equal(g2, g1)  # flush 2 really moved the global
+    res = eng.land(2, base + 9.0)  # staleness 2 > max_staleness 1
+    assert res.dropped and res.staleness == 2 and eng.dropped_total == 1
+    # the redispatch wrote the true global into row 2 — bit for bit
+    np.testing.assert_array_equal(eng.dispatch_row(2), g2)
+
+
+def test_flush_discount_matches_buffered_formula():
+    """The arrival flush must use the exact discount arithmetic of
+    BufferedAsyncEngine._do_flush: w = mask/|staged| then (1+s)^-alpha,
+    renormalized by the reducer. Landing rows crafted so the aggregate is
+    checkable against the NumPy oracle."""
+    meta = _meta(n_clients=4, buffer_size=2, max_staleness=0, staleness_alpha=0.5)
+    eng = rp.make_engine(meta)
+    base = eng.dispatch_row(0).astype(np.float64)
+    eng.land(0, np.float32(base + 1.0))
+    rec = eng.land(1, np.float32(base + 3.0))
+    w = np.array([1.0, 1.0]) / 2.0  # both staleness 0: discount = 1
+    want = base + (w[0] * 1.0 + w[1] * 3.0) / w.sum()
+    got = np.asarray(eng.global_packed_row(), np.float64)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert rec.flush.weights[0] == pytest.approx(0.5)
+    assert rec.flush.weights[1] == pytest.approx(0.5)
+
+
+def test_wallclock_sync_and_peek():
+    c = WallClock()
+    t1 = c.sync()
+    assert c.peek() >= t1 >= 0.0
+    before = c.now()
+    assert c.peek() >= before and c.now() == before  # peek never advances
+    assert c.sync() >= before
+
+
+# ----------------------------- schedules -------------------------------------
+
+def test_schedule_json_roundtrip(tmp_path):
+    sched = rp.ArrivalSchedule(
+        meta=_meta(),
+        events=[
+            rp.WireEvent(kind="dispatch", t=0.0, client=0, version=0),
+            rp.WireEvent(kind="land", t=0.5, client=0, version=0, seq=0, flush=0),
+            rp.WireEvent(kind="land", t=0.9, client=1, version=0, seq=0, dropped=True),
+        ],
+    )
+    sched.save(tmp_path / "s.json")
+    back = rp.ArrivalSchedule.load(tmp_path / "s.json")
+    assert back.meta == sched.meta and back.events == sched.events
+    assert back.n_flushes == 1 and back.n_dropped == 1
+
+
+# ---------------------- FLServer checkpoint regression ------------------------
+
+def test_async_checkpoints_read_engine_global_after_drops(tmp_path):
+    """Satellite: async-mode checkpoints must store the engine's global
+    row — global_params() reads global_packed_row(), never a fixed buffer
+    row — including after staleness drops and redispatches."""
+    cfg = rp.build_cfg(_meta())
+    fed = R.FedConfig(n_clients=4, local_steps=1, aggregation="dense",
+                      client_axis="data", data_axis=None, mode="async",
+                      buffer_size=2, max_staleness=1, staleness_alpha=0.5)
+    lm = ClientLoadModel(4, seed=0, config=LoadModelConfig(
+        straggler_frac=0.0, base_spread=0.0, jitter=0.0, spike_prob=0.0))
+    # 0 and 3 run ~3x slower (33s vs 11s/round): they complete 2+ versions
+    # stale within the 6-round horizon, so the staleness gate really fires
+    lm.baseline = lm.loads = np.array([0.7, 0.1, 0.1, 0.7])
+    store = ObjectStore(tmp_path)
+    srv = FLServer(cfg, fed, sgd(0.05), store=store, checkpoint_every=1,
+                   task_id="wire-ckpt", load_model=lm)
+    rng = np.random.default_rng(0)
+    batches = iter(
+        {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 1, 2, 8)), jnp.int32)}
+        for _ in range(6)
+    )
+    srv.fit(batches, 6, log=None)
+    assert srv.engine.dropped_total >= 1  # the scenario really exercised drops
+    restored = store.restore_into("wire-ckpt", srv.global_params())
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(srv.global_params())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # negative control: the stored global is NOT just buffer row 0 — row 0
+    # belongs to a (slow, often stale) client
+    packed_row0 = srv.state["params"][0]
+    assert not np.array_equal(
+        np.asarray(srv.engine.global_packed_row()), np.asarray(packed_row0)
+    ) or srv.engine.global_row == 0
+
+
+# ------------------------- THE acceptance test --------------------------------
+
+@pytest.mark.parametrize("wire_codec", ["dense", "quant8"])
+def test_wire_run_replays_deterministically(wire_codec, tmp_path):
+    """C=4 real worker processes over TCP, 5 flushes, one forced staleness
+    dropout (a straggler trained against a version the fast clients have
+    long flushed past). The recorded schedule, replayed through the
+    SimClock engine, must reproduce the wire run's global parameters bit
+    for bit (dense) / to 1e-5 (quant8)."""
+    meta = _meta(n_clients=4, buffer_size=2, max_staleness=1,
+                 wire_codec=wire_codec, quant_block=512)
+    res = harness.wire_run(
+        meta, 5,
+        worker_groups=[
+            {"client_ids": [0, 1, 2], "extra": ["--max-updates", "3"]},
+            {"client_ids": [3], "extra": ["--train-delay", "4.0", "--max-updates", "2"]},
+        ],
+        deadline_s=150.0,
+    )
+    assert not res.stats.deadline_hit, (res.stats, res.worker_stderr)
+    assert res.stats.flushes == 5 and len(res.history) == 5
+    assert res.dropped_total >= 1, "the straggler's stale update must drop"
+    assert res.schedule.n_dropped == res.dropped_total
+    assert res.stats.protocol_errors == 0
+
+    # the schedule survives the CI-artifact round trip
+    path = tmp_path / f"{wire_codec}.schedule.json"
+    res.schedule.save(path)
+    sched = rp.ArrivalSchedule.load(path)
+
+    eng = rp.replay(sched)
+    replayed = np.asarray(eng.global_packed_row(), np.float32)
+    assert len(eng.history) == 5
+    assert eng.dropped_total == res.dropped_total
+    if wire_codec == "dense":
+        np.testing.assert_array_equal(replayed, res.global_row)
+    else:
+        np.testing.assert_allclose(replayed, res.global_row, atol=1e-5, rtol=0)
+    # flush-by-flush agreement, not just the endpoint
+    for wrec, rrec in zip(res.history, eng.history):
+        assert wrec.participants == rrec.participants
+        assert wrec.staleness == rrec.staleness
+        np.testing.assert_allclose(wrec.loss, rrec.loss, rtol=1e-5)
+
+    if wire_codec == "dense":
+        # the pin has teeth: corrupting the record must be caught
+        bad = rp.ArrivalSchedule.from_json(sched.to_json())
+        lands = [i for i, e in enumerate(bad.events) if e.kind == "land"]
+        bad.events[lands[-1]] = dataclasses.replace(
+            bad.events[lands[-1]], dropped=not bad.events[lands[-1]].dropped
+        )
+        with pytest.raises(rp.ReplayMismatch):
+            rp.replay(bad)
+
+
+def test_worker_and_replay_share_one_row_update_program():
+    """Determinism by construction: the worker's jit and the replay's jit
+    are the same build_row_update program, so one dispatch row + one batch
+    give bitwise-identical trained rows across separate jit instances."""
+    meta = _meta(n_clients=2)
+    cfg, fed = rp.build_cfg(meta), rp.build_fed(meta)
+    opt = rp.build_optimizer(meta)
+    upd_a = build_row_update(cfg, fed, opt)
+    upd_b = build_row_update(cfg, fed, opt)
+    eng = rp.make_engine(meta)
+    row = jnp.asarray(eng.dispatch_row(0))
+    batch = rp.synth_client_batch(cfg, meta, 0, 0)
+    ra, la = upd_a(row, batch)
+    rb, lb = upd_b(row, batch)
+    np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+    assert float(la) == float(lb)
+    assert not np.array_equal(np.asarray(ra), np.asarray(row))  # it really trained
