@@ -1,0 +1,155 @@
+"""Communication-frontier Pareto sweep (DESIGN.md §15).
+
+One curve per uplink budget: dense / quant8 / quant4 / topk_ef /
+topk_ef+quant4 / secure-int4 federated runs on the same non-IID token
+stream, reporting final loss against analytic uplink payload bytes per
+element. The frontier claim the sweep records: topk_ef at k/N = 0.1
+composed with 4-bit values cuts the uplink >= 16x under dense while
+staying within 10% of the dense round-20 loss.
+
+``smoke_rows`` is the CI guard (benchmarks/run.py --smoke): dense vs
+topk_ef only, FAILING if the sparsified run regresses past 10% or the
+payload drops under 4x vs quant8. Running as a script appends the full
+sweep to ``BENCH_kernel_bench.json`` via kernel_bench.emit_trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import rounds as R
+from repro.core.rounds import FedConfig
+from repro.core.transport import codec
+from repro.data.pipeline import fed_batches
+from repro.optim import adamw
+
+CFG = get_arch("qwen3-1.7b").reduced()
+ROUNDS = 20
+CLIENTS = 4
+BATCH = 4
+SEQ = 32
+BLOCK = 1024  # FedConfig.quant_block default — scales amortize to 4/BLOCK
+
+VARIANTS = {
+    "dense": {"aggregation": "dense"},
+    "quant8": {"aggregation": "quant8"},
+    "quant4": {"aggregation": "quant4", "quant4_mode": "stochastic"},
+    "topk_ef": {"aggregation": "topk_ef", "topk_frac": 0.1},
+    "topk_ef_quant4": {
+        "aggregation": "topk_ef", "topk_frac": 0.1, "topk_quant": "quant4",
+    },
+    "secure_int4": {"aggregation": "secure", "secure_domain": "int4"},
+}
+
+
+def payload_per_elt(name: str) -> float:
+    """Analytic uplink bytes per packed element (codec.py framing, headers
+    amortized away): what each variant's UPDATE would weigh on the wire."""
+    f = 0.1
+    if name == "dense":
+        return 4.0
+    if name == "quant8":
+        return 1.0 + 4.0 / BLOCK
+    if name == "quant4":
+        return 0.5 + 4.0 / BLOCK  # two values per byte + f32 scales
+    if name == "topk_ef":
+        return 1.0 / 8 + f * (1.0 + 4.0 / BLOCK)  # bitmap + int8 values
+    if name == "topk_ef_quant4":
+        return 1.0 / 8 + f * (0.5 + 4.0 / BLOCK)  # bitmap + nibble values
+    if name == "secure_int4":
+        # the pairwise masks occupy the FULL uint32 ring: exact cancellation
+        # costs the wire its dense width (the privacy/bandwidth trade)
+        return 4.0
+    raise ValueError(name)
+
+
+def run(name: str, rounds: int = ROUNDS) -> tuple[float, float]:
+    fed = FedConfig(
+        n_clients=CLIENTS,
+        local_steps=2,
+        topn=2,
+        client_axis="data",
+        data_axis=None,
+        quant_block=BLOCK,
+        **VARIANTS[name],
+    )
+    opt = adamw(3e-3)
+    mesh = jax.make_mesh((1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with jax.set_mesh(mesh):
+        state = R.make_state(CFG, fed, opt, jax.random.key(0))
+        fr = jax.jit(R.build_fed_round(CFG, fed, opt, mesh))
+        t0 = time.time()
+        loss = float("nan")
+        src = fed_batches(CFG, fed, batch=BATCH, seq=SEQ, seed=0)
+        for _, b in zip(range(rounds), src):
+            state, m = fr(state, jax.tree.map(jnp.asarray, b), R.uniform_weights(CLIENTS))
+            loss = float(m["loss"])
+        return loss, time.time() - t0
+
+
+def _guard(dense_loss: float, sparse_loss: float) -> None:
+    if not sparse_loss <= dense_loss * 1.10:
+        raise AssertionError(
+            f"topk_ef(k/N=0.1) final loss {sparse_loss:.4f} regressed >10% past "
+            f"dense {dense_loss:.4f}"
+        )
+    # payload guard pinned to the REAL codec framing, not the analytic model
+    n = 10**6
+    topk_b = codec.payload_bytes(n, "topk", BLOCK)
+    quant8_b = codec.payload_bytes(n, "quant8", BLOCK)
+    if not quant8_b > 4 * topk_b:
+        raise AssertionError(
+            f"topk payload {topk_b} not >4x under quant8 {quant8_b} at n={n}"
+        )
+
+
+def smoke_rows():
+    """CI gate: the sparsified frontier must stay on the dense curve."""
+    dense_loss, dense_dt = run("dense")
+    topk_loss, topk_dt = run("topk_ef")
+    _guard(dense_loss, topk_loss)
+    ratio = payload_per_elt("quant8") / payload_per_elt("topk_ef")
+    return [
+        ("pareto/dense_round20_loss", dense_loss, f"wall_s={dense_dt:.1f}"),
+        ("pareto/topk_ef_round20_loss", topk_loss,
+         f"loss={topk_loss:.4f};dense={dense_loss:.4f};payload_vs_quant8={ratio:.2f}x;guard=pass"),
+    ]
+
+
+def rows(rounds: int = ROUNDS):
+    out = []
+    losses = {}
+    for name in VARIANTS:
+        loss, dt = run(name, rounds)
+        losses[name] = loss
+        bpe = payload_per_elt(name)
+        out.append((
+            f"pareto/{name}_round{rounds}_loss",
+            loss,
+            f"loss={loss:.4f};payload_bytes_per_elt={bpe:.4f};"
+            f"uplink_vs_dense={4.0 / bpe:.1f}x;wall_s={dt:.1f}",
+        ))
+    _guard(losses["dense"], losses["topk_ef"])
+    # the acceptance pin: >=16x uplink cut at <=10% loss regression
+    comp = payload_per_elt("topk_ef_quant4")
+    assert 4.0 / comp >= 16.0, comp
+    out.append((
+        "pareto/topk_ef_quant4_uplink_reduction_x",
+        4.0 / comp,
+        f"loss={losses['topk_ef_quant4']:.4f};dense_loss={losses['dense']:.4f};"
+        f"regression={(losses['topk_ef_quant4'] / losses['dense'] - 1) * 100:.2f}pct",
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    from benchmarks import kernel_bench
+
+    all_rows = rows()
+    for name, val, extra in all_rows:
+        print(f"{name},{val:.4f},{extra}")
+    kernel_bench.emit_trajectory(all_rows)
+    print(f"# trajectory appended to {kernel_bench.BENCH_JSON}")

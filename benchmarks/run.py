@@ -20,15 +20,20 @@ Prints ``name,value,derived`` CSV. Modules:
                      flush (DESIGN.md §13); writes BENCH_scaling_sweep.csv
   wire_bench       — socket-transport payload bytes per codec + measured
                      localhost DISPATCH/UPDATE round-trip (DESIGN.md §14)
+  pareto_bench     — communication-frontier Pareto sweep (DESIGN.md §15):
+                     loss vs uplink bytes for dense/quant8/quant4/topk_ef/
+                     topk_ef+quant4/secure-int4
   roofline_table   — per (arch x shape x mesh) roofline from the dry-run
 
 ``--smoke`` runs the cheap analytic tables, a 1-iteration flat-round sweep,
 the eq6 tiling guard (packed eq6 must beat the tree path at 256k — the
 module FAILS if the packed reducer regresses), the async-vs-sync
 equivalence guard (full-buffer async must reproduce the sync round
-bit-for-bit), and the hier scaling guard (the two-level reduce must not
+bit-for-bit), the hier scaling guard (the two-level reduce must not
 lose to flat at C=64, with the C ∈ {8, 64} curves written to
-BENCH_scaling_sweep.csv) — the CI gate (scripts/check.sh) that proves the
+BENCH_scaling_sweep.csv), and the frontier guard (topk_ef at k/N=0.1 must
+stay within 10% of the dense round-20 loss at a >4x payload cut vs
+quant8) — the CI gate (scripts/check.sh) that proves the
 harness imports, both round engines run, and the re-tiled reducers still
 win, in a few minutes of compute.
 """
@@ -45,7 +50,7 @@ def main() -> None:
                     help="fast CI subset: analytic tables + tiny participation sweep")
     args = ap.parse_args()
 
-    from benchmarks import async_bench, bandwidth_model, convergence, kernel_bench, roofline_table, scale_bench, upload_time, wire_bench
+    from benchmarks import async_bench, bandwidth_model, convergence, kernel_bench, pareto_bench, roofline_table, scale_bench, upload_time, wire_bench
 
     if args.smoke:
         modules = [
@@ -56,6 +61,7 @@ def main() -> None:
             ("async_equiv", async_bench.equivalence_rows),
             ("client_scaling", scale_bench.smoke_rows),
             ("wire_bench", wire_bench.rows),
+            ("pareto_smoke", pareto_bench.smoke_rows),
         ]
     else:
         modules = [
@@ -71,6 +77,7 @@ def main() -> None:
             ("async_sweep", async_bench.async_sweep_rows),
             ("client_scaling", scale_bench.full_rows),
             ("wire_bench", wire_bench.rows),
+            ("pareto_bench", pareto_bench.rows),
             ("roofline_table", roofline_table.rows),
         ]
     failed = 0

@@ -38,10 +38,11 @@ def payload_rows():
     out = []
     for name, n in WIDTHS.items():
         dense = codec.payload_bytes(n, "dense")
-        q8 = codec.payload_bytes(n, "quant8")
         out.append((f"wire/payload_{name}_dense_MB", dense / 1e6, f"n={n}"))
-        out.append((f"wire/payload_{name}_quant8_MB", q8 / 1e6,
-                    f"ratio={dense / q8:.2f}x"))
+        for cname in ("quant8", "quant4", "topk"):
+            b = codec.payload_bytes(n, cname)
+            out.append((f"wire/payload_{name}_{cname}_MB", b / 1e6,
+                        f"ratio={dense / b:.2f}x"))
     return out
 
 

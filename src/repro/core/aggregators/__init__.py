@@ -2,12 +2,13 @@
 
 Importing this package registers every built-in mode:
 dense | eq6 | quant8 | static_topn | fedavgm | fedadam | trimmed_mean
-plus the `fedsgd` topology marker and the two-level `hier` composer
-(DESIGN.md §13). `get(name)` resolves a FedConfig aggregation name to its
-strategy class; `names()` lists what is available.
+plus the `fedsgd` topology marker, the two-level `hier` composer
+(DESIGN.md §13), and the communication frontier (DESIGN.md §15):
+topk_ef | quant4 | secure. `get(name)` resolves a FedConfig aggregation
+name to its strategy class; `names()` lists what is available.
 """
 from repro.core.aggregators.base import AggContext, Aggregator, get, names, register
-from repro.core.aggregators import basic, eq6, hier, quant, robust, server_opt  # noqa: F401,E402 (registration)
+from repro.core.aggregators import basic, eq6, hier, lowbit, quant, robust, secure, server_opt, sparse  # noqa: F401,E402 (registration)
 from repro.core.aggregators.basic import static_layer_schedule
 
 __all__ = [

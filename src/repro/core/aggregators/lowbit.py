@@ -1,0 +1,81 @@
+"""quant4: 4-bit stochastic-rounded delta upload over the packed buffer.
+
+quant8's sub-byte sibling: global = base + wmean_c(dequant(quant4(new_c -
+base))) with one f32 scale per `quant_block` elements and values in the
+[-7, 7] nibble range (two per byte on the wire — codec.py's QUANT4 framing;
+~8x smaller uplink than dense, ~2x under quant8). ``quant4_mode`` picks the
+rounding:
+
+  stochastic — clip(floor(x/s + u), -7, 7), u from the fmix32 counter PRNG
+               keyed per round. The key derives from a TRACED round counter
+               in ``state["agg"]``, so rounds never retrace and the same
+               (seed, round, client, element) always rounds the same way —
+               bit-for-bit reproducible across ref/Pallas/NumPy.
+  nearest    — clip(rint(x/s), -7, 7), deterministic half-step error bound.
+  skip       — statically routes through dense's exact reduction (the
+               bitwise dense-equivalence pin in the frontier tests).
+
+Meshless path only: at 4 bits the transport win is already modeled by the
+fused encode->decode->reduce (`kernels/quant4.quant4_reduce` under
+agg_impl="pallas", `packing.quant4_mean_ref` otherwise); the int8-collective
+machinery stays quant8's.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.aggregators.base import Aggregator, register
+
+
+@register
+class Quant4(Aggregator):
+    name = "quant4"
+
+    def __init__(self, ctx):
+        super().__init__(ctx)
+        if ctx.fed.quant4_mode not in ("stochastic", "nearest", "skip"):
+            raise ValueError(
+                f"quant4_mode={ctx.fed.quant4_mode!r} not in ('stochastic', 'nearest', 'skip')"
+            )
+        shards = 1
+        if ctx.mesh is not None:
+            shards = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)).get(
+                ctx.fed.client_axis, 1
+            )
+        if shards > 1:
+            raise ValueError(
+                f"quant4 has no sharded int4 collective; '{ctx.fed.client_axis}' "
+                f"mesh axis must be 1 (got {shards}) — use quant8 for the "
+                f"gathered transport"
+            )
+
+    def init_state(self, packed0):
+        # base: dispatched (N,) row (fresh slice, donation-safe — see
+        # quant8); round: the traced counter the per-round PRNG key mixes
+        return {"base": packed0[0], "round": jnp.zeros((), jnp.int32)}
+
+    def aggregate(self, packed, weights, agg_state, mask=None):
+        fed = self.ctx.fed
+        base = agg_state["base"]
+        r = agg_state["round"]
+        if fed.quant4_mode == "skip":  # static route: dense bit-for-bit
+            g = self._wmean_full(packed, weights, mask)
+            out = self._broadcast(g, packed)
+            return out, {"base": out[0], "round": r + 1}
+        w_eff = self._masked_weights(weights, mask)
+        key = packing.round_key(fed.quant4_seed, r)
+        delta = packed.astype(jnp.float32) - base.astype(jnp.float32)[None, :]
+        if fed.agg_impl == "pallas":
+            from repro.kernels import quant4 as _kq
+
+            gd = _kq.quant4_reduce(
+                delta, w_eff, key, mode=fed.quant4_mode, block=fed.quant_block
+            )
+        else:
+            gd = packing.quant4_mean_ref(
+                delta, w_eff, fed.quant_block, key=key, mode=fed.quant4_mode
+            )
+        g = (base.astype(jnp.float32) + gd).astype(packed.dtype)
+        out = jnp.broadcast_to(g[None, :], packed.shape)
+        return out, {"base": out[0], "round": r + 1}

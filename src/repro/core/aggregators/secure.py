@@ -1,0 +1,104 @@
+"""secure: pairwise additive masking in the packed integer domain.
+
+`core.secure_agg`'s Bonawitz construction ported onto the (C, N_total)
+buffer — and moved from float masks to the uint32 ring, so cancellation is
+EXACT: every active pair (a, b) derives a shared fmix32 mask stream; a adds
++m, b adds -m (mod 2^32); the server's modular sum of active rows equals
+the unmasked sum BIT-FOR-BIT. That is only possible because the masked
+quantities are integers: each client's weighted delta w_c * (new_c - base)
+is quantized to a SHARED per-block scale (amax over participants), values
+in [-Q, Q] with Q = 127 ("int8" domain) or 7 ("int4" — composes with the
+quant4 wire budget). |sum_c q_c| <= C * Q << 2^31, so the uint32 total
+reinterprets as the true signed sum.
+
+Participation-mask-aware: a deselected client is excluded from the scale,
+contributes no row to the sum, and activates NO pair — so no orphan mask
+survives (the dropout-recovery secret-sharing layer stays out of scope, as
+in core.secure_agg).
+
+``secure_mask=False`` skips the masking but keeps the identical quantized
+sum — the masked == unmasked bitwise pin in the frontier tests. Pairwise
+masking is O(C^2 N); build-time bound C <= 32 keeps the traced program
+sane (the paper's federations are tens of parties).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.aggregators.base import Aggregator, register
+
+MAX_SECURE_CLIENTS = 32
+
+
+@register
+class Secure(Aggregator):
+    name = "secure"
+
+    def __init__(self, ctx):
+        super().__init__(ctx)
+        if ctx.fed.secure_domain not in ("int8", "int4"):
+            raise ValueError(
+                f"secure_domain={ctx.fed.secure_domain!r} not in ('int8', 'int4')"
+            )
+        if ctx.fed.n_clients > MAX_SECURE_CLIENTS:
+            raise ValueError(
+                f"secure pairwise masking is O(C^2); n_clients={ctx.fed.n_clients} "
+                f"exceeds the build-time bound {MAX_SECURE_CLIENTS}"
+            )
+        shards = 1
+        if ctx.mesh is not None:
+            shards = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)).get(
+                ctx.fed.client_axis, 1
+            )
+        if shards > 1:
+            raise ValueError(
+                f"secure masking needs every client row on one host; "
+                f"'{ctx.fed.client_axis}' mesh axis must be 1 (got {shards})"
+            )
+
+    def init_state(self, packed0):
+        return {"base": packed0[0], "round": jnp.zeros((), jnp.int32)}
+
+    def aggregate(self, packed, weights, agg_state, mask=None):
+        fed = self.ctx.fed
+        C = packed.shape[0]
+        base = agg_state["base"]
+        r = agg_state["round"]
+        Q = 127.0 if fed.secure_domain == "int8" else 7.0
+        block = fed.quant_block
+        pm = jnp.ones((C,), jnp.float32) if mask is None else mask.astype(jnp.float32)
+        w_eff = self._masked_weights(weights, mask)
+
+        # weighted deltas: their plain sum IS the weighted mean (the
+        # scheduler normalizes weights over participants)
+        delta = packed.astype(jnp.float32) - base.astype(jnp.float32)[None, :]
+        v = w_eff[:, None] * delta
+        N = v.shape[1]
+        pad = (-N) % block
+        vb = jnp.pad(v, ((0, 0), (0, pad))).reshape(C, -1, block)
+        # SHARED per-block scale over participants only: a junk row from a
+        # deselected client must not blow up everyone's quantization step
+        amax = jnp.max(jnp.where(pm[:, None, None] > 0, jnp.abs(vb), 0.0), axis=(0, 2))
+        scale = jnp.maximum(amax, 1e-12) / Q
+        q = jnp.clip(jnp.round(vb / scale[None, :, None]), -Q, Q).astype(jnp.int32)
+        q = q.reshape(C, -1)
+
+        rk = packing.round_key(fed.secure_session, r)
+        rows = jax.lax.bitcast_convert_type(q, jnp.uint32)
+        if fed.secure_mask:
+            rows = rows + packing.secure_client_masks(rk, pm, q.shape[1])
+        if fed.agg_impl == "pallas":
+            from repro.kernels import mask as _km
+
+            total = _km.masked_u32_sum(rows, pm)
+        else:
+            total = jnp.sum(
+                jnp.where(pm[:, None] > 0, rows, jnp.uint32(0)), axis=0, dtype=jnp.uint32
+            )
+        s = jax.lax.bitcast_convert_type(total, jnp.int32)  # masks cancelled exactly
+        gd = (s.astype(jnp.float32).reshape(-1, block) * scale[:, None]).reshape(-1)[:N]
+        g = (base.astype(jnp.float32) + gd).astype(packed.dtype)
+        out = jnp.broadcast_to(g[None, :], packed.shape)
+        return out, {"base": out[0], "round": r + 1}

@@ -1,0 +1,97 @@
+"""topk_ef: per-client top-k sparsified delta upload with error feedback.
+
+Each round every client uploads only the k = round(topk_frac * N) largest-
+magnitude entries of its *compensated* delta (this round's delta plus the
+residual the previous rounds did not upload); what stays home accumulates
+in a per-client error-feedback row carried in ``state["agg"]["ef"]``. The
+EF telescoping invariant — uploaded + residual == compensated delta,
+EXACTLY — holds bitwise because selection is a disjoint-support
+`jnp.where` split, never arithmetic (adding 0.0 would already flip -0.0).
+
+Masked/zero-weight rows must not leak residual state: a deselected
+client's ef row passes through bit-for-bit (select, not blend) and its
+upload row never reaches the mean (weight 0 there).
+
+The aggregate runs through the SAME ``_wmean_full`` path as `dense` on the
+per-client upload rows ``where(sel, compensated, base)`` — positions nobody
+selected average to the dispatched base, and at k == N (topk_frac >= 1)
+the whole mode collapses to `dense` bit-for-bit (the equivalence pin in
+tests/test_compression_frontier.py).
+
+``topk_quant="quant4"`` composes 4-bit quantization over the selected
+values (the wire payload of codec.TOPK + nibbles); EF then absorbs the
+quantization error too: residual = compensated - dequant(upload).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.aggregators.base import Aggregator, register
+
+
+def topk_count(frac: float, n_total: int) -> int:
+    """Static per-client upload budget: k in [1, n_total]."""
+    return max(1, min(n_total, int(round(frac * n_total))))
+
+
+@register
+class TopKEF(Aggregator):
+    name = "topk_ef"
+
+    def __init__(self, ctx):
+        super().__init__(ctx)
+        fed = ctx.fed
+        if not 0.0 < fed.topk_frac <= 1.0:
+            raise ValueError(f"topk_frac={fed.topk_frac} must be in (0, 1]")
+        if fed.topk_quant not in ("none", "quant4"):
+            raise ValueError(f"topk_quant={fed.topk_quant!r} not in ('none', 'quant4')")
+        if fed.topk_quant == "quant4" and fed.quant4_mode not in ("nearest", "stochastic"):
+            raise ValueError(
+                f"quant4_mode={fed.quant4_mode!r}: the topk_ef x quant4 composition "
+                f"supports 'nearest' | 'stochastic' ('skip' belongs to the pure quant4 mode)"
+            )
+        self._k = topk_count(fed.topk_frac, ctx.spec.n_total)
+
+    def init_state(self, packed0):
+        # base: the dispatched row clients diff against (fresh (N,) slice —
+        # see quant8's donation note); ef: per-client residual rows; round:
+        # traced counter feeding the quant4 composition's per-round key
+        return {
+            "base": packed0[0],
+            "ef": jnp.zeros(packed0.shape, jnp.float32),
+            "round": jnp.zeros((), jnp.int32),
+        }
+
+    def aggregate(self, packed, weights, agg_state, mask=None):
+        fed = self.ctx.fed
+        base = agg_state["base"].astype(jnp.float32)
+        ef = agg_state["ef"]
+        r = agg_state["round"]
+        part = jnp.ones((packed.shape[0], 1), jnp.float32) if mask is None else mask.astype(jnp.float32)[:, None]
+
+        t = packed.astype(jnp.float32) + ef  # compensated params (ef==0 -> t==packed)
+        acc = t - base[None, :]  # compensated delta each client would upload
+        if self._k >= self.ctx.spec.n_total:
+            sel = jnp.ones(acc.shape, bool)
+        else:
+            thresh = jax.lax.top_k(jnp.abs(acc), self._k)[0][:, -1]
+            sel = jnp.abs(acc) >= thresh[:, None]
+
+        if fed.topk_quant == "none":
+            up = jnp.where(sel, t, base[None, :])  # unselected positions say "no change"
+            residual = jnp.where(sel, 0.0, acc)  # disjoint split: sel*acc + residual == acc bitwise
+        else:
+            key = packing.round_key(fed.quant4_seed, r)
+            vq = packing.quant4_dequant_rows_ref(
+                jnp.where(sel, acc, 0.0), fed.quant_block, key=key, mode=fed.quant4_mode
+            )
+            up = base[None, :] + vq
+            residual = acc - vq  # EF absorbs sparsification AND quantization error
+
+        g = self._wmean_full(up, weights, mask)  # dense's exact reduction path
+        out = self._broadcast(g, packed)
+        # masked rows retain their residual bit-for-bit (select, not blend)
+        ef_new = jnp.where(part > 0, residual, ef)
+        return out, {"base": out[0], "ef": ef_new, "round": r + 1}

@@ -472,3 +472,148 @@ def dequant_reduce_ref(q: jax.Array, scales: jax.Array, weights: jax.Array, bloc
         for c in range(1, C):
             acc = acc + dq(qp[c], scales[c]) * w[c]
     return acc[:N] if pad else acc
+
+
+# ---------------------------------------------------------------------------
+# communication frontier (DESIGN.md §15): counter PRNG, 4-bit transport,
+# pairwise integer masking — jnp twins of the kernels.ref NumPy oracles
+# ---------------------------------------------------------------------------
+
+# constants shared bit-for-bit with kernels.ref (the NumPy oracles) and the
+# kernels.quant4 / kernels.mask Pallas bodies
+FMIX_C1 = 0x85EBCA6B
+FMIX_C2 = 0xC2B2AE35
+GOLDEN = 0x9E3779B9
+IDX_C = 0x9E3779B1
+IDX_N = 0x85EBCA77
+IDX_E = 0xC2B2AE3D
+
+
+def fmix32(h: jax.Array) -> jax.Array:
+    """murmur3 fmix32 over uint32 lanes (ref.fmix32_np's traced twin)."""
+    h = jnp.asarray(h).astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(FMIX_C1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(FMIX_C2)
+    h = h ^ (h >> 16)
+    return h
+
+
+def round_key(seed, round_idx) -> jax.Array:
+    """Per-round PRNG key from a static session seed and the TRACED round
+    counter carried in agg_state — the key is a traced uint32 scalar, so
+    per-round randomness never retraces the jitted round."""
+    r = jnp.asarray(round_idx).astype(jnp.uint32)
+    return fmix32(jnp.uint32(seed & 0xFFFFFFFF) ^ fmix32(r + jnp.uint32(GOLDEN)))
+
+
+def counter_uniform(key, c_idx, n_idx) -> jax.Array:
+    """u in [0, 1) f32 from the (client, element) counter hash; c_idx and
+    n_idx broadcast (uint32)."""
+    bits = fmix32(
+        jnp.asarray(key).astype(jnp.uint32)
+        + jnp.asarray(c_idx).astype(jnp.uint32) * jnp.uint32(IDX_C)
+        + jnp.asarray(n_idx).astype(jnp.uint32) * jnp.uint32(IDX_N)
+    )
+    return (bits >> 8).astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+def _quant4_dq_block(xb: jax.Array, u, mode: str) -> jax.Array:
+    """(nb, block) f32 -> dequant(quant4) per block. u: matching uniforms
+    for stochastic mode (ignored for nearest). Clip AFTER the floor: in f32
+    7 + u can round to 8.0."""
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 7.0
+    v = xb / scale[..., None]
+    if mode == "nearest":
+        q = jnp.clip(jnp.round(v), -7, 7)
+    else:
+        q = jnp.clip(jnp.floor(v + u), -7, 7)
+    return q * scale[..., None]
+
+
+def quant4_dequant_rows_ref(x: jax.Array, block: int, key=0, mode: str = "nearest") -> jax.Array:
+    """(C, N) -> (C, N) f32 dequant(quant4(x)) per client row — the value a
+    client uploads under 4-bit transport (topk_ef x quant4 composition)."""
+    C, N = x.shape
+    pad = (-N) % block
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, pad))).reshape(C, -1, block)
+    if mode == "stochastic":
+        u = counter_uniform(
+            key,
+            jnp.arange(C, dtype=jnp.uint32)[:, None],
+            jnp.arange(N + pad, dtype=jnp.uint32)[None, :],
+        ).reshape(C, -1, block)
+    else:
+        u = jnp.zeros_like(xp)
+    return _quant4_dq_block(xp, u, mode).reshape(C, -1)[:, :N]
+
+
+def quant4_mean_ref(delta: jax.Array, weights: jax.Array, block: int, key=0, mode: str = "nearest") -> jax.Array:
+    """Fused 4-bit encode -> reduce (quant8_mean_ref's 4-bit sibling):
+    (C, N), (C,) -> (N,) f32 weighted sum of dequant(quant4(delta)) with no
+    materialized payload. Weights are used as-is; fold the participation
+    mask in before calling. ref.quant4_reduce_np is the NumPy oracle."""
+    C, N = delta.shape
+    pad = (-N) % block
+    x = jnp.pad(delta.astype(jnp.float32), ((0, 0), (0, pad)))
+    w = weights.astype(jnp.float32)
+    nidx = jnp.arange(N + pad, dtype=jnp.uint32)
+
+    def dq(row, c):
+        xb = row.reshape(-1, block)
+        if mode == "stochastic":
+            u = counter_uniform(key, c, nidx).reshape(-1, block)
+        else:
+            u = jnp.zeros_like(xb)
+        return _quant4_dq_block(xb, u, mode).reshape(-1)
+
+    if C > CHAIN_MAX_CLIENTS:
+        acc = jnp.einsum(
+            "c,cn->n", w, jax.vmap(dq)(x, jnp.arange(C, dtype=jnp.uint32))
+        )
+    else:
+        acc = dq(x[0], jnp.uint32(0)) * w[0]
+        for c in range(1, C):
+            acc = acc + dq(x[c], jnp.uint32(c)) * w[c]
+    return acc[:N] if pad else acc
+
+
+def secure_client_masks(rk, participation: jax.Array, n: int) -> jax.Array:
+    """(C,) 0/1 participation -> (C, n) uint32 pairwise-mask sums.
+
+    Client c carries sum_{p>c} m_cp - sum_{p<c} m_pc over ACTIVE pairs
+    (both endpoints selected), all mod 2^32, so the masks cancel EXACTLY in
+    the active-row modular sum — not to float tolerance. A deselected
+    client activates no pair, so it contributes no orphan mask. O(C^2 n)
+    like any pairwise scheme; the secure aggregator bounds C at build time.
+    ref.secure_masked_rows_np is the oracle twin."""
+    act = participation.astype(jnp.float32) > 0
+    C = act.shape[0]
+    cidx = jnp.arange(C, dtype=jnp.uint32)
+    nidx = jnp.arange(n, dtype=jnp.uint32)
+    M = jnp.zeros((C, n), jnp.uint32)
+    for p in range(C):
+        pu = jnp.uint32(p)
+        lo = jnp.minimum(cidx, pu)
+        hi = jnp.maximum(cidx, pu)
+        pk = fmix32(fmix32(jnp.asarray(rk).astype(jnp.uint32) + lo * jnp.uint32(IDX_C)) ^ (hi * jnp.uint32(IDX_N)))
+        bits = fmix32(pk[:, None] + nidx[None, :] * jnp.uint32(IDX_E))  # (C, n)
+        signed = jnp.where((cidx < pu)[:, None], bits, jnp.uint32(0) - bits)
+        active = act & act[p] & (cidx != pu)
+        M = M + jnp.where(active[:, None], signed, jnp.uint32(0))
+    return M
+
+
+def secure_sum_ref(q: jax.Array, participation: jax.Array, rk, *, use_masks: bool = True) -> jax.Array:
+    """q (C, N) int32 -> (N,) int32 sum over participating rows, optionally
+    through pairwise uint32 masking. Bitwise-equal either way: the masks
+    cancel exactly in the modular sum (ref.secure_sum_np oracle)."""
+    act = participation.astype(jnp.float32) > 0
+    rows = jax.lax.bitcast_convert_type(q.astype(jnp.int32), jnp.uint32)
+    if use_masks:
+        rows = rows + secure_client_masks(rk, participation, q.shape[1])
+    gated = jnp.where(act[:, None], rows, jnp.uint32(0))
+    total = jnp.sum(gated, axis=0, dtype=jnp.uint32)
+    return jax.lax.bitcast_convert_type(total, jnp.int32)

@@ -91,9 +91,17 @@ class FedConfig:
     group_size: int = 0  # hier: edge-group width G (DESIGN.md §13; 0 -> C, one group)
     hier_base: str = "dense"  # hier: the registered reducer composed over group rows
     stream: bool = False  # async: streaming O(buffer_size*N) flush (DESIGN.md §13)
+    # --- communication frontier (DESIGN.md §15) ---
+    topk_frac: float = 0.1  # topk_ef: uploaded fraction k/N of each client delta
+    topk_quant: str = "none"  # topk_ef: quantize the selected values (none | quant4)
+    quant4_mode: str = "stochastic"  # quant4: stochastic | nearest | skip (dense passthrough)
+    quant4_seed: int = 0  # quant4/topk_ef: session seed of the per-round counter PRNG
+    secure_domain: str = "int8"  # secure: shared-scale integer ring width (int8 | int4)
+    secure_mask: bool = True  # secure: pairwise masks on (False -> plain integer sum)
+    secure_session: int = 0  # secure: session key feeding the per-round mask PRNG
     # --- multi-process transport (DESIGN.md §14) ---
     transport: str = "inproc"  # inproc (SimClock event heap) | socket (real wire)
-    wire_codec: str = "dense"  # dense (f32 rows) | quant8 (int8 delta + block scales)
+    wire_codec: str = "dense"  # dense | quant8 | quant4 | topk (see transport/codec.py)
     queue_cap: int = 0  # socket: bounded landing-queue depth (0 -> 2 * n_clients)
     heartbeat_s: float = 0.2  # socket: worker heartbeat period (wall seconds)
     heartbeat_timeout_s: float = 2.0  # socket: silence beyond this marks a client dead

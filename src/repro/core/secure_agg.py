@@ -23,14 +23,33 @@ import jax.numpy as jnp
 PyTree = Any
 
 
+def _mix32(h: int) -> int:
+    """murmur3 fmix32 finalizer on Python ints (masked to 32 bits)."""
+    h &= 0xFFFFFFFF
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & 0xFFFFFFFF
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & 0xFFFFFFFF
+    h ^= h >> 16
+    return h
+
+
 def pair_seed(i: int, j: int, round_idx: int, session: int = 0) -> int:
     """Shared seed for the (unordered) client pair at a given round.
 
     In deployment this comes from a Diffie-Hellman exchange; here both
-    parties can derive it because they share the session key.
+    parties can derive it because they share the session key. A stable
+    fmix32 chain, NOT `hash()`: tuple hashing is salted per process under
+    PYTHONHASHSEED, so two worker processes would derive DIFFERENT masks
+    for the same pair and nothing would cancel.
+    `kernels.ref.pair_seed_np` is the bit-exact NumPy twin (regression pin).
     """
     a, b = (i, j) if i < j else (j, i)
-    return hash((session, round_idx, a, b)) & 0x7FFFFFFF
+    h = _mix32((session & 0xFFFFFFFF) + 0x9E3779B9)
+    h = _mix32(h ^ _mix32((round_idx & 0xFFFFFFFF) + 0x9E3779B9))
+    h = _mix32(h + (a & 0xFFFFFFFF) * 0x9E3779B1)
+    h = _mix32(h ^ ((b & 0xFFFFFFFF) * 0x85EBCA77 & 0xFFFFFFFF))
+    return h & 0x7FFFFFFF
 
 
 def _mask_tree(template: PyTree, seed: int, scale: float) -> PyTree:

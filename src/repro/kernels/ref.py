@@ -175,3 +175,187 @@ def ssd_chunk(xdt: jax.Array, dA: jax.Array, Bm: jax.Array, Cm: jax.Array):
     states = jnp.einsum("tn,th,thp->hpn", Bm.astype(jnp.float32), decay_states, xdt.astype(jnp.float32))
     chunk_decay = jnp.exp(cum[-1])  # (H,)
     return y_diag.astype(xdt.dtype), states, chunk_decay
+
+
+# ---------------------------------------------------------------------------
+# communication-frontier oracles (DESIGN.md §15): counter PRNG, 4-bit
+# quantization, nibble packing, top-k selection, pairwise integer masking.
+# All pure NumPy uint32/float32 so the jnp refs in `core.packing` and the
+# Pallas kernels in `kernels.quant4` / `kernels.mask` pin against them
+# bit-for-bit (every op below is an exact IEEE/modular twin of the traced
+# version).
+# ---------------------------------------------------------------------------
+
+_FMIX_C1 = np.uint32(0x85EBCA6B)
+_FMIX_C2 = np.uint32(0xC2B2AE35)
+GOLDEN = np.uint32(0x9E3779B9)  # round/session mixing constant
+IDX_C = np.uint32(0x9E3779B1)  # client-index stride (quant4 counter, pair lo)
+IDX_N = np.uint32(0x85EBCA77)  # element-index stride (quant4 counter, pair hi)
+IDX_E = np.uint32(0xC2B2AE3D)  # mask element stride (secure pair masks)
+
+
+def fmix32_np(h) -> np.ndarray:
+    """murmur3 fmix32 finalizer over uint32 (scalar or array) — the shared
+    counter-based PRNG: uint32 wraparound is the modular arithmetic, so the
+    NumPy, jnp (`packing.fmix32`) and in-kernel versions are bit-identical."""
+    h = np.asarray(h, np.uint32).copy()
+    h ^= h >> np.uint32(16)
+    h *= _FMIX_C1
+    h ^= h >> np.uint32(13)
+    h *= _FMIX_C2
+    h ^= h >> np.uint32(16)
+    return h
+
+
+def round_key_np(seed: int, round_idx: int) -> np.uint32:
+    """Per-round PRNG key: fmix32(seed ^ fmix32(round + GOLDEN))."""
+    # 0-d arrays throughout: NumPy's scalar path warns on (intended) wraparound
+    r = fmix32_np(np.asarray(round_idx & 0xFFFFFFFF, np.uint32) + GOLDEN)
+    return np.uint32(fmix32_np(np.asarray(seed & 0xFFFFFFFF, np.uint32) ^ r))
+
+
+def counter_uniform_np(key, c, n) -> np.ndarray:
+    """u in [0, 1) f32 for (client c, flat element n) under `key`.
+
+    24 high bits of the counter hash scaled by 2^-24 — both steps exact in
+    f32, so traced and host-side values agree bitwise."""
+    bits = fmix32_np(
+        np.asarray(key, np.uint32) + np.asarray(c, np.uint32) * IDX_C + np.asarray(n, np.uint32) * IDX_N
+    )
+    return (bits >> np.uint32(8)).astype(np.float32) * np.float32(2.0**-24)
+
+
+def quant4_blocks_np(x, block: int, *, mode: str = "nearest", key=0, c=0):
+    """(N,) f32 -> (q int8 in [-7, 7] (Npad,), scales f32 (Npad/block,)).
+
+    Symmetric 4-bit per `block` elements: scale = max(amax, 1e-12)/7.
+    mode "nearest": q = clip(rint(x/s), -7, 7); "stochastic":
+    q = clip(floor(x/s + u), -7, 7) with u the counter uniform for (client
+    c, global element n). The clip runs AFTER the floor: 7 + u can round to
+    8.0 in f32, so clipping the pre-floor sum would be off by one step.
+    Zero padding quantizes to exactly 0 in either mode (floor(u) == 0)."""
+    x = np.asarray(x, np.float32)
+    pad = (-x.shape[0]) % block
+    xp = np.pad(x, (0, pad))
+    xb = xp.reshape(-1, block)
+    amax = np.max(np.abs(xb), axis=1)
+    scale = np.maximum(amax, np.float32(1e-12)) / np.float32(7.0)
+    v = xb / scale[:, None]
+    if mode == "nearest":
+        q = np.clip(np.rint(v), np.float32(-7), np.float32(7))
+    else:
+        u = counter_uniform_np(key, c, np.arange(len(xp), dtype=np.uint32))
+        q = np.clip(np.floor(v + u.reshape(-1, block)), np.float32(-7), np.float32(7))
+    return q.reshape(-1).astype(np.int8), scale
+
+
+def dequant4_blocks_np(q, scales, block: int) -> np.ndarray:
+    qb = np.asarray(q, np.float32).reshape(-1, block)
+    return (qb * np.asarray(scales, np.float32)[:, None]).reshape(-1)
+
+
+def quant4_reduce_np(delta, weights, block: int, *, mode: str = "nearest", key=0) -> np.ndarray:
+    """Fused oracle for kernels.quant4.quant4_reduce: per-client 4-bit
+    encode -> decode -> weighted client sum. The per-client q values are
+    bit-exact twins of the kernel's; the final sum differs only in
+    accumulation order (kernel pins allclose, q pins bitwise)."""
+    delta = np.asarray(delta, np.float32)
+    C, N = delta.shape
+    acc = np.zeros((N + (-N) % block,), np.float32)
+    for c in range(C):
+        q, s = quant4_blocks_np(delta[c], block, mode=mode, key=key, c=c)
+        acc += dequant4_blocks_np(q, s, block) * np.float32(weights[c])
+    return acc[:N]
+
+
+def pack_nibbles_np(q) -> np.ndarray:
+    """int8 values in [-8, 7] -> two's-complement nibbles, two per byte
+    (low nibble first; odd length pads one zero nibble)."""
+    u = np.asarray(q, np.int8).astype(np.uint8) & np.uint8(0xF)
+    if len(u) % 2:
+        u = np.append(u, np.uint8(0))
+    return (u[0::2] | (u[1::2] << np.uint8(4))).astype(np.uint8)
+
+
+def unpack_nibbles_np(buf, n: int) -> np.ndarray:
+    """Inverse of pack_nibbles_np: first n sign-extended int8 values."""
+    b = np.asarray(buf, np.uint8)
+    u = np.empty(len(b) * 2, np.uint8)
+    u[0::2] = b & np.uint8(0xF)
+    u[1::2] = b >> np.uint8(4)
+    return ((u[:n].astype(np.int16) ^ 8) - 8).astype(np.int8)
+
+
+def topk_select_np(acc, k: int) -> np.ndarray:
+    """(C, N) -> bool (C, N): per-row |value| >= that row's k-th largest
+    |value|. Ties at the threshold all select — same contract as
+    thresholding on lax.top_k's k-th value, so the selection can exceed k
+    elements only on exact magnitude ties."""
+    a = np.abs(np.asarray(acc, np.float32))
+    thr = -np.sort(-a, axis=1, kind="stable")[:, k - 1]
+    return a >= thr[:, None]
+
+
+def pair_key_np(round_key, a, b) -> np.ndarray:
+    """Symmetric per-pair key: ordered (lo, hi) chain of fmix32 mixes."""
+    # 0-d arrays: scalar uint32 ops warn on (intended) wraparound
+    lo = np.asarray(np.minimum(np.asarray(a, np.uint32), np.asarray(b, np.uint32)))
+    hi = np.asarray(np.maximum(np.asarray(a, np.uint32), np.asarray(b, np.uint32)))
+    return fmix32_np(fmix32_np(np.asarray(round_key, np.uint32) + lo * IDX_C) ^ (hi * IDX_N))
+
+
+def pair_mask_np(round_key, a, b, n: int) -> np.ndarray:
+    """(n,) uint32 pairwise mask stream for the (a, b) client pair."""
+    pk = pair_key_np(round_key, a, b)
+    return fmix32_np(pk + np.arange(n, dtype=np.uint32) * IDX_E)
+
+
+def secure_masked_rows_np(q, participation, round_key) -> np.ndarray:
+    """q (C, N) int32 -> (C, N) uint32: each ACTIVE client's row in two's
+    complement plus its pairwise masks (+m toward higher active peers, -m
+    toward lower, uint32 wraparound); inactive rows are zero and contribute
+    no mask — the Bonawitz cancellation restricted to participants."""
+    q = np.asarray(q, np.int32)
+    C, N = q.shape
+    act = np.asarray(participation, np.float32) > 0
+    out = np.zeros((C, N), np.uint32)
+    for c in range(C):
+        if not act[c]:
+            continue
+        row = q[c].view(np.uint32).copy()
+        for p in range(C):
+            if p == c or not act[p]:
+                continue
+            m = pair_mask_np(round_key, c, p, N)
+            row = row + m if p > c else row - m
+        out[c] = row
+    return out
+
+
+def secure_sum_np(q, participation, round_key, *, use_masks: bool = True) -> np.ndarray:
+    """Server-side oracle: uint32 sum of the (masked) active rows,
+    reinterpreted int32. With masks the pair terms cancel mod 2^32, so the
+    result equals the unmasked sum BIT-FOR-BIT (|sum q| < 2^31 assumed —
+    the aggregator's C * Q bound guarantees it)."""
+    q = np.asarray(q, np.int32)
+    act = np.asarray(participation, np.float32) > 0
+    if use_masks:
+        rows = secure_masked_rows_np(q, participation, round_key)
+    else:
+        rows = np.where(act[:, None], q.view(np.uint32), np.uint32(0))
+    total = np.zeros(q.shape[1], np.uint32)
+    for c in range(q.shape[0]):
+        if act[c]:
+            total += rows[c]
+    return total.view(np.int32)
+
+
+def pair_seed_np(i: int, j: int, round_idx: int, session: int = 0) -> int:
+    """uint32-mix twin of core.secure_agg.pair_seed — the PYTHONHASHSEED
+    regression pin: both sides must produce this exact value."""
+    a, b = (i, j) if i < j else (j, i)
+    h = fmix32_np(np.asarray(session & 0xFFFFFFFF, np.uint32) + GOLDEN)
+    h = fmix32_np(h ^ fmix32_np(np.asarray(round_idx & 0xFFFFFFFF, np.uint32) + GOLDEN))
+    h = fmix32_np(h + np.asarray(a & 0xFFFFFFFF, np.uint32) * IDX_C)
+    h = fmix32_np(h ^ (np.asarray(b & 0xFFFFFFFF, np.uint32) * IDX_N))
+    return int(h) & 0x7FFFFFFF

@@ -161,9 +161,12 @@ def main() -> None:
                     help="inproc: simulated clients in this process; socket: real "
                     "worker processes over TCP (needs --mode async; --rounds "
                     "counts buffered flushes)")
-    ap.add_argument("--wire-codec", default="dense", choices=["dense", "quant8"],
-                    help="socket: UPDATE payload encoding — dense f32 rows or "
-                    "int8 block-quantized deltas (the paper's ~4x uplink cut)")
+    ap.add_argument("--wire-codec", default="dense",
+                    choices=["dense", "quant8", "quant4", "topk"],
+                    help="socket: UPDATE payload encoding — dense f32 rows, "
+                    "int8 block-quantized deltas (the paper's ~4x uplink cut), "
+                    "4-bit nibble-packed deltas (~8x), or sparse top-k deltas "
+                    "(~18x; see transport/codec.py)")
     ap.add_argument("--record-schedule", default="",
                     help="socket: write the recorded arrival schedule (JSON) here")
     ap.add_argument("--replay-schedule", default="",
@@ -182,6 +185,23 @@ def main() -> None:
                     help="client data split: stream (per-client Markov drift) or a "
                     "data.partition scenario over a labeled pool (text archs)")
     ap.add_argument("--alpha", type=float, default=0.5, help="dirichlet label-skew concentration")
+    ap.add_argument("--topk-frac", type=float, default=0.1,
+                    help="topk_ef: upload fraction k/N of the packed row")
+    ap.add_argument("--topk-quant", default="none", choices=["none", "quant4"],
+                    help="topk_ef: quantize the selected values (composes the "
+                    "sparsifier with the 4-bit codec)")
+    ap.add_argument("--quant4-mode", default="stochastic",
+                    choices=["stochastic", "nearest", "skip"],
+                    help="quant4 aggregator rounding (skip -> dense bit-for-bit)")
+    ap.add_argument("--quant4-seed", type=int, default=0,
+                    help="quant4/topk_ef: per-round stochastic-rounding key seed")
+    ap.add_argument("--secure-domain", default="int8", choices=["int8", "int4"],
+                    help="secure: integer domain the masked sums run in")
+    ap.add_argument("--no-secure-mask", action="store_true",
+                    help="secure: skip the pairwise masks (the cancellation "
+                    "equivalence baseline; quantized sum only)")
+    ap.add_argument("--secure-session", type=int, default=0,
+                    help="secure: session key the per-round pair masks derive from")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
@@ -258,6 +278,13 @@ def main() -> None:
         stream=args.stream,
         group_size=args.group_size,
         hier_base=args.hier_base,
+        topk_frac=args.topk_frac,
+        topk_quant=args.topk_quant,
+        quant4_mode=args.quant4_mode,
+        quant4_seed=args.quant4_seed,
+        secure_domain=args.secure_domain,
+        secure_mask=not args.no_secure_mask,
+        secure_session=args.secure_session,
     )
     if args.stream:
         optimizer = sgd(args.lr, momentum=0.0)  # stateless: the ring keeps no opt rows

@@ -58,7 +58,7 @@ def _maxdiff(a, b):
 
 def test_registry_has_all_modes():
     have = set(aggregators.names())
-    assert {"dense", "eq6", "quant8", "static_topn", "fedavgm", "fedadam", "trimmed_mean", "fedsgd"} <= have
+    assert {"dense", "eq6", "quant8", "static_topn", "fedavgm", "fedadam", "trimmed_mean", "fedsgd", "topk_ef", "quant4", "secure"} <= have
 
 
 def test_unknown_mode_fails_at_build_with_names():
@@ -364,7 +364,7 @@ def test_trimmed_mean_ignores_outlier_client():
 def test_state_template_matches_make_state():
     """Dry-run abstract state must mirror the real state tree, per mode."""
     opt = sgd()
-    for mode, kw in [("dense", {}), ("eq6", {}), ("quant8", {}), ("fedavgm", {}), ("fedadam", {}), ("trimmed_mean", {"trim_ratio": 0.25})]:
+    for mode, kw in [("dense", {}), ("eq6", {}), ("quant8", {}), ("fedavgm", {}), ("fedadam", {}), ("trimmed_mean", {"trim_ratio": 0.25}), ("topk_ef", {}), ("quant4", {}), ("secure", {})]:
         fed = _fed(mode, **kw)
         real = R.make_state(CFG, fed, opt, jax.random.key(0))
         abstract = R.state_template(CFG, fed, opt, jnp.float32)

@@ -16,8 +16,11 @@ PR 7 adds the wire-codec properties (DESIGN.md §14): random rows pushed
 through the FULL uplink pipeline — ``encode_update`` -> frame -> adversarial
 TCP chunking (split and coalesced reads) -> ``FrameParser`` ->
 ``parse_update`` -> ``decode_update`` — must come back identical (dense,
-bitwise) or within the quant8 half-step bound, because the replay-determinism
-contract replays recorded schedules through exactly this round-trip.
+bitwise) or within the quantizer's half-step bound, because the
+replay-determinism contract replays recorded schedules through exactly this
+round-trip. PR 8 widens the loop over `codec.CODECS` to the frontier codecs
+(DESIGN.md §15): quant4 under its amax/7 half-step bound, and topk under
+"half the global int8 step OR untouched (decodes to base)".
 """
 import numpy as np
 
@@ -186,14 +189,26 @@ def test_wire_update_roundtrip_through_frames_and_codec(n, block, seed, style):
         c, seq, ver, loss, out = wire.parse_update(payload)
         assert (c, seq, ver, loss) == (7, 3, 41, 0.25)
         decoded = codec.decode_update(out, base)
+        delta = trained - base
         if name == "dense":
             np.testing.assert_array_equal(decoded, trained)
+        elif name == "topk":
+            # selected values: int8-quantized over the compacted k-vector,
+            # so half the GLOBAL step bounds them; unselected decode to base
+            bound = (
+                np.abs(delta).max() / 127.0 / 2 * 1.001
+                + 2.4e-7 * np.abs(base) + 1e-9
+            )
+            err = np.abs(decoded - trained)
+            assert np.all((err <= bound) | (decoded == base))
+            k = max(1, min(n, int(-(-codec.TOPK_FRAC * n // 1))))
+            assert int(np.sum(decoded != base)) <= k
         else:
-            delta = trained - base
+            qmax = 127.0 if name == "quant8" else 7.0
             nb = -(-n // block)
             pad = np.zeros(nb * block, np.float32)
             pad[:n] = delta
-            step = np.abs(pad).reshape(nb, block).max(axis=1) / 127.0
+            step = np.abs(pad).reshape(nb, block).max(axis=1) / qmax
             # half the quant step per block, plus one f32-addition ulp
             bound = np.repeat(step / 2 * 1.001, block)[:n] + 2.4e-7 * np.abs(base) + 1e-9
             assert np.all(np.abs(decoded - trained) <= bound)

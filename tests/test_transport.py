@@ -283,13 +283,14 @@ def test_async_checkpoints_read_engine_global_after_drops(tmp_path):
 
 # ------------------------- THE acceptance test --------------------------------
 
-@pytest.mark.parametrize("wire_codec", ["dense", "quant8"])
+@pytest.mark.parametrize("wire_codec", ["dense", "quant8", "quant4"])
 def test_wire_run_replays_deterministically(wire_codec, tmp_path):
     """C=4 real worker processes over TCP, 5 flushes, one forced staleness
     dropout (a straggler trained against a version the fast clients have
     long flushed past). The recorded schedule, replayed through the
     SimClock engine, must reproduce the wire run's global parameters bit
-    for bit (dense) / to 1e-5 (quant8)."""
+    for bit (dense) / to 1e-5 (quant8/quant4 — both codecs round
+    deterministically, so the replay re-encodes the identical bytes)."""
     meta = _meta(n_clients=4, buffer_size=2, max_staleness=1,
                  wire_codec=wire_codec, quant_block=512)
     res = harness.wire_run(
