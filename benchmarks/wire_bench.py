@@ -1,6 +1,6 @@
 """Wire-transport benchmark rows (DESIGN.md §14).
 
-Two tables:
+Three tables:
 
   wire/payload_*      — analytic UPDATE-payload bytes per codec
                         (`transport.codec.payload_bytes`) at representative
@@ -12,20 +12,35 @@ Two tables:
                         pair: full frames, `FrameParser` on both ends,
                         encode/decode included — everything but the training
                         step, so the row isolates transport cost from JAX.
+  wire/snapshot_* /   — durability cost (DESIGN.md §16): full-engine
+  wire/wal_*            snapshot write/verify wall time at representative
+                        state sizes, WAL append cost per landing event in
+                        both durability modes (flush-per-event vs
+                        fsync-per-event), and the headline guard row
+                        ``wire/wal_overhead_vs_roundtrip_pct`` — WAL-on
+                        landing throughput must stay within 15% of WAL-off
+                        even at the transport's own floor cadence (a dense
+                        roundtrip with zero training time). `rows()` ASSERTS
+                        the guard, so a WAL regression fails the CI
+                        bench-smoke step, not just a dashboard.
 
-Both are cheap (no jit, no subprocess) so they belong in the ``--smoke``
-CI subset: they prove the framing + codec path imports and moves real
-bytes without spending the minutes a full `wire_run` federation costs.
+All are cheap (no jit, no subprocess) so they belong in the ``--smoke``
+CI subset: they prove the framing + codec + durability path imports and
+moves real bytes without spending the minutes a full `wire_run` costs.
 """
 from __future__ import annotations
 
 import socket
+import tempfile
 import threading
 import time
+from pathlib import Path
 
 import numpy as np
 
+from repro.checkpoint import durable as dr
 from repro.core.transport import codec, wire
+from repro.core.transport.replay import WireEvent
 
 # representative packed-row widths: the test harness's tiny arch (~0.4M),
 # a 16M mid-size row, and the paper-scale FedYOLOv3 row (~62M params)
@@ -96,8 +111,77 @@ def roundtrip_rows():
     return out
 
 
+# durable-state sizes: the harness tiny arch's (C=2, 1<<19) buffer and a
+# mid-size (C=2, 1<<22) one — 4 MB / 32 MB snapshots, real disk I/O but
+# well under a second each so the smoke subset stays fast
+SNAP_WIDTHS = {"tiny": 1 << 19, "mid": 1 << 22}
+SNAP_CLIENTS = 2
+WAL_EVENTS = 2000       # flush-per-event appends to time
+WAL_FSYNC_EVENTS = 100  # fsync-per-event appends (each pays a disk sync)
+WAL_GUARD_PCT = 15.0
+
+
+def _fake_state(n: int) -> dict:
+    rng = np.random.default_rng(0)
+    return {
+        "arrays": {
+            "params": rng.normal(size=(SNAP_CLIENTS, n)).astype(np.float32),
+            "global": rng.normal(size=n).astype(np.float32),
+            "dispatch_version": np.zeros(SNAP_CLIENTS, np.int64),
+        },
+        "scalars": {"round": 3, "version": 3},
+    }
+
+
+def durable_rows():
+    """Snapshot + WAL cost rows (and the raw ingredients of the guard)."""
+    out = []
+    with tempfile.TemporaryDirectory(prefix="wirebench_durable_") as td:
+        root = Path(td)
+        for name, n in SNAP_WIDTHS.items():
+            snap = _fake_state(n)
+            p = root / f"{name}.ckpt"
+            t0 = time.perf_counter()
+            nbytes = dr.write_snapshot(p, snap)
+            w_ms = 1e3 * (time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            dr.read_snapshot(p)  # includes the CRC verify recovery pays
+            r_ms = 1e3 * (time.perf_counter() - t0)
+            out.append((f"wire/snapshot_{name}_write_ms", w_ms,
+                        f"bytes={nbytes};C={SNAP_CLIENTS};n={n}"))
+            out.append((f"wire/snapshot_{name}_verify_ms", r_ms,
+                        f"bytes={nbytes}"))
+        ev = WireEvent("land", 1.0, 0, 1, seq=0, dropped=False, flush=-1)
+        for mode, fsync, iters in (("flush", False, WAL_EVENTS),
+                                   ("fsync", True, WAL_FSYNC_EVENTS)):
+            run = dr.DurableRun(root / f"wal_{mode}", {"bench": mode},
+                                fsync_every_event=fsync)
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                run.append_event(ev)
+            us = 1e6 * (time.perf_counter() - t0) / iters
+            run.close()
+            out.append((f"wire/wal_append_{mode}_us", us, f"iters={iters}"))
+    return out
+
+
 def rows():
-    return payload_rows() + roundtrip_rows()
+    rt = roundtrip_rows()
+    du = durable_rows()
+    # the guard: one WAL append (the per-landing durability cost in the
+    # default flush-per-event mode) against the dense roundtrip — the
+    # fastest landing cadence the transport itself can sustain. Staying
+    # under 15% *here* means any real run (which also trains) sees far less.
+    rt_dense_ms = next(v for n, v, _ in rt if n == "wire/roundtrip_dense_ms")
+    wal_us = next(v for n, v, _ in du if n == "wire/wal_append_flush_us")
+    pct = 100.0 * (wal_us / 1e3) / rt_dense_ms
+    assert pct < WAL_GUARD_PCT, (
+        f"WAL-on landing overhead {pct:.2f}% exceeds the {WAL_GUARD_PCT}% "
+        f"guard (append {wal_us:.1f}us vs dense roundtrip {rt_dense_ms:.2f}ms)"
+    )
+    du.append(("wire/wal_overhead_vs_roundtrip_pct", pct,
+               f"guard<{WAL_GUARD_PCT:.0f};append_us={wal_us:.1f}"))
+    return payload_rows() + rt + du
 
 
 if __name__ == "__main__":

@@ -22,6 +22,10 @@ EXTS = (".py", ".md", ".sh", ".json", ".toml")
 # tokens that look like paths but aren't repo files
 IGNORE = re.compile(r"^(https?:|/|\{|<)")
 
+# filenames the code CREATES at run time (documented directory layouts,
+# e.g. a DurableRun dir in DESIGN.md §16) — real names, never repo files
+RUNTIME_ARTIFACTS = {"meta.json", "manifest.json"}
+
 
 def path_tokens(text: str) -> set[str]:
     tokens: set[str] = set()
@@ -49,6 +53,8 @@ def main() -> int:
             continue
         text = p.read_text()
         for tok in sorted(path_tokens(text)):
+            if tok in RUNTIME_ARTIFACTS:
+                continue
             # DESIGN.md cites module paths relative to src/repro ("core/rounds.py")
             roots = (ROOT, ROOT / "src", ROOT / "src" / "repro")
             if any((r / tok).exists() for r in roots):

@@ -1,3 +1,13 @@
 from repro.checkpoint.store import ObjectStore
 
-__all__ = ["ObjectStore"]
+__all__ = ["ObjectStore", "DurableRun"]
+
+
+def __getattr__(name):
+    # durable imports the transport stack (and through it JAX); keep the
+    # plain ObjectStore import light for callers that only store blobs
+    if name == "DurableRun":
+        from repro.checkpoint.durable import DurableRun
+
+        return DurableRun
+    raise AttributeError(name)

@@ -43,7 +43,14 @@ class ObjectStore:
         )
 
     def _save_manifest(self) -> None:
-        self.manifest_path.write_text(json.dumps(self.manifest, indent=1, sort_keys=True))
+        # atomic tmp+fsync+rename: a crash mid-write must never leave a
+        # half-written manifest.json bricking every subsequent restore
+        tmp = self.manifest_path.with_suffix(".json.tmp")
+        with open(tmp, "w") as f:
+            f.write(json.dumps(self.manifest, indent=1, sort_keys=True))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.manifest_path)
 
     def put_model(self, task_id: str, round_idx: int, params: PyTree, meta: dict | None = None) -> str:
         buf = io.BytesIO()
@@ -62,8 +69,18 @@ class ObjectStore:
         return key
 
     def get_model(self, task_id: str, round_idx: int | None = None) -> dict[str, np.ndarray]:
+        if task_id not in self.manifest or not self.manifest[task_id]:
+            raise KeyError(
+                f"no stored model for task {task_id!r}; stored tasks: "
+                f"{sorted(self.manifest) or 'none'}"
+            )
         rounds = self.manifest[task_id]
         r = str(max(int(k) for k in rounds) if round_idx is None else round_idx)
+        if r not in rounds:
+            raise KeyError(
+                f"task {task_id!r} has no round {r}; available rounds: "
+                f"{self.rounds(task_id)}"
+            )
         key = rounds[r]["key"]
         with np.load(self.root / "objects" / key) as z:
             return {k: z[k] for k in z.files}

@@ -623,6 +623,74 @@ class ArrivalAsyncEngine:
         self._losses: list[float] = []
         self._dropped_window = 0
 
+    # -- durability (checkpoint/durable.py snapshots through these) ----------
+
+    def export_state(self) -> dict:
+        """Everything a crashed server needs to resume mid-window: the
+        packed buffer, the COMPLETE ``state["agg"]`` substate (EF residual
+        rows, fmix32 round counters — any aggregator-private leaf), the
+        engine's own global copy, dispatch versions, and the host-side
+        window/counter scalars. Returns ``{"arrays": {...}, "scalars":
+        {...}}`` — plain numpy + JSON-able, ready for np.savez."""
+        agg_leaves = jax.tree_util.tree_leaves(self.state["agg"])
+        arrays = {
+            "params": np.asarray(self.state["params"]),
+            "global": np.asarray(self._global),
+            "dispatch_version": np.asarray(self.dispatch_version),
+        }
+        for i, leaf in enumerate(agg_leaves):
+            arrays[f"agg_{i}"] = np.asarray(leaf)
+        scalars = {
+            "round": int(self.state["round"]),
+            "version": int(self.version),
+            "global_row": int(self.global_row),
+            "completions": int(self.completions),
+            "dropped_total": int(self.dropped_total),
+            "n_agg_leaves": len(agg_leaves),
+            "staged": [int(c) for c in self._staged],
+            "stal": [int(s) for s in self._stal],
+            "losses": [float(x) for x in self._losses],
+            "dropped_window": int(self._dropped_window),
+            "clock_t": float(self.clock.now()),
+            "n_history": len(self.history),
+        }
+        return {"arrays": arrays, "scalars": scalars}
+
+    def import_state(self, snap: dict) -> None:
+        """Inverse of :meth:`export_state` onto a freshly built engine (same
+        meta => same agg tree structure, so the flattened leaves unflatten
+        against this engine's own treedef). The clock is advanced to the
+        snapshot time, never rewound."""
+        arrays, scalars = snap["arrays"], snap["scalars"]
+        leaves, treedef = jax.tree_util.tree_flatten(self.state["agg"])
+        n = int(scalars["n_agg_leaves"])
+        if n != len(leaves):
+            raise ValueError(
+                f"snapshot has {n} agg leaves, engine expects {len(leaves)} "
+                "(aggregation mismatch between snapshot meta and engine?)"
+            )
+        agg = jax.tree_util.tree_unflatten(
+            treedef,
+            [jnp.asarray(arrays[f"agg_{i}"], leaves[i].dtype) for i in range(n)],
+        )
+        self.state = {
+            "params": jnp.asarray(arrays["params"], self.state["params"].dtype),
+            "agg": agg,
+            "round": jnp.int32(scalars["round"]),
+        }
+        self._global = jnp.asarray(arrays["global"], self.state["params"].dtype)
+        self.dispatch_version = np.asarray(arrays["dispatch_version"], np.int64).copy()
+        self.version = int(scalars["version"])
+        self.global_row = int(scalars["global_row"])
+        self.completions = int(scalars["completions"])
+        self.dropped_total = int(scalars["dropped_total"])
+        self._staged = [int(c) for c in scalars["staged"]]
+        self._stal = [int(s) for s in scalars["stal"]]
+        self._losses = [float(x) for x in scalars["losses"]]
+        self._dropped_window = int(scalars["dropped_window"])
+        if float(scalars["clock_t"]) > self.clock.now():
+            self.clock.advance_to(float(scalars["clock_t"]))
+
     # -- dispatch side -------------------------------------------------------
 
     def global_packed_row(self) -> jax.Array:

@@ -115,6 +115,16 @@ def render_wire(task_id: str, history, stats, n_clients: int, liveness_log=()) -
         f"   superseded {stats.superseded}"
         + ("   DEADLINE HIT" if stats.deadline_hit else "")
     )
+    # the durability/chaos line (DESIGN.md §16) only appears when any of it
+    # happened — plain runs keep the compact three-line summary
+    if (stats.crc_errors or stats.snapshots or stats.wal_events
+            or stats.recoveries or stats.faults_injected or stats.crashed):
+        lines.append(
+            f"  durable  {stats.snapshots} snapshots   {stats.wal_events} WAL events"
+            f"   {stats.recoveries} recoveries   crc errors {stats.crc_errors}"
+            f"   faults injected {stats.faults_injected}"
+            + ("   CRASHED" if stats.crashed else "")
+        )
     return "\n".join(lines)
 
 

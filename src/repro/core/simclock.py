@@ -56,14 +56,19 @@ class WallClock(SimClock):
     stamps, so a recorded run and its replay agree on every ``sim_time``.
     Only `sync` reads host time; between syncs the clock is as dumb and
     monotonic as its parent.
+
+    A recovered server passes ``start=`` (the snapshot's clock time) so the
+    resumed run's recorded times continue monotonically from where the
+    crashed run stopped — the combined pre-crash + post-restore schedule
+    must still be a valid (monotonic) `ArrivalSchedule`.
     """
 
-    def __init__(self):
+    def __init__(self, start: float = 0.0):
         import time
 
-        super().__init__(0.0)
+        super().__init__(start)
         self._mono = time.monotonic
-        self._t0 = self._mono()
+        self._t0 = self._mono() - start
 
     def sync(self) -> float:
         """Advance to now (relative host seconds); returns the new time.

@@ -159,23 +159,35 @@ def make_engine(meta: dict, clock: SimClock | None = None) -> ae.ArrivalAsyncEng
     )
 
 
-def replay(schedule: ArrivalSchedule, *, clock: SimClock | None = None) -> ae.ArrivalAsyncEngine:
-    """Re-derive a recorded wire run through the in-process engine on the
-    SimClock. Returns the engine (history, state, drop counters populated);
-    raises :class:`ReplayMismatch` at the first event whose re-derivation
-    disagrees with the record."""
-    meta = schedule.meta
+def apply_events(
+    engine: ae.ArrivalAsyncEngine,
+    events: list[WireEvent],
+    meta: dict,
+    *,
+    update=None,
+    start_index: int = 0,
+) -> ae.ArrivalAsyncEngine:
+    """Drive `engine` through recorded events, re-deriving each trained row
+    with the jitted row update + the wire-codec round-trip and cross-checking
+    every recorded decision (dispatch versions, drops, flush boundaries)
+    against the engine's own.
+
+    This is the one event interpreter BOTH consumers share: `replay` runs
+    it from a fresh engine over a full schedule, and crash recovery
+    (`checkpoint/durable.py`) runs it over the WAL suffix on top of a
+    restored snapshot — recovery literally IS a partial replay, which is
+    why the recovery-equals-replay invariant holds by construction.
+    ``start_index`` only offsets the event numbering in mismatch messages.
+    """
     cfg, fed = build_cfg(meta), build_fed(meta)
-    opt = build_optimizer(meta)
-    engine = ae.ArrivalAsyncEngine(
-        cfg, fed, opt, seed=int(meta["seed"]), clock=clock or SimClock()
-    )
-    update = ae.build_row_update(
-        cfg, fed, opt, spec=engine.agg.ctx.spec, template=engine.agg.ctx.template
-    )
+    if update is None:
+        update = ae.build_row_update(
+            cfg, fed, build_optimizer(meta),
+            spec=engine.agg.ctx.spec, template=engine.agg.ctx.template,
+        )
     wire_codec = meta.get("wire_codec", "dense")
     block = int(meta.get("quant_block", 1024))
-    for i, ev in enumerate(schedule.events):
+    for i, ev in enumerate(events, start=start_index):
         where = f"event {i} ({ev.kind} client {ev.client} t={ev.t:.3f})"
         if ev.kind == "dispatch":
             engine.clock.advance_to(max(ev.t, engine.clock.now()))
@@ -213,3 +225,12 @@ def replay(schedule: ArrivalSchedule, *, clock: SimClock | None = None) -> ae.Ar
         else:
             raise ReplayMismatch(f"{where}: unknown event kind {ev.kind!r}")
     return engine
+
+
+def replay(schedule: ArrivalSchedule, *, clock: SimClock | None = None) -> ae.ArrivalAsyncEngine:
+    """Re-derive a recorded wire run through the in-process engine on the
+    SimClock. Returns the engine (history, state, drop counters populated);
+    raises :class:`ReplayMismatch` at the first event whose re-derivation
+    disagrees with the record."""
+    engine = make_engine(schedule.meta, clock=clock or SimClock())
+    return apply_events(engine, schedule.events, schedule.meta)

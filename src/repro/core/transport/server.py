@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.simclock import WallClock
 from repro.core.transport import codec, wire
+from repro.core.transport.faults import ServerKilled
 from repro.core.transport.replay import ArrivalSchedule, WireEvent
 
 ALIVE, DEAD = "alive", "dead"
@@ -59,6 +60,12 @@ class WireRunStats:
     protocol_errors: int = 0  # frames the engine refused (double updates)
     superseded: int = 0  # updates whose echoed dispatch version was stale
     deadline_hit: bool = False
+    crc_errors: int = 0  # frames the CRC firewall withheld (DESIGN.md §16)
+    snapshots: int = 0  # durable full-engine snapshots written
+    wal_events: int = 0  # events appended to the landing WAL
+    recoveries: int = 0  # 1 on a server recovered from snapshot+WAL
+    faults_injected: int = 0  # server-side FaultPlan ops that fired
+    crashed: bool = False  # the fault plan killed this landing loop
 
 
 class WireServer:
@@ -70,7 +77,9 @@ class WireServer:
     """
 
     def __init__(self, engine, *, host: str = "127.0.0.1", port: int = 0,
-                 record: bool = True, land_delay_s: float = 0.0):
+                 record: bool = True, land_delay_s: float = 0.0,
+                 durable=None, snapshot_every: int = 0, faults=None,
+                 recovered: bool = False):
         fed = engine.fed
         if fed.transport != "socket":
             raise ValueError(
@@ -91,6 +100,15 @@ class WireServer:
         self.land_delay_s = land_delay_s  # test hook: a deliberately slow landing loop
         self._q: queue.Queue = queue.Queue(self.queue_cap)
         self.stats = WireRunStats()
+        # durability (DESIGN.md §16): every recorded event also lands in
+        # the DurableRun's WAL; snapshot_every takes a full-engine snapshot
+        # each N landings (0 = WAL only, recovery replays from the seed)
+        self.durable = durable
+        self.snapshot_every = snapshot_every
+        self.faults = faults  # server-side FaultPlan (kill@M, corrupt dispatches)
+        self._landings_since_snap = 0
+        if recovered:
+            self.stats.recoveries = 1
         self.schedule = ArrivalSchedule(meta={}) if record else None
         self._lock = threading.Lock()  # conns / last_seen / stats counters
         self._conns: dict[int, socket.socket] = {}
@@ -134,6 +152,8 @@ class WireServer:
             self._listener.close()
         except OSError:
             pass
+        if self.durable is not None:
+            self.durable.close()  # graceful stop: flush + fsync the WAL tail
 
     # -- reader side (per-connection threads; never touch the engine) --------
 
@@ -144,6 +164,8 @@ class WireServer:
             except OSError:
                 return
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            if self.faults is not None:
+                sock = self.faults.wrap(sock, side="server")
             threading.Thread(
                 target=self._reader, args=(sock,), name="wire-reader", daemon=True
             ).start()
@@ -176,6 +198,14 @@ class WireServer:
                 frames = parser.feed(data)
             except ValueError:
                 break  # corrupt stream: drop the connection, liveness handles it
+            if parser.crc_errors:
+                # the CRC firewall caught line damage (DESIGN.md §16): count
+                # it and drop the connection — a stream that corrupted one
+                # byte can't be trusted to have framed the next honestly.
+                # The worker's reconnect path (HELLO -> redispatch) recovers.
+                with self._lock:
+                    self.stats.crc_errors += parser.crc_errors
+                break
             for ftype, payload in frames:
                 if ftype == wire.HELLO:
                     client = wire.parse_hello(payload)
@@ -228,6 +258,9 @@ class WireServer:
     def _record(self, ev: WireEvent) -> None:
         if self.schedule is not None:
             self.schedule.events.append(ev)
+        if self.durable is not None:
+            self.durable.append_event(ev)
+            self.stats.wal_events += 1
 
     def _check_liveness(self, t: float) -> None:
         timeout = self.fed.heartbeat_timeout_s
@@ -315,4 +348,52 @@ class WireServer:
                     # deferred reconnects were staged, hence participants:
                     # the flush dispatch above covered them
                     self._deferred.clear()
+                if not res.dropped:
+                    self._landings_since_snap += 1
+                    if (self.durable is not None and self.snapshot_every
+                            and self._landings_since_snap >= self.snapshot_every):
+                        self.durable.snapshot(self.engine)
+                        self.stats.snapshots += 1
+                        self._landings_since_snap = 0
+                    if self.faults is not None:
+                        try:
+                            self.faults.maybe_kill(self.stats.landed)
+                        except ServerKilled:
+                            # the kill -9 model: mark, slam every socket
+                            # shut (no BYE), leave the WAL exactly as the
+                            # last append left it, and propagate — the
+                            # harness's recovery path takes over from disk
+                            self.stats.crashed = True
+                            self.stats.faults_injected = self.faults.total_fired
+                            self.kill()
+                            raise
+        if self.faults is not None:
+            self.stats.faults_injected = self.faults.total_fired
         return self.stats
+
+    def kill(self) -> None:
+        """Abrupt shutdown — the in-process stand-in for ``kill -9``: no
+        BYE frames, no WAL close, sockets slammed. Workers see a bare EOF/
+        reset and enter their reconnect-with-backoff loop."""
+        self._stopping.set()
+        with self._lock:
+            conns = dict(self._conns)
+        for sock in conns.values():
+            try:
+                sock.close()
+            except OSError:
+                pass
+        # pop a blocked accept() before closing: on Linux the in-flight
+        # accept call keeps the listening socket — and its port — alive
+        # past close(), so without this the recovery path's rebind of the
+        # same port races against the next worker reconnect
+        try:
+            socket.create_connection((self.host, self.port), timeout=0.2).close()
+        except OSError:
+            pass
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=2.0)

@@ -1,8 +1,10 @@
-"""Length-prefixed wire framing for the federation transport (DESIGN.md §14).
+"""Length-prefixed wire framing for the federation transport (DESIGN.md §14,
+crash-tolerance + CRC in §16).
 
 One frame on the socket is::
 
-    u32 length (big-endian, of everything after itself)
+    u32 length (big-endian, of everything after the CRC field)
+    u32 crc32  (of everything after itself: type byte + payload)
     u8  frame type
     ... type-specific payload
 
@@ -26,17 +28,27 @@ Frame types (client -> server unless noted):
     HEARTBEAT  client_id u32 — liveness only, never touches the engine.
     BYE        (server -> client) empty — orderly shutdown.
 
+The CRC is the corruption firewall (DESIGN.md §16): a flipped byte anywhere
+in the body is *detected* — the parser counts it in ``crc_errors`` and
+withholds the frame — instead of landing corrupt model bytes into the
+engine and silently diverging from the replay. A mismatched frame is never
+yielded; the endpoints treat a CRC error as a poisoned connection (drop it
+and let the reconnect/redispatch path recover), because a stream that
+corrupted one byte cannot be trusted to have framed the next one honestly.
+
 `FrameParser` is an incremental decoder: feed it arbitrary byte chunks
 (TCP gives no message boundaries — frames arrive split and coalesced) and
 it yields complete frames in order. The hypothesis round-trip suite in
 tests/test_packing_props.py pins encode->feed->parse identity under
-adversarial chunkings.
+adversarial chunkings, and corrupted-byte sweeps in tests/test_transport.py
+pin that no corruption ever parses.
 """
 from __future__ import annotations
 
 import struct
+import zlib
 
-PROTOCOL_VERSION = 1
+PROTOCOL_VERSION = 2  # v2: CRC32 field between the length prefix and the body
 
 HELLO = 1
 DISPATCH = 2
@@ -47,10 +59,13 @@ BYE = 5
 FRAME_TYPES = (HELLO, DISPATCH, UPDATE, HEARTBEAT, BYE)
 
 _LEN = struct.Struct("!I")
+_CRC = struct.Struct("!I")
 _HELLO = struct.Struct("!IH")
 _DISPATCH = struct.Struct("!Q")
 _UPDATE = struct.Struct("!IIQf")
 _HEARTBEAT = struct.Struct("!I")
+
+HEADER_BYTES = _LEN.size + _CRC.size  # per-frame framing overhead before the body
 
 # a frame larger than this is a protocol error, not a big model: the row
 # payload of a 314B-param arch ships sharded, never as one frame
@@ -58,13 +73,13 @@ MAX_FRAME = 1 << 31
 
 
 def encode_frame(ftype: int, payload: bytes = b"") -> bytes:
-    """One wire frame: length prefix + type byte + payload."""
+    """One wire frame: length prefix + CRC32 + type byte + payload."""
     if ftype not in FRAME_TYPES:
         raise ValueError(f"unknown frame type {ftype}")
     body = bytes([ftype]) + payload
     if len(body) > MAX_FRAME:
         raise ValueError(f"frame of {len(body)} bytes exceeds MAX_FRAME")
-    return _LEN.pack(len(body)) + body
+    return _LEN.pack(len(body)) + _CRC.pack(zlib.crc32(body)) + body
 
 
 class FrameParser:
@@ -72,12 +87,18 @@ class FrameParser:
 
     `feed(chunk)` returns every frame completed by that chunk as a list of
     ``(ftype, payload)`` tuples; partial frames are buffered across calls.
-    The parser is transport-agnostic: the socket reader threads, the replay
-    tooling, and the property tests all share it.
+    A frame whose CRC32 does not match is *withheld* — counted in
+    ``crc_errors``, its bytes discarded, parsing continues at the next
+    length prefix — so a corrupted frame is detected, never parsed.
+    Structurally impossible streams (absurd lengths, an unknown type under
+    a *valid* CRC) still raise ``ValueError``: those are protocol bugs, not
+    line noise. The parser is transport-agnostic: the socket reader
+    threads, the replay tooling, and the property tests all share it.
     """
 
     def __init__(self):
         self._buf = bytearray()
+        self.crc_errors = 0  # frames withheld because their CRC mismatched
 
     @property
     def pending(self) -> int:
@@ -88,15 +109,21 @@ class FrameParser:
         self._buf.extend(chunk)
         frames: list[tuple[int, bytes]] = []
         while True:
-            if len(self._buf) < _LEN.size:
+            if len(self._buf) < HEADER_BYTES:
                 return frames
             (n,) = _LEN.unpack_from(self._buf, 0)
             if n < 1 or n > MAX_FRAME:
                 raise ValueError(f"corrupt frame length {n}")
-            if len(self._buf) < _LEN.size + n:
+            if len(self._buf) < HEADER_BYTES + n:
                 return frames
-            body = bytes(self._buf[_LEN.size : _LEN.size + n])
-            del self._buf[: _LEN.size + n]
+            (crc,) = _CRC.unpack_from(self._buf, _LEN.size)
+            body = bytes(self._buf[HEADER_BYTES : HEADER_BYTES + n])
+            del self._buf[: HEADER_BYTES + n]
+            if zlib.crc32(body) != crc:
+                # corruption detected: withhold the frame, keep the stream
+                # position (the length prefix still told us where it ended)
+                self.crc_errors += 1
+                continue
             ftype = body[0]
             if ftype not in FRAME_TYPES:
                 raise ValueError(f"unknown frame type {ftype}")

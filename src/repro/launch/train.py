@@ -80,7 +80,13 @@ def _run_socket(args) -> None:
         lr=args.lr,
         wire_codec=args.wire_codec,
     )
-    res = harness.wire_run(meta, args.rounds)
+    res = harness.wire_run(
+        meta, args.rounds,
+        durable_root=args.durable_dir or None,
+        snapshot_every=args.snapshot_every,
+        fault_plan=args.fault_plan,
+        fault_seed=args.fault_seed,
+    )
     if args.record_schedule:
         res.schedule.save(args.record_schedule)
     print(monitor.render_wire(args.arch, res.history, res.stats, args.clients,
@@ -98,6 +104,30 @@ def _run_socket(args) -> None:
         "bytes_up": res.stats.bytes_up,
         "bytes_down": res.stats.bytes_down,
         "deadline_hit": res.stats.deadline_hit,
+        "recovered": res.recovered,
+        "snapshots": res.stats.snapshots,
+        "wal_events": res.stats.wal_events,
+        "crc_errors": res.stats.crc_errors,
+        "faults_injected": res.stats.faults_injected,
+    }))
+
+
+def _restore(path: str) -> None:
+    """Recover an engine from a durable run directory (snapshot + WAL
+    suffix through the jitted row update) and report what came back —
+    the README's 'kill the server mid-round' quickstart verifier."""
+    from repro.checkpoint.durable import DurableRun
+
+    run = DurableRun(path)
+    engine, replayed = run.recover_engine()
+    print(json.dumps({
+        "restored_from": str(path),
+        "wal_events": run.n_events,
+        "events_replayed": replayed,
+        "version": engine.version,
+        "flushes_recovered": len(engine.history),
+        "staged_window": list(engine.staged()),
+        "final_loss": engine.history[-1].loss if engine.history else float("nan"),
     }))
 
 
@@ -172,6 +202,22 @@ def main() -> None:
     ap.add_argument("--replay-schedule", default="",
                     help="replay a recorded arrival schedule through the SimClock "
                     "engine and exit (no --arch needed; verifies determinism)")
+    ap.add_argument("--durable-dir", default="",
+                    help="socket: durable run directory (landing WAL + engine "
+                    "snapshots; the server becomes kill -9 survivable)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="socket: full-engine snapshot every N landings "
+                    "(0 = WAL only; needs --durable-dir)")
+    ap.add_argument("--fault-plan", default="",
+                    help="socket: deterministic fault injection spec "
+                    "(transport/faults.py grammar, e.g. "
+                    "'client.corrupt@2:update;kill@6'); with --durable-dir a "
+                    "kill@M recovers automatically from snapshot+WAL")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="socket: seed for the fault plan's deterministic choices")
+    ap.add_argument("--restore", default="",
+                    help="recover an engine from a --durable-dir directory and "
+                    "print the recovery report (no --arch needed; exits)")
     ap.add_argument("--participation", default="full", choices=["full", "masked", "compact"],
                     help="round body: full (everyone trains), masked (cond-gated), "
                     "compact (static-K gather; see --max-participants)")
@@ -214,6 +260,13 @@ def main() -> None:
     if args.replay_schedule:
         _replay_schedule(args.replay_schedule)
         return
+    if args.restore:
+        _restore(args.restore)
+        return
+    if args.snapshot_every and not args.durable_dir:
+        ap.error("--snapshot-every needs --durable-dir")
+    if (args.durable_dir or args.fault_plan) and args.transport != "socket":
+        ap.error("--durable-dir/--fault-plan belong to --transport socket")
     if args.transport == "socket":
         if args.mode != "async":
             ap.error("--transport socket is the async control plane over a real "

@@ -1,4 +1,4 @@
-"""A federated client worker process (DESIGN.md §14).
+"""A federated client worker process (DESIGN.md §14, resilience §16).
 
 ``python -m repro.launch.worker --host H --port P --meta meta.json
 --client-ids 0,1`` connects each client id to a `WireServer` over TCP and
@@ -20,10 +20,23 @@ several clients as threads sharing the one jitted update (amortizing the
 JAX import), while fault-scenario clients run alone so crashing or
 delaying them is isolated.
 
+Resilience (DESIGN.md §16): every connect goes through
+`transport.retry.connect_with_retry` — exponential backoff with
+deterministic per-client jitter, bounded attempts — so a worker that races
+the server's bind, or outlives a server crash, retries instead of dying.
+The client loop is a *session* loop: any connection death (EOF, reset, a
+CRC-poisoned stream, a dispatch that never arrives within
+``--dispatch-timeout``) tears down the session and reconnects; ``seq``
+survives sessions so the batch sequence stays deterministic, and the
+server's version-echo gate squares away whatever was in flight.
+
 Scenario hooks: ``--train-delay`` sleeps before each upload (a straggler;
 with a small ``max_staleness`` its updates arrive stale and get dropped),
 ``--crash-after N`` hard-kills the process (``os._exit``) after N uploads
-(mid-round crash), ``--max-updates N`` exits each client loop cleanly.
+(mid-round crash), ``--max-updates N`` exits each client loop cleanly,
+``--fault-plan SPEC`` installs a client-side `transport.faults.FaultPlan`
+on every connection (corrupt/drop/dup/delay/sever this worker's outbound
+frames, deterministically).
 """
 from __future__ import annotations
 
@@ -38,6 +51,7 @@ import time
 import numpy as np
 
 CRASH_EXIT_CODE = 17
+RECONNECT, DONE = "reconnect", "done"
 
 
 def _parse_args(argv=None):
@@ -54,18 +68,44 @@ def _parse_args(argv=None):
                    help="per-client clean exit after this many uploads")
     p.add_argument("--heartbeat-s", type=float, default=0.0,
                    help="override the meta heartbeat period (0 = use meta)")
+    p.add_argument("--connect-retries", type=int, default=10,
+                   help="bounded connect attempts per session (retry.Backoff)")
+    p.add_argument("--backoff-base", type=float, default=0.05,
+                   help="first backoff delay, doubling per attempt")
+    p.add_argument("--backoff-max", type=float, default=2.0,
+                   help="per-delay cap on the backoff schedule")
+    p.add_argument("--dispatch-timeout", type=float, default=15.0,
+                   help="seconds to wait for a frame before reconnecting "
+                        "(covers a dropped dispatch or update)")
+    p.add_argument("--max-sessions", type=int, default=50,
+                   help="bound on reconnect sessions per client (safety net)")
+    p.add_argument("--fault-plan", default="",
+                   help="client-side faults.FaultPlan spec (e.g. "
+                        "'corrupt@2:update;sever@5000')")
+    p.add_argument("--fault-seed", type=int, default=0,
+                   help="seed for the fault plan's deterministic choices")
     return p.parse_args(argv)
 
 
 class _Conn:
-    """One client's socket: framed sends under a lock (the heartbeat thread
-    and the training loop both write) and a blocking framed-receive."""
+    """One client's socket for one session: framed sends under a lock (the
+    heartbeat thread and the training loop both write), a framed-receive
+    with the dispatch timeout, and the CRC-poisoned-stream check."""
 
-    def __init__(self, host: str, port: int, client: int, wire):
+    def __init__(self, host: str, port: int, client: int, wire, args, plan=None):
+        from repro.core.transport.retry import Backoff, connect_with_retry
+
         self.wire = wire
         self.client = client
-        self.sock = socket.create_connection((host, port), timeout=60.0)
-        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.sock = connect_with_retry(
+            host, port,
+            Backoff(base=args.backoff_base, cap=args.backoff_max,
+                    attempts=args.connect_retries, seed=client),
+            timeout=10.0,
+        )
+        self.sock.settimeout(args.dispatch_timeout)
+        if plan is not None:
+            self.sock = plan.wrap(self.sock, side="client")
         self._parser = wire.FrameParser()
         self._send_lock = threading.Lock()
         self._frames: list = []
@@ -75,12 +115,16 @@ class _Conn:
             self.sock.sendall(frame)
 
     def recv_frame(self):
-        """Next (ftype, payload), or None on EOF."""
+        """Next (ftype, payload); None on EOF or a CRC-poisoned stream."""
         while not self._frames:
             data = self.sock.recv(1 << 16)
             if not data:
                 return None
             self._frames.extend(self._parser.feed(data))
+            if self._parser.crc_errors:
+                # the server's bytes arrived damaged: treat the whole
+                # connection as poisoned and resync via reconnect
+                return None
         return self._frames.pop(0)
 
     def close(self) -> None:
@@ -99,8 +143,12 @@ def _heartbeat_loop(conn: "_Conn", period: float, stop: threading.Event) -> None
             return
 
 
-def run_client(client: int, args, meta: dict, cfg, update, crash_budget) -> None:
-    """One client's dispatch/train/upload loop (runs in its own thread)."""
+def _session(client: int, args, meta: dict, cfg, update, crash_budget,
+             seq: int, plan) -> tuple[str, int]:
+    """One connection's dispatch/train/upload loop. Returns (outcome, seq):
+    DONE on BYE/--max-updates, RECONNECT on any connection death — the
+    caller re-enters with the preserved ``seq`` so the batch sequence
+    (and with it the replay) is untouched by how many sessions it took."""
     from repro.core.transport import codec, replay, wire
 
     import jax.numpy as jnp
@@ -108,7 +156,7 @@ def run_client(client: int, args, meta: dict, cfg, update, crash_budget) -> None
     wire_codec = meta.get("wire_codec", "dense")
     block = int(meta.get("quant_block", 1024))
     hb = args.heartbeat_s or float(meta.get("heartbeat_s", 0.2))
-    conn = _Conn(args.host, args.port, client, wire)
+    conn = _Conn(args.host, args.port, client, wire, args, plan)
     stop = threading.Event()
     try:
         conn.send(wire.pack_hello(client))
@@ -116,14 +164,16 @@ def run_client(client: int, args, meta: dict, cfg, update, crash_budget) -> None
             target=_heartbeat_loop, args=(conn, hb, stop),
             name=f"hb-{client}", daemon=True,
         ).start()
-        seq = 0
         while True:
-            got = conn.recv_frame()
+            try:
+                got = conn.recv_frame()
+            except socket.timeout:
+                return RECONNECT, seq  # dispatch lost in flight: resync
             if got is None:
-                return
+                return RECONNECT, seq  # server gone or stream poisoned
             ftype, payload = got
             if ftype == wire.BYE:
-                return
+                return DONE, seq
             if ftype != wire.DISPATCH:
                 continue
             version, row_buf = wire.parse_dispatch(payload)
@@ -139,16 +189,34 @@ def run_client(client: int, args, meta: dict, cfg, update, crash_budget) -> None
             if crash_budget is not None and crash_budget.hit():
                 os._exit(CRASH_EXIT_CODE)  # mid-round crash: no BYE, no cleanup
             if args.max_updates and seq >= args.max_updates:
-                return
+                try:
+                    conn.send(wire.pack_bye())  # orderly exit, best effort
+                except OSError:
+                    pass
+                return DONE, seq
     except OSError:
-        return  # server gone; the process exit path below cleans up
+        return RECONNECT, seq  # reset/sever mid-send: next session resyncs
     finally:
         stop.set()
-        try:
-            conn.send(wire.pack_bye())
-        except OSError:
-            pass
         conn.close()
+
+
+def run_client(client: int, args, meta: dict, cfg, update, crash_budget,
+               plan=None) -> None:
+    """One client's session loop (runs in its own thread): reconnect —
+    through the bounded backoff — until the work is DONE or the retry
+    budget/session bound runs out."""
+    from repro.core.transport.retry import RetriesExhausted
+
+    seq = 0
+    for _ in range(max(args.max_sessions, 1)):
+        try:
+            outcome, seq = _session(client, args, meta, cfg, update,
+                                    crash_budget, seq, plan)
+        except RetriesExhausted:
+            return  # the server never came back within the backoff budget
+        if outcome == DONE:
+            return
 
 
 class _CrashBudget:
@@ -181,10 +249,17 @@ def main(argv=None) -> int:
 
     update = build_row_update(cfg, fed, opt)
     crash = _CrashBudget(args.crash_after) if args.crash_after else None
+    plan = None
+    if args.fault_plan:
+        from repro.core.transport.faults import FaultPlan
+
+        # one plan per process: counters persist across this worker's
+        # reconnects, so 'drop@1:update' fires once, not once per session
+        plan = FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
 
     threads = [
         threading.Thread(
-            target=run_client, args=(c, args, meta, cfg, update, crash),
+            target=run_client, args=(c, args, meta, cfg, update, crash, plan),
             name=f"client-{c}",
         )
         for c in clients

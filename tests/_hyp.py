@@ -8,7 +8,7 @@ property tests meaningful as smoke tests and — more importantly — keeps the
 suite collectable in containers where hypothesis isn't baked in.
 
 Only the strategy combinators this repo uses are implemented: integers,
-floats, lists, builds.
+floats, lists, builds, sampled_from, binary.
 """
 from __future__ import annotations
 
@@ -46,6 +46,17 @@ except ModuleNotFoundError:
                     elements.example(r)
                     for _ in range(int(r.integers(min_size, max_size + 1)))
                 ]
+            )
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda r: opts[int(r.integers(0, len(opts)))])
+
+        @staticmethod
+        def binary(min_size=0, max_size=10):
+            return _Strategy(
+                lambda r: bytes(r.integers(0, 256, int(r.integers(min_size, max_size + 1)), dtype=_np.uint8))
             )
 
         @staticmethod

@@ -1,0 +1,750 @@
+"""Crash-tolerance suite (DESIGN.md §16): durable round state, server
+recovery, worker retry/backoff, and the deterministic fault layer.
+
+Three tiers, cheapest first:
+
+  - pure-unit: the `retry.Backoff` schedule (deterministic, seeded,
+    bounded), the `faults.FaultPlan` grammar and its per-op persistent
+    counters, the snapshot file format and WAL line discipline
+    (`checkpoint.durable`) — no engine, no sockets beyond socketpairs;
+  - in-process engine: `export_state`/`import_state` round-trips MID
+    aggregation window with ``topk_ef`` (error-feedback residuals and
+    fmix32 round counters are aggregator-private leaves — exactly the
+    state a naive params-only checkpoint would lose), and
+    `DurableRun.recover_engine` pinned bitwise against an uninterrupted
+    engine driven over the same events;
+  - real wire: kill the server mid-round with ``kill@M``, restore from
+    snapshot+WAL on the SAME port while worker processes ride their
+    backoff loops, and pin the recovered run's final global against a
+    SimClock replay of the COMBINED (WAL) schedule — bit-for-bit dense,
+    1e-5 under quant8. Plus the storm scenarios: corrupted frames are
+    counted and survived (CRC firewall + reconnect), dropped dispatches
+    are covered by the worker's dispatch timeout, duplicated updates die
+    at the version-echo gate, severed connections reconnect, and every
+    injected fault shows up in the counters.
+"""
+import json
+import os
+import socket
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint import durable as dr
+from repro.checkpoint.store import ObjectStore
+from repro.core import async_engine as ae
+from repro.core.simclock import SimClock, WallClock
+from repro.core.transport import codec, harness, wire
+from repro.core.transport import replay as rp
+from repro.core.transport.faults import FaultPlan, ServerKilled
+from repro.core.transport.retry import Backoff, RetriesExhausted, connect_with_retry
+
+TINY = harness.TINY_OVERRIDES
+
+
+def _meta(**kw):
+    base = dict(overrides=TINY, n_clients=3, buffer_size=2, max_staleness=1,
+                seq=8, batch=2)
+    base.update(kw)
+    return harness.make_meta(**base)
+
+
+# ---------------------------------------------------------------------------
+# retry.Backoff — the deterministic reconnect schedule
+# ---------------------------------------------------------------------------
+
+def test_backoff_schedule_is_deterministic():
+    a = Backoff(base=0.05, cap=2.0, attempts=8, seed=3)
+    b = Backoff(base=0.05, cap=2.0, attempts=8, seed=3)
+    assert a.delays() == b.delays()
+    assert len(a.delays()) == 7  # no sleep after the final attempt
+
+
+def test_backoff_seeds_desynchronize_the_stampede():
+    # C workers restarted together must NOT sleep identical schedules
+    schedules = [tuple(Backoff(seed=c).delays()) for c in range(8)]
+    assert len(set(schedules)) == len(schedules)
+
+
+def test_backoff_delays_grow_and_cap():
+    bo = Backoff(base=0.1, cap=0.8, attempts=10, jitter=0.0)
+    d = bo.delays()
+    assert d[:4] == [0.1, 0.2, 0.4, 0.8]
+    assert all(x == 0.8 for x in d[4:])  # capped, never unbounded
+    # jitter only ever shortens a delay (never pushes past the cap)
+    jit = Backoff(base=0.1, cap=0.8, attempts=10, jitter=0.5, seed=1).delays()
+    assert all(0 < j <= x for j, x in zip(jit, d))
+
+
+def test_backoff_validates_arguments():
+    with pytest.raises(ValueError):
+        Backoff(base=0.0)
+    with pytest.raises(ValueError):
+        Backoff(base=1.0, cap=0.5)
+    with pytest.raises(ValueError):
+        Backoff(jitter=1.0)
+    with pytest.raises(ValueError):
+        Backoff(attempts=0)
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def test_connect_retry_exhausts_with_the_exact_schedule():
+    bo = Backoff(base=0.01, cap=0.02, attempts=4, seed=5)
+    slept = []
+    with pytest.raises(RetriesExhausted) as ei:
+        connect_with_retry("127.0.0.1", _free_port(), bo,
+                           timeout=0.2, sleep=slept.append)
+    assert slept == bo.delays()  # the sleeps ARE the deterministic schedule
+    assert isinstance(ei.value.__cause__, OSError)  # last failure chained
+
+
+def test_connect_retry_succeeds_once_the_server_binds():
+    # the listener appears only after the first refusal — the race the
+    # single create_connection call used to lose
+    port = _free_port()
+    listener = socket.socket()
+    attempts = []
+
+    def sleep(_):
+        attempts.append(1)
+        if len(attempts) == 2:
+            listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+            listener.bind(("127.0.0.1", port))
+            listener.listen(1)
+
+    try:
+        sock = connect_with_retry("127.0.0.1", port,
+                                  Backoff(base=0.001, attempts=8), sleep=sleep)
+        sock.close()
+    finally:
+        listener.close()
+    assert len(attempts) == 2  # refused twice, connected on the third
+
+
+# ---------------------------------------------------------------------------
+# faults.FaultPlan — grammar, counters, socket wrapping
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_parses_the_grammar():
+    plan = FaultPlan.parse(
+        "corrupt@2:update, server.drop@1:dispatch; delay@3:heartbeat:0.5;"
+        "sever@4096; kill@7"
+    )
+    kinds = [(op.side, op.kind, op.arg, op.ftype) for op in plan.ops]
+    assert kinds == [
+        ("client", "corrupt", 2, wire.UPDATE),
+        ("server", "drop", 1, wire.DISPATCH),
+        ("client", "delay", 3, wire.HEARTBEAT),
+        ("client", "sever", 4096, None),
+        ("server", "kill", 7, None),  # kill is forced server-side
+    ]
+    assert plan.ops[2].seconds == 0.5
+    assert plan.total_fired == 0
+
+
+@pytest.mark.parametrize("bad", [
+    "", "  ;  ", "explode@1", "martian.drop@1", "drop", "drop@0",
+    "delay@1:update",  # delay without a :seconds qualifier
+])
+def test_fault_plan_rejects_bad_specs(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(bad)
+
+
+def _pair():
+    a, b = socket.socketpair()
+    return a, b
+
+
+def _drain(sock, parser, timeout=2.0):
+    sock.settimeout(timeout)
+    frames = []
+    try:
+        while True:
+            data = sock.recv(1 << 16)
+            if not data:
+                break
+            frames.extend(parser.feed(data))
+    except socket.timeout:
+        pass
+    return frames
+
+
+def test_corrupt_fault_is_caught_by_the_crc_not_by_desync():
+    plan = FaultPlan.parse("corrupt@1:update", seed=9)
+    a, b = _pair()
+    try:
+        fa = plan.wrap(a, side="client")
+        fa.sendall(wire.pack_update(0, 0, 1, 0.5, b"\x00" * 64))
+        fa.sendall(wire.pack_hello(0))  # the stream must stay framed after
+        a.close()
+        parser = wire.FrameParser()
+        frames = _drain(b, parser)
+    finally:
+        b.close()
+    assert plan.total_fired == 1 and plan.fired == {"corrupt@1:update": 1}
+    assert parser.crc_errors == 1  # the damaged update was withheld
+    assert [t for t, _ in frames] == [wire.HELLO]  # the next frame parsed fine
+    assert parser.pending == 0
+
+
+def test_drop_and_dup_faults_edit_the_frame_stream():
+    plan = FaultPlan.parse("drop@1:heartbeat;dup@1:hello")
+    a, b = _pair()
+    try:
+        fa = plan.wrap(a, side="client")
+        fa.sendall(wire.pack_heartbeat(3))  # swallowed
+        fa.sendall(wire.pack_hello(3))     # doubled
+        fa.sendall(wire.pack_bye())
+        a.close()
+        frames = _drain(b, wire.FrameParser())
+    finally:
+        b.close()
+    assert [t for t, _ in frames] == [wire.HELLO, wire.HELLO, wire.BYE]
+    assert plan.total_fired == 2
+
+
+def test_delay_fault_sleeps_before_sending():
+    plan = FaultPlan.parse("delay@1:bye:0.2")
+    a, b = _pair()
+    try:
+        fa = plan.wrap(a, side="client")
+        t0 = time.monotonic()
+        fa.sendall(wire.pack_bye())
+        took = time.monotonic() - t0
+    finally:
+        a.close()
+        b.close()
+    assert took >= 0.2
+    assert plan.fired == {"delay@1:bye:0.2": 1}
+
+
+def test_sever_fault_slams_the_connection_and_counts():
+    plan = FaultPlan.parse("sever@10")
+    a, b = _pair()
+    try:
+        fa = plan.wrap(a, side="client")
+        with pytest.raises(ConnectionResetError):
+            fa.sendall(wire.pack_update(0, 0, 1, 0.0, b"\x00" * 32))
+    finally:
+        a.close()
+        b.close()
+    assert plan.total_fired == 1
+
+
+def test_fault_counters_persist_across_reconnects():
+    # drop@1:update must fire ONCE per plan, not once per wrapped socket —
+    # otherwise the worker's retrained update would be swallowed forever
+    plan = FaultPlan.parse("drop@1:update")
+    got = []
+    for _ in range(2):  # two sessions, same plan
+        a, b = _pair()
+        try:
+            fa = plan.wrap(a, side="client")
+            fa.sendall(wire.pack_update(0, 0, 1, 0.0, b"\x01"))
+            a.close()
+            got.append(len(_drain(b, wire.FrameParser())))
+        finally:
+            b.close()
+    assert got == [0, 1]  # first swallowed, second delivered
+    assert plan.total_fired == 1
+
+
+def test_type_qualifier_counts_only_matching_frames():
+    plan = FaultPlan.parse("drop@2:update")
+    a, b = _pair()
+    try:
+        fa = plan.wrap(a, side="client")
+        # heartbeats interleave racily in real runs: they must not advance
+        # the update counter or the plan stops being deterministic
+        fa.sendall(wire.pack_heartbeat(0))
+        fa.sendall(wire.pack_update(0, 0, 1, 0.0, b"\x01"))
+        fa.sendall(wire.pack_heartbeat(0))
+        fa.sendall(wire.pack_update(0, 1, 1, 0.0, b"\x01"))  # the 2nd update
+        fa.sendall(wire.pack_heartbeat(0))
+        a.close()
+        frames = _drain(b, wire.FrameParser())
+    finally:
+        b.close()
+    types = [t for t, _ in frames]
+    assert types.count(wire.UPDATE) == 1
+    assert types.count(wire.HEARTBEAT) == 3
+
+
+def test_kill_trigger_fires_once_at_threshold():
+    plan = FaultPlan.parse("kill@3")
+    assert plan.kill_after_landings() == 3
+    plan.maybe_kill(1)
+    plan.maybe_kill(2)
+    with pytest.raises(ServerKilled):
+        plan.maybe_kill(3)
+    plan.maybe_kill(99)  # done ops never re-fire: the restored server lives
+    assert plan.kill_after_landings() is None
+    assert plan.fired == {"kill@3": 1}
+
+
+# ---------------------------------------------------------------------------
+# checkpoint.durable — snapshot file format + WAL discipline
+# ---------------------------------------------------------------------------
+
+def _fake_snap(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "arrays": {
+            "params": rng.normal(size=(3, 17)).astype(np.float32),
+            "agg_0": rng.normal(size=17).astype(np.float32),
+            "counter": np.asarray([5], np.uint32),
+        },
+        "scalars": {"round": 4, "version": 4, "losses": [0.5, 0.25]},
+    }
+
+
+def test_snapshot_file_roundtrip_is_bitwise(tmp_path):
+    snap = _fake_snap()
+    n = dr.write_snapshot(tmp_path / "s.ckpt", snap)
+    assert n == (tmp_path / "s.ckpt").stat().st_size
+    back = dr.read_snapshot(tmp_path / "s.ckpt")
+    assert back["scalars"] == snap["scalars"]
+    assert set(back["arrays"]) == set(snap["arrays"])
+    for k, v in snap["arrays"].items():
+        np.testing.assert_array_equal(back["arrays"][k], v)
+        assert back["arrays"][k].dtype == v.dtype
+
+
+def test_snapshot_crc_rejects_every_kind_of_damage(tmp_path):
+    p = tmp_path / "s.ckpt"
+    dr.write_snapshot(p, _fake_snap())
+    blob = p.read_bytes()
+    # flipped body byte -> CRC mismatch
+    bad = bytearray(blob)
+    bad[len(blob) // 2] ^= 0xFF
+    p.write_bytes(bytes(bad))
+    with pytest.raises(ValueError):
+        dr.read_snapshot(p)
+    # truncation (the torn-write model atomic rename prevents, belt+braces)
+    p.write_bytes(blob[:-7])
+    with pytest.raises(ValueError):
+        dr.read_snapshot(p)
+    # wrong magic
+    p.write_bytes(b"NOTASNAP" + blob[8:])
+    with pytest.raises(ValueError):
+        dr.read_snapshot(p)
+
+
+def test_atomic_write_leaves_no_tmp_file(tmp_path):
+    dr.atomic_write_bytes(tmp_path / "x.bin", b"payload")
+    assert (tmp_path / "x.bin").read_bytes() == b"payload"
+    assert list(tmp_path.glob("*.tmp")) == []
+
+
+def _events(n, start=0):
+    return [rp.WireEvent("dispatch", float(i), i % 3, i) for i in range(start, n)]
+
+
+def test_wal_torn_tail_is_discarded_not_fatal(tmp_path):
+    run = dr.DurableRun(tmp_path, {"n": 1})
+    for ev in _events(5):
+        run.append_event(ev)
+    run.close()
+    wal = next(tmp_path.glob("wal_*.jsonl"))
+    text = wal.read_text()
+    wal.write_text(text[: len(text) - 9])  # the crash tore the last line
+    run2 = dr.DurableRun(tmp_path)
+    evs = run2.events()
+    assert len(evs) == 4  # everything before the torn line is intact
+    assert [e.version for e in evs] == [0, 1, 2, 3]
+    # ... and a bit-flipped line mid-file ends its segment at that point
+    lines = text.splitlines(keepends=True)
+    lines[2] = lines[2].replace(lines[2][0], "f" if lines[2][0] != "f" else "0", 1)
+    wal.write_text("".join(lines))
+    assert len(dr.DurableRun(tmp_path).events()) == 2
+
+
+def test_wal_segments_concatenate_across_rotations(tmp_path):
+    class _Eng:  # snapshot() only needs export_state()
+        def export_state(self):
+            return _fake_snap()
+
+    run = dr.DurableRun(tmp_path, {"n": 1})
+    evs = _events(7)
+    for i, ev in enumerate(evs):
+        run.append_event(ev)
+        if i in (2, 4):
+            run.snapshot(_Eng())  # rotates the WAL segment
+    run.close()
+    assert len(list(tmp_path.glob("wal_*.jsonl"))) == 3
+    assert len(list(tmp_path.glob("snap_*.ckpt"))) == 2
+    got = dr.DurableRun(tmp_path).events()
+    assert [dataclass_tuple(e) for e in got] == [dataclass_tuple(e) for e in evs]
+
+
+def dataclass_tuple(ev):
+    return (ev.kind, ev.t, ev.client, ev.version, ev.seq, ev.dropped, ev.flush)
+
+
+def test_wal_gap_is_an_error_not_silent_loss(tmp_path):
+    run = dr.DurableRun(tmp_path, {"n": 1})
+
+    class _Eng:
+        def export_state(self):
+            return _fake_snap()
+
+    for i, ev in enumerate(_events(6)):
+        run.append_event(ev)
+        if i == 2:
+            run.snapshot(_Eng())
+    run.close()
+    first = sorted(tmp_path.glob("wal_*.jsonl"))[0]
+    first.unlink()  # lose the first segment entirely
+    with pytest.raises(ValueError, match="WAL gap"):
+        dr.DurableRun(tmp_path).events()
+
+
+def test_durable_reopen_resumes_the_event_counter(tmp_path):
+    run = dr.DurableRun(tmp_path, {"n": 1})
+    for ev in _events(3):
+        run.append_event(ev)
+    run.close()
+    run2 = dr.DurableRun(tmp_path)  # a restarted server reopens the dir
+    assert run2.n_events == 3
+    run2.append_event(rp.WireEvent("dispatch", 9.0, 0, 3))
+    run2.close()
+    assert len(dr.DurableRun(tmp_path).events()) == 4
+    assert dr.DurableRun(tmp_path).meta == {"n": 1}
+
+
+def test_durable_run_requires_meta_on_first_open(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        dr.DurableRun(tmp_path / "fresh")
+
+
+# ---------------------------------------------------------------------------
+# in-process recovery: export/import + recover_engine == uninterrupted run
+# ---------------------------------------------------------------------------
+
+def _drive(meta, n_lands, *, durable=None, snapshot_at=()):
+    """The server's landing loop in miniature: round-robin dispatch/land
+    over a fresh engine, recording every event (and optionally journaling
+    it). Returns (engine, events) — the reference a recovery must match."""
+    eng = rp.make_engine(meta, clock=SimClock())
+    cfg = rp.build_cfg(meta)
+    update = ae.build_row_update(
+        cfg, rp.build_fed(meta), rp.build_optimizer(meta),
+        spec=eng.agg.ctx.spec, template=eng.agg.ctx.template,
+    )
+    wc, block = meta["wire_codec"], int(meta["quant_block"])
+    C = int(meta["n_clients"])
+    events, seqs, staged = [], [0] * C, set()
+    t = 0.0
+
+    def record(ev):
+        events.append(ev)
+        if durable is not None:
+            durable.append_event(ev)
+
+    for c in range(C):
+        t += 1.0
+        eng.clock.advance_to(t)
+        record(rp.WireEvent("dispatch", t, c, eng.dispatch(c)))
+    lands, ci = 0, 0
+    while lands < n_lands:
+        c = ci % C
+        ci += 1
+        if c in staged:
+            continue  # a staged row waits for its flush redispatch
+        t += 1.0
+        ver = int(eng.dispatch_version[c])  # echo BEFORE landing moves it
+        base = np.asarray(eng.state["params"][c], np.float32)
+        batch = rp.synth_client_batch(cfg, meta, c, seqs[c])
+        trained, loss = update(jnp.asarray(base), batch)
+        landed = codec.decode_update(
+            codec.encode_update(np.asarray(trained, np.float32), base, wc, block),
+            base,
+        )
+        res = eng.land(c, landed, loss=float(loss), t=t)
+        record(rp.WireEvent(
+            "land", t, c, ver, seq=seqs[c], dropped=res.dropped,
+            flush=-1 if res.flush is None else res.flush.round_idx,
+        ))
+        seqs[c] += 1
+        lands += 1
+        if res.flush is not None:
+            staged.clear()
+        elif not res.dropped:
+            staged.add(c)
+        if durable is not None and lands in snapshot_at:
+            durable.snapshot(eng)
+    return eng, events
+
+
+def _assert_engines_identical(a, b):
+    """Bitwise equality of EVERYTHING export_state covers: packed params,
+    the engine's global copy, dispatch versions, and every aggregator
+    leaf (EF residuals, fmix32 counters) plus the host-side scalars."""
+    sa, sb = a.export_state(), b.export_state()
+    assert set(sa["arrays"]) == set(sb["arrays"])
+    for k in sa["arrays"]:
+        np.testing.assert_array_equal(sa["arrays"][k], sb["arrays"][k], err_msg=k)
+    # n_history is informational: round RECORDS are host-side dataclasses a
+    # snapshot can't carry — recovery re-earns them by replaying the WAL
+    # suffix (and the harness splices the pre-crash prefix back in)
+    drop = {"n_history"}
+    assert {k: v for k, v in sa["scalars"].items() if k not in drop} == \
+           {k: v for k, v in sb["scalars"].items() if k not in drop}
+
+
+def test_export_import_roundtrips_mid_window_with_topk_ef():
+    # topk_ef carries aggregator-private leaves (error-feedback residual
+    # rows + round counters) that params-only checkpointing would lose;
+    # 4 landings with buffer_size=2 leaves the window HALF FULL — the
+    # hardest point to snapshot
+    meta = _meta(aggregation="topk_ef", buffer_size=2)
+    eng, _ = _drive(meta, 5)
+    fresh = rp.make_engine(meta, clock=SimClock())
+    fresh.import_state(eng.export_state())
+    _assert_engines_identical(eng, fresh)
+    assert fresh.version == eng.version
+    assert fresh.dropped_total == eng.dropped_total
+
+
+def test_recover_engine_equals_uninterrupted_run(tmp_path):
+    # the tentpole invariant, in-process: snapshot after 3 landings + WAL
+    # suffix replayed == the engine that never crashed, bit for bit —
+    # including the EF residuals only export_state knows to save
+    meta = _meta(aggregation="topk_ef", buffer_size=2)
+    run = dr.DurableRun(tmp_path, meta)
+    ref, events = _drive(meta, 6, durable=run, snapshot_at=(3,))
+    run.close()
+    rec, n_replayed = dr.DurableRun(tmp_path).recover_engine(clock=SimClock())
+    assert 0 < n_replayed < len(events)  # the snapshot really cut the replay
+    _assert_engines_identical(ref, rec)
+    # history re-earned by the suffix replay is a SUFFIX of the reference's
+    got = [(r.round_idx, r.loss) for r in rec.history]
+    assert got and got == [(r.round_idx, r.loss) for r in ref.history][-len(got):]
+
+
+def test_recover_engine_without_snapshot_degrades_to_full_replay(tmp_path):
+    meta = _meta(buffer_size=2)
+    run = dr.DurableRun(tmp_path, meta)
+    ref, events = _drive(meta, 4, durable=run)
+    run.close()
+    rec, n_replayed = dr.DurableRun(tmp_path).recover_engine(clock=SimClock())
+    assert n_replayed == len(events)  # no snapshot: the WAL alone suffices
+    _assert_engines_identical(ref, rec)
+
+
+def test_recover_engine_falls_back_past_a_corrupt_snapshot(tmp_path):
+    meta = _meta(buffer_size=2)
+    run = dr.DurableRun(tmp_path, meta)
+    ref, _ = _drive(meta, 6, durable=run, snapshot_at=(2, 4))
+    run.close()
+    newest = sorted(tmp_path.glob("snap_*.ckpt"))[-1]
+    blob = bytearray(newest.read_bytes())
+    blob[-3] ^= 0x55  # damage the newest snapshot's body
+    newest.write_bytes(bytes(blob))
+    run2 = dr.DurableRun(tmp_path)
+    at, _snap = run2.latest_snapshot()  # fell back to the older one
+    assert f"snap_{at:08d}.ckpt" != newest.name
+    rec, _ = run2.recover_engine(clock=SimClock())
+    _assert_engines_identical(ref, rec)
+
+
+def test_wall_clock_start_offset_continues_the_timeline():
+    # a recovered server's clock resumes AT the crash point, never rewinds:
+    # the combined schedule's stamps must stay monotonic across the splice
+    clk = WallClock(start=123.5)
+    assert clk.now() == 123.5
+    time.sleep(0.01)
+    assert clk.sync() > 123.5  # host time accrues ON TOP of the offset
+    assert clk.peek() >= clk.now()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint.store satellites — atomic manifest, named KeyErrors
+# ---------------------------------------------------------------------------
+
+def test_manifest_write_is_atomic(tmp_path):
+    store = ObjectStore(tmp_path / "store")
+    store.put_model("taskA", 0, {"w": np.zeros(3, np.float32)})
+    assert list((tmp_path / "store").rglob("*.tmp")) == []
+    # a stale tmp from a crashed writer must not confuse a reopen
+    (tmp_path / "store" / "manifest.json.tmp").write_text("garbage{{{")
+    again = ObjectStore(tmp_path / "store")
+    assert "taskA" in again.manifest
+
+
+def test_get_model_keyerror_names_what_exists(tmp_path):
+    store = ObjectStore(tmp_path / "store")
+    store.put_model("taskA", 0, {"w": np.zeros(3, np.float32)})
+    with pytest.raises(KeyError, match="taskA"):
+        store.get_model("nope", 0)
+    with pytest.raises(KeyError, match=r"round"):
+        store.get_model("taskA", 7)
+
+
+# ---------------------------------------------------------------------------
+# real wire: kill + restore, storms, and the counters that prove it
+# ---------------------------------------------------------------------------
+
+def _pin_replay(res):
+    eng = rp.replay(res.schedule)
+    np.testing.assert_array_equal(
+        np.asarray(eng.global_packed_row(), np.float32), res.global_row
+    )
+    return eng
+
+
+# recovery includes a fresh jit compile; workers must outlast it
+_PATIENT = ["--connect-retries", "60", "--backoff-max", "1.0"]
+
+
+@pytest.mark.parametrize("wire_codec,tol", [("dense", 0.0), ("quant8", 1e-5)])
+def test_wire_kill_and_restore_pins_the_combined_replay(tmp_path, wire_codec, tol):
+    """THE acceptance pin: kill the server after 5 landings (kill -9
+    model: no BYE, sockets slammed, WAL torn wherever it was), restore
+    from snapshot+WAL on the same port while the workers ride their
+    backoff loops, finish the run — and the COMBINED schedule replays to
+    the same global (bit-for-bit dense, 1e-5 quant8, with the replay
+    cross-checking every dispatch version / drop / flush on the way)."""
+    meta = _meta(n_clients=4, buffer_size=2, max_staleness=2,
+                 wire_codec=wire_codec)
+    res = harness.wire_run(
+        meta, 5,
+        worker_groups=[{"client_ids": [0, 1, 2, 3], "extra": _PATIENT}],
+        deadline_s=150.0,
+        durable_root=tmp_path / "run",
+        snapshot_every=2,
+        fault_plan="kill@5",
+    )
+    assert not res.stats.deadline_hit, (res.stats, res.worker_stderr)
+    assert res.recovered and res.stats.crashed
+    assert res.stats.flushes == 5
+    assert res.stats.recoveries == 1
+    assert res.stats.faults_injected == 1  # the kill itself, counted
+    assert res.stats.snapshots >= 1 and res.stats.wal_events > 0
+    assert res.pre_crash_stats is not None and res.pre_crash_stats.landed == 5
+    eng = rp.replay(res.schedule)
+    got = np.asarray(eng.global_packed_row(), np.float32)
+    if tol == 0.0:
+        np.testing.assert_array_equal(got, res.global_row)
+    else:
+        np.testing.assert_allclose(got, res.global_row, atol=tol)
+    # the WAL-derived schedule spans the crash: flush count matches too
+    assert res.schedule.n_flushes == 5
+
+
+def test_wire_corrupt_frame_storm_is_counted_and_survived():
+    # two corrupted uploads: the server's CRC firewall withholds each,
+    # poisons the connection, and the worker reconnects + retrains —
+    # damage is COUNTED (crc_errors) and the run still converges + replays
+    meta = _meta(n_clients=2, buffer_size=2, max_staleness=2)
+    res = harness.wire_run(
+        meta, 3,
+        worker_groups=[{"client_ids": [0, 1], "extra": _PATIENT}],
+        deadline_s=150.0,
+        fault_plan="corrupt@2:update;corrupt@4:update",
+        fault_seed=11,
+    )
+    assert not res.stats.deadline_hit, (res.stats, res.worker_stderr)
+    assert res.stats.flushes == 3
+    assert res.stats.crc_errors == 2
+    assert res.stats.reconnects >= 1  # poisoned connections were re-made
+    _pin_replay(res)
+
+
+def test_wire_dropped_dispatch_covered_by_dispatch_timeout():
+    # with ONE client there is no flush-boundary redispatch to another
+    # client that could paper over the loss: when the post-flush dispatch
+    # evaporates, the lone worker MUST hit --dispatch-timeout, reconnect,
+    # and get redispatched via the fresh HELLO — the black-hole coverage
+    meta = _meta(n_clients=1, buffer_size=1, max_staleness=2)
+    res = harness.wire_run(
+        meta, 3,
+        worker_groups=[{
+            "client_ids": [0],
+            "extra": _PATIENT + ["--dispatch-timeout", "3.0"],
+        }],
+        deadline_s=150.0,
+        fault_plan="server.drop@2:dispatch",
+    )
+    assert not res.stats.deadline_hit, (res.stats, res.worker_stderr)
+    assert res.stats.flushes == 3
+    assert res.stats.faults_injected == 1  # the drop fired and was counted
+    assert res.stats.reconnects >= 1  # the timeout path re-made the session
+    _pin_replay(res)
+
+
+def test_wire_duplicated_update_dies_at_the_version_echo_gate():
+    # dup@1:update sends the first upload twice: the first copy lands and
+    # redispatches, so the duplicate echoes a version the engine already
+    # moved past — refused as superseded, never landed twice
+    meta = _meta(n_clients=2, buffer_size=1, max_staleness=2)
+    res = harness.wire_run(
+        meta, 3,
+        worker_groups=[{"client_ids": [0, 1], "extra": _PATIENT}],
+        deadline_s=150.0,
+        fault_plan="dup@1:update",
+    )
+    assert not res.stats.deadline_hit, (res.stats, res.worker_stderr)
+    assert res.stats.flushes == 3
+    assert res.stats.superseded >= 1
+    lands = [e for e in res.schedule.events if e.kind == "land"]
+    seqs = [(e.client, e.seq) for e in lands]
+    assert len(seqs) == len(set(seqs))  # no (client, seq) landed twice
+    _pin_replay(res)
+
+
+def test_wire_severed_connection_reconnects_and_completes():
+    meta = _meta(n_clients=2, buffer_size=2, max_staleness=2)
+    res = harness.wire_run(
+        meta, 3,
+        worker_groups=[{"client_ids": [0, 1], "extra": _PATIENT}],
+        deadline_s=150.0,
+        fault_plan="sever@9000",  # mid-run, after the HELLOs + first bytes
+    )
+    assert not res.stats.deadline_hit, (res.stats, res.worker_stderr)
+    assert res.stats.flushes == 3
+    assert res.stats.reconnects >= 1
+    _pin_replay(res)
+
+
+def test_wire_kill_without_durable_raises_not_hangs():
+    # chaos without durability is an error the harness surfaces, never a
+    # silent hang: the workers' bounded backoff drains them afterwards
+    meta = _meta(n_clients=2, buffer_size=1)
+    with pytest.raises(ServerKilled):
+        harness.wire_run(
+            meta, 4,
+            worker_groups=[{
+                "client_ids": [0, 1],
+                "extra": ["--connect-retries", "2", "--backoff-base", "0.05"],
+            }],
+            deadline_s=150.0,
+            fault_plan="kill@2",
+        )
+
+
+def test_worker_process_exits_cleanly_when_server_never_binds(tmp_path):
+    # the backoff-under-refused-connect satellite: a worker pointed at a
+    # dead port retries its bounded schedule and exits 0 — no crash, no hang
+    meta = _meta(n_clients=1)
+    meta_path = tmp_path / "meta.json"
+    meta_path.write_text(json.dumps(meta))
+    p = harness.spawn_worker(
+        str(meta_path), "127.0.0.1", _free_port(), [0],
+        ["--connect-retries", "3", "--backoff-base", "0.01"],
+    )
+    _, err = p.communicate(timeout=120)
+    assert p.returncode == 0, err.decode()

@@ -86,14 +86,61 @@ def test_frame_roundtrip_survives_arbitrary_chunking():
 
 
 def test_frame_parser_rejects_corruption():
+    import zlib
+
     with pytest.raises(ValueError, match="frame length"):
         wire.FrameParser().feed(b"\x00\x00\x00\x00garbage")
-    bad_type = b"\x00\x00\x00\x01\x7f"
+    # an unknown type under a VALID crc is a protocol bug, not line noise
+    body = b"\x7f"
+    bad_type = b"\x00\x00\x00\x01" + zlib.crc32(body).to_bytes(4, "big") + body
     with pytest.raises(ValueError, match="frame type"):
         wire.FrameParser().feed(bad_type)
     with pytest.raises(ValueError, match="protocol version"):
         wire.parse_hello(wire.FrameParser().feed(
             wire.encode_frame(wire.HELLO, b"\x00\x00\x00\x01\x00\x63"))[0][1])
+
+
+def _example_frames(rng):
+    return {
+        "hello": wire.pack_hello(3),
+        "dispatch": wire.pack_dispatch(9, b"\x00" + rng.bytes(37)),
+        "update": wire.pack_update(1, 4, 9, 0.5, rng.bytes(113)),
+        "heartbeat": wire.pack_heartbeat(2),
+        "bye": wire.pack_bye(),
+    }
+
+
+@pytest.mark.parametrize("ftype", ["hello", "dispatch", "update", "heartbeat", "bye"])
+def test_crc_detects_every_corrupted_byte(ftype):
+    """DESIGN.md §16: flip ANY single byte of the CRC field or the body —
+    the frame must be withheld and counted, never parsed. (Length-prefix
+    bytes are framing, not CRC-covered — wire.py documents that a corrupted
+    length desynchronizes the stream and the connection is dropped.)"""
+    frame = _example_frames(np.random.default_rng(11))[ftype]
+    for pos in range(4, len(frame)):
+        for flip in (0x01, 0xFF):
+            bad = bytes(frame[:pos]) + bytes([frame[pos] ^ flip]) + bytes(frame[pos + 1:])
+            parser = wire.FrameParser()
+            frames = parser.feed(bad)
+            assert frames == [], f"byte {pos}^{flip:#x} parsed through the CRC"
+            assert parser.crc_errors == 1
+            assert parser.pending == 0  # the damaged frame's bytes are consumed
+
+
+def test_parser_resumes_after_withheld_frame():
+    """A corrupted frame mid-stream is skipped; everything after it still
+    parses — the length prefix keeps the stream framed even when the CRC
+    rejects the content."""
+    good1, bad, good2 = wire.pack_hello(1), wire.pack_heartbeat(2), wire.pack_bye()
+    bad = bytes(bad[:9]) + bytes([bad[9] ^ 0xFF]) + bytes(bad[10:])
+    parser = wire.FrameParser()
+    got = []
+    stream = good1 + bad + good2
+    for i in range(len(stream)):  # 1-byte drip straddling the damage
+        got.extend(parser.feed(stream[i:i + 1]))
+    assert [t for t, _ in got] == [wire.HELLO, wire.BYE]
+    assert parser.crc_errors == 1
+    assert wire.parse_hello(got[0][1]) == 1
 
 
 # -------------------------------- codec --------------------------------------
