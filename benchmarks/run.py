@@ -23,6 +23,11 @@ Prints ``name,value,derived`` CSV. Modules:
   pareto_bench     — communication-frontier Pareto sweep (DESIGN.md §15):
                      loss vs uplink bytes for dense/quant8/quant4/topk_ef/
                      topk_ef+quant4/secure-int4
+  serve_bench      — serving plane (DESIGN.md §17): served QPS + p50/p99 at
+                     batch occupancy 1/4/8 (batched-8 must beat sequential)
+                     and the hot-swap-under-load row (zero dropped requests,
+                     post-swap responses carry the new round version);
+                     writes BENCH_serve_rows.csv
   roofline_table   — per (arch x shape x mesh) roofline from the dry-run
 
 ``--smoke`` runs the cheap analytic tables, a 1-iteration flat-round sweep,
@@ -50,7 +55,7 @@ def main() -> None:
                     help="fast CI subset: analytic tables + tiny participation sweep")
     args = ap.parse_args()
 
-    from benchmarks import async_bench, bandwidth_model, convergence, kernel_bench, pareto_bench, roofline_table, scale_bench, upload_time, wire_bench
+    from benchmarks import async_bench, bandwidth_model, convergence, kernel_bench, pareto_bench, roofline_table, scale_bench, serve_bench, upload_time, wire_bench
 
     if args.smoke:
         modules = [
@@ -62,6 +67,7 @@ def main() -> None:
             ("client_scaling", scale_bench.smoke_rows),
             ("wire_bench", wire_bench.rows),
             ("pareto_smoke", pareto_bench.smoke_rows),
+            ("serve_bench", serve_bench.smoke_rows),
         ]
     else:
         modules = [
@@ -78,6 +84,7 @@ def main() -> None:
             ("client_scaling", scale_bench.full_rows),
             ("wire_bench", wire_bench.rows),
             ("pareto_bench", pareto_bench.rows),
+            ("serve_bench", serve_bench.rows),
             ("roofline_table", roofline_table.rows),
         ]
     failed = 0

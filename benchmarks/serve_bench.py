@@ -1,0 +1,220 @@
+"""Serving-plane benchmark rows (DESIGN.md §17).
+
+Two tables, written to BENCH_serve_rows.csv for the CI artifact:
+
+  serve/qps_occ{1,4,8}        — served QPS + p50/p99 request latency at
+                                batch occupancy 1/4/8: the same total
+                                request count driven by 1/4/8 concurrent
+                                consumers through ONE InferenceService.
+                                Every batch runs the same fixed-slot jitted
+                                program, so per-batch cost is flat and QPS
+                                should scale with occupancy — the guard
+                                asserts batched-8 beats sequential
+                                single-request serving (``rows()`` FAILS on
+                                regression, so the CI bench-smoke step
+                                gates it, not a dashboard).
+  serve/hotswap_*             — hot swap under load: a publisher thread
+                                lands new model versions mid-traffic while
+                                4 consumers stream requests. Asserts ZERO
+                                dropped requests (every INFER answered),
+                                that responses span both the pre-swap and
+                                post-swap versions, and that the last
+                                response carries the final published
+                                version — the ModelSlot swap protocol's
+                                acceptance row.
+
+Cheap enough for the ``--smoke`` subset: tiny fedyolov3 arch at 32px, one
+jit compile, a few hundred socket round-trips.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import rounds as R
+from repro.core import serving
+from repro.data import synthetic
+from repro.models import params as P
+from repro.models import yolov3
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+IMG_SIZE = 32
+TOTAL_REQUESTS = 32  # per occupancy point (split across the consumers)
+SWAP_PUBLISHES = 4  # hot-swap row: versions published mid-traffic
+
+
+def _setup(serve_batch: int = 8):
+    cfg = get_arch("fedyolov3").reduced()
+    fed = R.FedConfig(n_clients=4, serve_batch=serve_batch)
+    params = P.init_params(yolov3.template(cfg), jax.random.key(0), jnp.float32)
+    rng = np.random.default_rng(7)
+    imgs, _ = synthetic.scene_images(rng, TOTAL_REQUESTS, IMG_SIZE, cfg.vocab_size)
+    return cfg, fed, params, imgs
+
+
+def _drive(svc, imgs, n_consumers: int, per_consumer: int):
+    """n_consumers concurrent blocking-infer loops -> (qps, p50_ms, p99_ms,
+    versions seen in response order)."""
+    lats: list[float] = []
+    versions: list[int] = []
+    lock = threading.Lock()
+
+    def consumer(ci: int):
+        with serving.InferenceClient(svc.host, svc.port) as c:
+            got = []
+            for i in range(per_consumer):
+                t0 = time.perf_counter()
+                res = c.infer(imgs[(ci * per_consumer + i) % len(imgs)])
+                got.append((time.perf_counter() - t0, res.version))
+        with lock:
+            for dt, v in got:
+                lats.append(dt)
+                versions.append(v)
+
+    threads = [threading.Thread(target=consumer, args=(ci,)) for ci in range(n_consumers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    total = time.perf_counter() - t0
+    lats.sort()
+    n = len(lats)
+    return (
+        n / total,
+        1e3 * lats[n // 2],
+        1e3 * lats[min(n - 1, int(n * 0.99))],
+        versions,
+    )
+
+
+def occupancy_rows():
+    cfg, fed, params, imgs = _setup()
+    slot = serving.ModelSlot()
+    slot.publish(1, params)
+    svc = serving.InferenceService(cfg, fed, slot, img_size=IMG_SIZE).start()
+    try:
+        with serving.InferenceClient(svc.host, svc.port) as warm:
+            warm.infer(imgs[0])  # pay the jit compile outside the timings
+        out, qps_by_occ = [], {}
+        for occ in (1, 4, 8):
+            qps, p50, p99, _ = _drive(svc, imgs, occ, TOTAL_REQUESTS // occ)
+            qps_by_occ[occ] = qps
+            out.append((
+                f"serve/qps_occ{occ}", round(qps, 2),
+                f"p50_ms={p50:.2f};p99_ms={p99:.2f};"
+                f"requests={TOTAL_REQUESTS};batch={fed.serve_batch}",
+            ))
+        assert svc.stats.in_flight == 0, (
+            f"{svc.stats.in_flight} requests accepted but never answered"
+        )
+    finally:
+        svc.stop()
+    # the guard: 8 concurrent consumers through the fixed-slot batch must
+    # beat the same requests served one at a time — if batching buys
+    # nothing, the whole serving design regressed to sequential decode
+    speedup = qps_by_occ[8] / qps_by_occ[1]
+    assert speedup > 1.0, (
+        f"batched-8 serving ({qps_by_occ[8]:.1f} QPS) does not beat "
+        f"sequential single-request serving ({qps_by_occ[1]:.1f} QPS)"
+    )
+    out.append(("serve/batch8_vs_seq_speedup", round(speedup, 2),
+                f"guard>1.0;avg_occupancy={svc.stats.avg_occupancy:.2f}"))
+    return out
+
+
+def hotswap_rows():
+    """Hot swap under load: zero dropped requests, post-swap responses
+    carry the new round version."""
+    cfg, fed, params, imgs = _setup()
+    slot = serving.ModelSlot()
+    slot.publish(1, params)
+    svc = serving.InferenceService(cfg, fed, slot, img_size=IMG_SIZE).start()
+    stop_pub = threading.Event()
+    published = [1]
+
+    # publish thresholds: a new version lands each time another 1/(K+1) of
+    # the traffic has been served, so every swap happens with requests in
+    # flight AND the final version still has a tail of traffic to serve
+    thresholds = [
+        TOTAL_REQUESTS * (i + 1) // (SWAP_PUBLISHES + 1)
+        for i in range(SWAP_PUBLISHES)
+    ]
+
+    def publisher():
+        # a stand-in for the training loop landing rounds: republish the
+        # model at successive versions while traffic is in flight
+        for i, at in enumerate(thresholds):
+            while not stop_pub.is_set() and svc.stats.results < at:
+                time.sleep(0.0005)
+            if stop_pub.is_set():
+                return
+            slot.publish(2 + i, params)
+            published.append(2 + i)
+
+    try:
+        with serving.InferenceClient(svc.host, svc.port) as warm:
+            warm.infer(imgs[0])
+        pub = threading.Thread(target=publisher)
+        pub.start()
+        qps, p50, p99, versions = _drive(svc, imgs, 4, TOTAL_REQUESTS // 4)
+        stop_pub.set()
+        pub.join()
+        # drain check: every accepted INFER was answered — a swap can never
+        # drop a request because no lock spans the jit and the batcher
+        # snapshots the slot per batch
+        dropped = svc.stats.in_flight
+        assert dropped == 0, f"{dropped} requests dropped across the hot swap"
+        assert len(versions) == TOTAL_REQUESTS, (len(versions), TOTAL_REQUESTS)
+        assert max(versions) == max(published), (
+            f"no response carried the final published version "
+            f"{max(published)} (saw {sorted(set(versions))})"
+        )
+        assert min(versions) < max(versions), (
+            f"traffic never observed a swap (all responses v{versions[0]}; "
+            f"published {published})"
+        )
+    finally:
+        stop_pub.set()
+        svc.stop()
+    return [
+        ("serve/hotswap_dropped", dropped,
+         f"guard=0;requests={TOTAL_REQUESTS};swaps={slot.swaps}"),
+        ("serve/hotswap_qps", round(qps, 2),
+         f"p50_ms={p50:.2f};p99_ms={p99:.2f};publishes={len(published)}"),
+        ("serve/hotswap_versions_served", len(set(versions)),
+         f"first=v{min(versions)};final=v{max(versions)};"
+         f"published_final=v{max(published)}"),
+    ]
+
+
+def write_csv(rows, path: str = None) -> None:
+    path = path or os.path.join(_ROOT, "BENCH_serve_rows.csv")
+    with open(path, "w") as f:
+        f.write("name,value,extra\n")
+        for name, val, extra in rows:
+            f.write(f"{name},{val},{extra}\n")
+
+
+def rows():
+    all_rows = occupancy_rows() + hotswap_rows()
+    write_csv(all_rows)
+    return all_rows
+
+
+# the full and smoke subsets run the same table: the serving plane is cheap
+# (tiny arch, one compile) and the guards are exactly what CI must gate
+smoke_rows = rows
+
+
+if __name__ == "__main__":
+    for name, val, extra in rows():
+        print(f"{name},{val},{extra}")

@@ -77,9 +77,16 @@ def decode_predictions(
         top_scores = jnp.pad(top_scores, ((0, 0), (0, pad)), constant_values=-1.0)
         top_labels = jnp.pad(top_labels, ((0, 0), (0, pad)))
     # |x1-x2| + (w1+w2)/2 <= 3 * max|coord|, so this stride strictly
-    # separates classes for any decoded box
-    stride = 1.0 + 3.0 * jnp.max(jnp.abs(top_boxes))
-    shifted = top_boxes.at[..., 0].add(top_labels.astype(jnp.float32) * stride)
+    # separates classes for any decoded box. Per IMAGE, not per batch: with
+    # a batch-wide max, image i's NMS arithmetic would depend on the other
+    # images in the batch, and the serving plane's padded-batch pin (a
+    # request's detections are bit-identical at any batch occupancy,
+    # DESIGN.md §17) needs every slot's decode to be a function of that
+    # slot alone.
+    stride = 1.0 + 3.0 * jnp.max(jnp.abs(top_boxes), axis=(1, 2))
+    shifted = top_boxes.at[..., 0].add(
+        top_labels.astype(jnp.float32) * stride[:, None]
+    )
     keep = ops.nms(
         shifted, top_scores, iou_thresh=nms_iou, score_thresh=score_thresh, interpret=interpret
     )

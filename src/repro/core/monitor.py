@@ -128,6 +128,30 @@ def render_wire(task_id: str, history, stats, n_clients: int, liveness_log=()) -
     return "\n".join(lines)
 
 
+def render_serving(task_id: str, status: dict) -> str:
+    """The serving-plane lines (DESIGN.md §17). ``status`` is a
+    `serving.model_status` dict — the SAME evaluation the service answers
+    STATUS frames with (one evaluator, two callers), so this view can
+    never disagree with what the wire reports."""
+    tier = status["tier"]
+    flag = {"fresh": "", "soft_stale": "   WARN stale", "hard_stale": "   DEGRADED"}[tier]
+    lines = [
+        f"[{task_id}] serving round v{status['version']}"
+        f" (latest landed v{status['latest_version']})   {tier}{flag}",
+        f"  behind   {status['rounds_behind']} rounds"
+        f"   {status['seconds_behind']:.1f}s"
+        f"   swaps {status['swaps']}",
+    ]
+    if "requests" in status:
+        lines.append(
+            f"  traffic  {status['requests']} requests   {status['results']} results"
+            f"   {status['batches']} batches"
+            f"   occupancy {status['avg_occupancy']:.2f}"
+            f"   in flight {status['in_flight']}"
+        )
+    return "\n".join(lines)
+
+
 def export_json(task_id: str, history, n_clients: int, eval_history=None, per_client_cap: int = 16) -> str:
     """JSON dashboard feed. Eval rows carry the full per-client mAP vector
     only while ``n_clients <= per_client_cap``; above it each row exports

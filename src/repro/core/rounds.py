@@ -105,6 +105,14 @@ class FedConfig:
     queue_cap: int = 0  # socket: bounded landing-queue depth (0 -> 2 * n_clients)
     heartbeat_s: float = 0.2  # socket: worker heartbeat period (wall seconds)
     heartbeat_timeout_s: float = 2.0  # socket: silence beyond this marks a client dead
+    # --- serving plane (DESIGN.md §17) ---
+    serve_batch: int = 8  # inference batch slots of the jitted decode+NMS program
+    serve_max_wait_s: float = 0.004  # batcher linger: how long a formed batch waits to fill
+    serve_max_detections: int = 16  # NMS output slots per served image
+    serve_soft_stale_rounds: int = 2  # freshness: rounds-behind beyond this -> soft_stale
+    serve_hard_stale_rounds: int = 8  # freshness: rounds-behind beyond this -> hard_stale
+    serve_soft_stale_s: float = 60.0  # freshness: seconds-behind beyond this -> soft_stale
+    serve_hard_stale_s: float = 600.0  # freshness: seconds-behind beyond this -> hard_stale
 
 
 def loss_for(cfg: ArchConfig) -> Callable:

@@ -28,6 +28,20 @@ Frame types (client -> server unless noted):
     HEARTBEAT  client_id u32 — liveness only, never touches the engine.
     BYE        (server -> client) empty — orderly shutdown.
 
+Serving-plane frames (DESIGN.md §17; client here = an inference consumer,
+not a federated trainer):
+
+    INFER      request_id u32, height u16, width u16, raw little-endian
+               f32 image bytes (H*W*3) — one detection request.
+    RESULT     (server -> client) request_id u32 (echo), round_version u64
+               (the landed training round the serving model was published
+               from), freshness tier u8 (serving.TIER_CODES), n u16, then
+               n detections of (label i32, score f32, box 4xf32 center
+               format) — only valid (NMS-kept) slots ship.
+    STATUS     empty payload = request; response = a UTF-8 JSON blob, the
+               `serving.model_status` evaluation (version, rounds/seconds
+               behind, freshness tier, occupancy counters).
+
 The CRC is the corruption firewall (DESIGN.md §16): a flipped byte anywhere
 in the body is *detected* — the parser counts it in ``crc_errors`` and
 withholds the frame — instead of landing corrupt model bytes into the
@@ -48,15 +62,18 @@ from __future__ import annotations
 import struct
 import zlib
 
-PROTOCOL_VERSION = 2  # v2: CRC32 field between the length prefix and the body
+PROTOCOL_VERSION = 3  # v3: serving frames (INFER/RESULT/STATUS); v2: CRC32
 
 HELLO = 1
 DISPATCH = 2
 UPDATE = 3
 HEARTBEAT = 4
 BYE = 5
+INFER = 6
+RESULT = 7
+STATUS = 8
 
-FRAME_TYPES = (HELLO, DISPATCH, UPDATE, HEARTBEAT, BYE)
+FRAME_TYPES = (HELLO, DISPATCH, UPDATE, HEARTBEAT, BYE, INFER, RESULT, STATUS)
 
 _LEN = struct.Struct("!I")
 _CRC = struct.Struct("!I")
@@ -64,6 +81,9 @@ _HELLO = struct.Struct("!IH")
 _DISPATCH = struct.Struct("!Q")
 _UPDATE = struct.Struct("!IIQf")
 _HEARTBEAT = struct.Struct("!I")
+_INFER = struct.Struct("!IHH")
+_RESULT = struct.Struct("!IQBH")
+_DET = struct.Struct("!ifffff")  # label, score, box (x, y, w, h)
 
 HEADER_BYTES = _LEN.size + _CRC.size  # per-frame framing overhead before the body
 
@@ -174,3 +194,83 @@ def parse_heartbeat(payload: bytes) -> int:
 
 def pack_bye() -> bytes:
     return encode_frame(BYE)
+
+
+# -- serving-plane payloads (DESIGN.md §17) ----------------------------------
+
+def pack_infer(request_id: int, image) -> bytes:
+    """INFER payload: one (H, W, 3) f32 image as raw little-endian bytes.
+    NumPy-only on purpose — inference consumers need the codec, not JAX."""
+    import numpy as np
+
+    img = np.ascontiguousarray(np.asarray(image, np.float32))
+    if img.ndim != 3 or img.shape[2] != 3:
+        raise ValueError(f"INFER image must be (H, W, 3), got {img.shape}")
+    h, w = img.shape[:2]
+    if h > 0xFFFF or w > 0xFFFF:
+        raise ValueError(f"image {h}x{w} exceeds the u16 frame dimensions")
+    return encode_frame(
+        INFER, _INFER.pack(request_id, h, w) + img.astype("<f4").tobytes()
+    )
+
+
+def parse_infer(payload: bytes):
+    """-> (request_id, image (H, W, 3) f32)."""
+    import numpy as np
+
+    request_id, h, w = _INFER.unpack_from(payload, 0)
+    body = payload[_INFER.size:]
+    if len(body) != h * w * 3 * 4:
+        raise ValueError(
+            f"INFER body of {len(body)} bytes != {h}x{w}x3 f32 image"
+        )
+    img = np.frombuffer(body, "<f4").astype(np.float32).reshape(h, w, 3)
+    return request_id, img
+
+
+def pack_result(request_id: int, version: int, tier_code: int,
+                detections) -> bytes:
+    """RESULT payload: echo + round version + freshness tier + the kept
+    detections, each a (label, score, (x, y, w, h)) tuple."""
+    dets = list(detections)
+    if len(dets) > 0xFFFF:
+        raise ValueError(f"{len(dets)} detections exceed the u16 count field")
+    body = _RESULT.pack(request_id, version, tier_code, len(dets))
+    for label, score, box in dets:
+        body += _DET.pack(int(label), float(score), *(float(v) for v in box))
+    return encode_frame(RESULT, body)
+
+
+def parse_result(payload: bytes):
+    """-> (request_id, version, tier_code, [(label, score, (x,y,w,h)), ...])."""
+    request_id, version, tier_code, n = _RESULT.unpack_from(payload, 0)
+    off = _RESULT.size
+    if len(payload) != off + n * _DET.size:
+        raise ValueError(
+            f"RESULT body of {len(payload) - off} bytes != {n} detections"
+        )
+    dets = []
+    for _ in range(n):
+        label, score, x, y, w, h = _DET.unpack_from(payload, off)
+        off += _DET.size
+        dets.append((label, score, (x, y, w, h)))
+    return request_id, version, tier_code, dets
+
+
+def pack_status_request() -> bytes:
+    return encode_frame(STATUS)
+
+
+def pack_status(status: dict) -> bytes:
+    import json
+
+    return encode_frame(STATUS, json.dumps(status).encode("utf-8"))
+
+
+def parse_status(payload: bytes) -> dict | None:
+    """None for the empty request form, the status dict for a response."""
+    import json
+
+    if not payload:
+        return None
+    return json.loads(payload.decode("utf-8"))
